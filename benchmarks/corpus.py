@@ -1,0 +1,157 @@
+"""Synthetic container-image corpus reproducing the paper's Table I
+version-evolution statistics (Docker Hub is unreachable offline).
+
+15 applications × 8–19 versions; each image is a list of layers (byte
+blobs).  Version evolution mimics real image churn:
+
+  * PATCH versions edit a few spots in a few layers (config bumps,
+    recompiled binaries) and occasionally insert/delete bytes — the
+    insertions/deletions produce the *chunk-shift* events the paper studies;
+  * MINOR versions additionally add/replace a whole layer (dependency
+    upgrade);
+  * content is zipf-distributed symbol text over per-app dictionaries, so
+    gzip achieves realistic 2–3.5× (random bytes would be incompressible
+    and kill the compression baseline the paper compares against).
+
+Sizes are scaled down ~1000× from the paper (GBs → MBs) so the full
+benchmark suite runs in minutes on one CPU; every *ratio* the paper reports
+is scale-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# name, n_versions, n_layers, total_scaled_KB  (Table I, scaled)
+APPS: List[Tuple[str, int, int, int]] = [
+    ("golang", 8, 5, 2500),
+    ("node", 17, 3, 1300),
+    ("tomcat", 17, 6, 3200),
+    ("httpd", 17, 5, 2000),
+    ("python", 18, 5, 1700),
+    ("tensorflow", 10, 12, 8000),
+    ("r-base", 9, 8, 6000),
+    ("redis", 13, 6, 830),
+    ("rails", 18, 9, 6000),
+    ("nginx", 19, 3, 1100),
+    ("postgres", 19, 9, 1100),
+    ("django", 8, 8, 4200),
+    ("pytorch", 10, 8, 9000),
+    ("mysql", 16, 9, 7400),
+    ("deepmind", 19, 9, 10000),
+]
+
+# per-app version-churn profile: (edits per patch, p_minor, churn_scale)
+# high-similarity apps (deepmind, r-base, rails: dedup ratios .92–.95 in
+# Table II) get tiny churn; low-similarity (golang: 0.34) get heavy churn.
+CHURN: Dict[str, Tuple[int, float, float]] = {
+    "golang": (12, 0.5, 0.30), "node": (6, 0.3, 0.08),
+    "tomcat": (5, 0.25, 0.06), "httpd": (6, 0.3, 0.09),
+    "python": (8, 0.35, 0.15), "tensorflow": (8, 0.3, 0.12),
+    "r-base": (3, 0.1, 0.015), "redis": (5, 0.3, 0.08),
+    "rails": (3, 0.15, 0.02), "nginx": (5, 0.25, 0.06),
+    "postgres": (6, 0.3, 0.09), "django": (4, 0.2, 0.04),
+    "pytorch": (5, 0.2, 0.05), "mysql": (6, 0.25, 0.06),
+    "deepmind": (2, 0.1, 0.012),
+}
+
+
+def _text_block(rng: np.random.Generator, n: int, dictionary: np.ndarray
+                ) -> bytes:
+    """Container-layer-like bytes: zipf-weighted dictionary words (text,
+    scripts, ELF symbol tables) interleaved with ~20% incompressible spans
+    (compiled code, compressed assets) — calibrated so gzip lands in the
+    paper's 2–3.5× range."""
+    words = dictionary[rng.zipf(1.35, size=max(8, n // 12)) % len(dictionary)]
+    blob = bytearray(b" ".join(w.tobytes() for w in words)[:n])
+    if n >= 256:
+        bin_frac = rng.uniform(0.12, 0.32)
+        n_spans = max(1, int(n * bin_frac / 512))
+        for _ in range(n_spans):
+            pos = int(rng.integers(0, max(1, n - 512)))
+            blob[pos:pos + 512] = rng.bytes(min(512, n - pos))
+    return bytes(blob[:n])
+
+
+@functools.lru_cache(maxsize=None)
+def _dictionary(seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(97, 123, size=(512, 11), dtype=np.uint8)  # a-z words
+
+
+@dataclasses.dataclass
+class ImageVersion:
+    app: str
+    tag: str
+    layers: List[bytes]
+
+    @property
+    def size(self) -> int:
+        return sum(len(l) for l in self.layers)
+
+    def tar(self) -> bytes:
+        """The flattened byte stream (stand-in for the uncompressed tar)."""
+        return b"".join(self.layers)
+
+
+def generate_app(app: str, n_versions: int, n_layers: int, total_kb: int,
+                 seed: int) -> List[ImageVersion]:
+    rng = np.random.default_rng(seed)
+    dictionary = _dictionary(seed % 7)
+    edits, p_minor, churn = CHURN[app]
+    layer_sizes = rng.dirichlet(np.ones(n_layers) * 2.0) * total_kb * 1024
+    layers = [bytearray(_text_block(rng, max(2048, int(s)), dictionary))
+              for s in layer_sizes]
+    versions = [ImageVersion(app, "v0", [bytes(l) for l in layers])]
+
+    for v in range(1, n_versions):
+        minor = rng.random() < p_minor
+        n_edit_layers = max(1, int(len(layers) * (0.5 if minor else 0.25)))
+        for li in rng.choice(len(layers), size=n_edit_layers, replace=False):
+            layer = layers[li]
+            n_edits = max(1, int(edits * (2 if minor else 1)))
+            for _ in range(n_edits):
+                kind = rng.random()
+                pos = int(rng.integers(0, max(1, len(layer) - 64)))
+                size = int(rng.integers(16, max(32, int(len(layer) * churn / edits))))
+                patch = _text_block(rng, size, dictionary)
+                if kind < 0.6:                     # in-place modify
+                    layer[pos:pos + size] = patch[:min(size, len(layer) - pos)]
+                elif kind < 0.85:                  # insert (chunk shift!)
+                    layer[pos:pos] = patch
+                else:                              # delete (chunk shift!)
+                    del layer[pos:pos + size]
+        if minor and rng.random() < 0.7:           # add/replace a layer
+            size = int(np.mean([len(l) for l in layers]) * rng.uniform(0.3, 1.0))
+            newl = bytearray(_text_block(rng, size, dictionary))
+            if rng.random() < 0.5 and len(layers) > 2:
+                layers[int(rng.integers(0, len(layers)))] = newl
+            else:
+                layers.append(newl)
+        versions.append(ImageVersion(app, f"v{v}", [bytes(l) for l in layers]))
+    return versions
+
+
+@functools.lru_cache(maxsize=1)
+def corpus(scale: float = 1.0) -> Dict[str, List[ImageVersion]]:
+    """The full 15-app corpus (cached).  ``scale`` shrinks sizes further."""
+    out = {}
+    for i, (app, n_versions, n_layers, kb) in enumerate(APPS):
+        out[app] = generate_app(app, n_versions, n_layers,
+                                max(64, int(kb * scale)), seed=1000 + i)
+    return out
+
+
+def corpus_stats() -> Dict[str, Dict]:
+    c = corpus()
+    return {
+        app: {
+            "versions": len(vs),
+            "layers": np.mean([len(v.layers) for v in vs]),
+            "total_mb": sum(v.size for v in vs) / 2**20,
+        } for app, vs in c.items()
+    }

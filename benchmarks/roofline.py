@@ -1,0 +1,49 @@
+"""§Roofline aggregation: reads the dry-run JSON records and emits the
+per-(arch × shape × mesh) three-term roofline table for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Report
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(tag: str = "baseline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            r = json.load(open(f))
+        except (json.JSONDecodeError, OSError):   # mid-write / partial file
+            continue
+        if r.get("tag", "baseline") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(tag: str = "baseline") -> Report:
+    rep = Report(f"roofline[{tag}]")
+    for r in load(tag):
+        if r["status"] != "ok":
+            rep.add(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                    status="FAIL", compute_ms=0, memory_ms=0, coll_ms=0,
+                    dominant="-", hbm_gib=0, mfu_bound=0, useful_ratio=0)
+            continue
+        ro = r["roofline"]
+        rep.add(arch=r["arch"], shape=r["shape"], mesh=r["mesh"], status="ok",
+                compute_ms=ro["compute_s"] * 1e3,
+                memory_ms=ro["memory_s"] * 1e3,
+                coll_ms=ro["collective_s"] * 1e3,
+                dominant=ro["dominant"],
+                hbm_gib=r["memory"]["peak_bytes"] / 2**30,
+                mfu_bound=ro["mfu_bound"],
+                useful_ratio=ro["useful_flops_ratio"])
+    return rep
+
+
+if __name__ == "__main__":
+    import sys
+    run(sys.argv[1] if len(sys.argv) > 1 else "baseline").print_csv()

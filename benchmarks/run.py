@@ -1,0 +1,41 @@
+"""Benchmark driver: one benchmark per paper table/figure + framework-native
+workloads.  ``PYTHONPATH=src python -m benchmarks.run [names...]``"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_build_time, bench_cdmt_ablation,
+                        bench_cdmt_vs_merkle, bench_checkpoint_delivery,
+                        bench_comparison_ratio, bench_dedup_ratio,
+                        bench_global_dedup, bench_kernels,
+                        bench_pushpull_io, roofline)
+
+ALL = {
+    "fig6_dedup_ratio": bench_dedup_ratio.run,
+    "fig7_global_dedup": bench_global_dedup.run,
+    "fig8_cdmt_vs_merkle": bench_cdmt_vs_merkle.run,
+    "fig9_comparison_ratio": bench_comparison_ratio.run,
+    "fig10_build_time": bench_build_time.run,
+    "table2_pushpull_io": bench_pushpull_io.run,
+    "cdmt_ablation": bench_cdmt_ablation.run,
+    "checkpoint_delivery": bench_checkpoint_delivery.run,
+    "kernels": bench_kernels.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    t00 = time.time()
+    for name in names:
+        t0 = time.time()
+        rep = ALL[name]()
+        rep.print_csv()
+        print(f"# {name} took {time.time() - t0:.1f}s\n")
+    print(f"# total {time.time() - t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: the paper's pipeline end-to-end in ~60 lines.
+
+Builds two versions of an artifact, CDC-chunks them, builds CDMT indexes,
+pushes/pulls through a registry, and prints the byte accounting that is the
+paper's point: only changed chunks move.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import cdc, hashing
+from repro.core.cdmt import CDMT, compare
+from repro.core.pushpull import Client
+from repro.core.registry import Registry
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # --- two versions of a 2 MiB artifact: v2 inserts bytes mid-stream ----
+    v1 = rng.bytes(2 * 2**20)
+    v2 = v1[:2**20] + b"<-- a new dependency -->" + v1[2**20:]
+
+    # --- 1. content-defined chunking --------------------------------------
+    chunks1 = list(cdc.chunk_bytes(v1))
+    chunks2 = list(cdc.chunk_bytes(v2))
+    print(f"v1: {len(chunks1)} chunks, v2: {len(chunks2)} chunks "
+          f"(avg {len(v1)//len(chunks1)} B)")
+
+    # --- 2. CDMT indexes ----------------------------------------------------
+    t1 = CDMT.build(hashing.fingerprint_many(chunks1))
+    t2 = CDMT.build(hashing.fingerprint_many(chunks2))
+    missing, comparisons = compare(t1, t2)
+    print(f"CDMT: height {t2.height()}, {t2.n_nodes()} nodes, "
+          f"index {t2.index_size_bytes()/1024:.1f} KiB")
+    print(f"Alg.2: {len(missing)} changed chunks found in "
+          f"{comparisons} comparisons (vs {len(chunks2)} flat lookups)")
+
+    # --- 3. push/pull through a registry ------------------------------------
+    registry = Registry()
+    dev = Client()
+    dev.commit("app", "v1", v1)
+    s1 = dev.push(registry, "app", "v1")
+    dev.commit("app", "v2", v2)
+    s2 = dev.push(registry, "app", "v2")
+    print(f"push v1 (new image):   {s1.total_wire_bytes/2**20:.2f} MiB")
+    print(f"push v2 (incremental): {s2.total_wire_bytes/2**20:.3f} MiB "
+          f"({s2.savings_vs_raw:.1%} saved, {s2.chunks_moved} chunks moved)")
+
+    prod = Client()
+    p1 = prod.pull(registry, "app", "v1")
+    p2 = prod.pull(registry, "app", "v2")
+    assert prod.materialize("app", "v2") == v2
+    print(f"pull v1 (fresh host):  {p1.total_wire_bytes/2**20:.2f} MiB")
+    print(f"pull v2 (upgrade):     {p2.total_wire_bytes/2**20:.3f} MiB "
+          f"({p2.savings_vs_raw:.1%} saved)")
+    print("reconstruction verified byte-for-byte ✓")
+
+
+if __name__ == "__main__":
+    main()

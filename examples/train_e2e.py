@@ -1,0 +1,67 @@
+"""End-to-end training driver: reduced olmo-1b (~1.5M params scaled; the
+same code path drives the full 1B+ configs on a real mesh) for a few
+hundred steps with CDMT-dedup checkpointing — loss goes down, checkpoints
+after the first move a fraction of the raw state bytes.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.checkpoint import CheckpointConfig
+from repro.configs.base import get_config
+from repro.core.registry import Registry
+from repro.data import DataConfig
+from repro.models.api import Model
+from repro.optim import AdamWConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.train_step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M-class architecture, reduced for CPU: same block structure
+    cfg = get_config("olmo-1b", reduced=True).replace(
+        n_layers=4, d_model=128, n_heads=8, n_kv_heads=8, d_ff=512)
+    model = Model(cfg)
+    print(f"model: {model.param_count():,} params (olmo family, reduced)")
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, n_hosts=1, seed=0)
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt=CheckpointConfig(lineage="train_e2e", n_groups=4,
+                              every_steps=max(25, args.steps // 8)),
+        train=TrainConfig(n_micro=2, adamw=AdamWConfig(lr=1e-3),
+                          warmup_steps=20, total_steps=args.steps))
+    tr = Trainer(model, data, tcfg, registry=Registry())
+
+    def log(step, m):
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"  step {step:4d}  loss {m['loss']:.4f}  "
+                  f"({m['step_s']*1e3:.0f} ms)")
+
+    tr.run(on_step=log)
+
+    first = sum(m["loss"] for m in tr.metrics_log[:10]) / 10
+    last = sum(m["loss"] for m in tr.metrics_log[-10:]) / 10
+    print(f"loss: first-10 avg {first:.3f} → last-10 avg {last:.3f}")
+    assert last < first, "loss must decrease"
+
+    print("\ncheckpoint wire accounting (CDMT dedup):")
+    for info in tr.ckpt.history:
+        print(f"  step {info.step:4d}: raw {info.raw_bytes/2**20:6.1f} MiB → "
+              f"wire {info.total_wire_bytes/2**20:6.2f} MiB "
+              f"({info.savings_vs_raw:.1%} saved)")
+
+
+if __name__ == "__main__":
+    main()

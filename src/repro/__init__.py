@@ -1,0 +1,2 @@
+"""repro: CDMT container/artifact delivery + multi-pod JAX LM framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+"""CDMT-deduplicated checkpointing (the paper's technique, framework-native)."""
+from repro.checkpoint.serializer import (serialize_tree, deserialize_tree,
+                                         tree_manifest)
+from repro.checkpoint.manager import (CheckpointConfig, DedupCheckpointManager,
+                                      CheckpointInfo)

@@ -1,0 +1,137 @@
+"""Pytree ↔ byte-stream serialization with a *stable, dedup-friendly* layout.
+
+Layout invariants that make consecutive checkpoints CDC-dedup well
+(DESIGN.md §2):
+
+* leaves are emitted in sorted key-path order — insertion of a new leaf
+  shifts the *stream*, but CDC chunking absorbs byte shifts by design (that
+  is the paper's point);
+* each leaf is raw little-endian array bytes, no compression (compression
+  would destroy cross-version chunk identity — the paper stores chunks
+  uncompressed for exactly this reason, Sec. I);
+* the manifest (shapes/dtypes/offsets) is a separate small JSON artifact, so
+  a byte-identical weight region dedups even when metadata changes.
+
+``shard_group`` splits the leaf list round-robin by size into G independent
+streams ("layers" in the paper's sense): each training host pushes its own
+group in parallel, and the registry dedups across groups and versions.
+
+**Byte-plane layout (beyond-paper optimization).**  Consecutive *training*
+checkpoints defeat flat-byte dedup: an AdamW step perturbs the low mantissa
+bits of nearly every float, so nearly every 4-byte group differs and CDC
+finds nothing.  But the SIGN/EXPONENT byte and the high-mantissa byte of
+most floats are unchanged by a ~1e-3 relative update.  ``byte_plane=True``
+transposes each leaf's bytes so that plane k of every float is contiguous
+(all byte-3s, then all byte-2s, …): the stable high planes become long
+byte-identical runs that CDC dedups across versions, while the churning low
+planes are isolated.  Same bytes, same size — just an order the paper's
+index can exploit.  Measured in benchmarks/bench_checkpoint_delivery.py.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_named(tree) -> List[Tuple[str, np.ndarray]]:
+    """(sorted-key-path, host ndarray) pairs for every leaf."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    items = [(_key_str(path), np.asarray(leaf)) for path, leaf in flat]
+    items.sort(key=lambda kv: kv[0])
+    return items
+
+
+def tree_manifest(tree) -> Dict[str, Any]:
+    """Shapes/dtypes manifest (JSON-serializable)."""
+    return {
+        name: {"shape": list(arr.shape), "dtype": arr.dtype.name}
+        for name, arr in flatten_named(tree)
+    }
+
+
+def _to_planes(arr: np.ndarray) -> bytes:
+    """Byte-plane transpose: all byte-(k) of each element contiguous."""
+    flat = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+    itemsize = arr.dtype.itemsize
+    if itemsize == 1 or arr.size == 0:
+        return flat.tobytes()
+    return flat.reshape(-1, itemsize).T.copy().tobytes()
+
+
+def _from_planes(raw: bytes, dtype: np.dtype, count: int) -> np.ndarray:
+    if dtype.itemsize == 1 or count == 0:
+        return np.frombuffer(raw, dtype=dtype, count=count)
+    planes = np.frombuffer(raw, dtype=np.uint8).reshape(dtype.itemsize, count)
+    return planes.T.copy().reshape(-1).view(dtype)
+
+
+def serialize_tree(tree, n_groups: int = 1, byte_plane: bool = False
+                   ) -> List[bytes]:
+    """Serialize a pytree into ``n_groups`` independent byte streams.
+
+    Group assignment is deterministic (leaf index round-robin weighted by
+    nothing — stable across versions as long as the tree structure is
+    stable; new leaves join groups at the end, shifting only their group).
+    """
+    items = flatten_named(tree)
+    groups: List[List[bytes]] = [[] for _ in range(n_groups)]
+    for i, (name, arr) in enumerate(items):
+        buf = _to_planes(arr) if byte_plane else arr.tobytes(order="C")
+        groups[i % n_groups].append(buf)
+    return [b"".join(g) for g in groups]
+
+
+def deserialize_tree(streams: List[bytes], manifest: Dict[str, Any],
+                     treedef_like, byte_plane: bool = False) -> Any:
+    """Rebuild a pytree from group streams + manifest.
+
+    ``treedef_like`` is any pytree with the same structure (e.g. the
+    abstract param tree) used to unflatten.
+    """
+    names = sorted(k for k in manifest.keys() if not k.startswith("__"))
+    byte_plane = byte_plane or manifest.get("__layout__") == "byte_plane"
+    n_groups = len(streams)
+    offsets = [0] * n_groups
+    by_name: Dict[str, np.ndarray] = {}
+    for i, name in enumerate(names):
+        g = i % n_groups
+        meta = manifest[name]
+        dtype = np.dtype(meta["dtype"])
+        count = int(np.prod(meta["shape"])) if meta["shape"] else 1
+        nbytes = count * dtype.itemsize
+        raw = streams[g][offsets[g]:offsets[g] + nbytes]
+        offsets[g] += nbytes
+        if byte_plane:
+            by_name[name] = _from_planes(raw, dtype, count).reshape(meta["shape"])
+        else:
+            by_name[name] = np.frombuffer(raw, dtype=dtype).reshape(meta["shape"])
+
+    flat = jax.tree_util.tree_flatten_with_path(treedef_like)
+    leaves = []
+    for path, _ in flat[0]:
+        leaves.append(by_name[_key_str(path)])
+    # tree_flatten_with_path returns leaves in treedef order — but our
+    # by_name lookup is by path, so ordering is already correct.
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def manifest_json(manifest: Dict[str, Any]) -> bytes:
+    return json.dumps(manifest, sort_keys=True).encode()

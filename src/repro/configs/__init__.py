@@ -1,0 +1,3 @@
+"""Architecture configs (one per assigned arch) + shape registry."""
+from repro.configs.base import (SHAPES, ModelConfig, ShapeSpec, get_config,
+                                list_archs)

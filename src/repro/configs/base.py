@@ -1,0 +1,157 @@
+"""Model/shape configuration system.
+
+One ``ModelConfig`` per assigned architecture (exact public-literature dims)
+plus a ``reduced()`` shrink for CPU smoke tests.  Shapes are the assigned
+input-shape set; ``applicable_shapes`` enforces the brief's skip rules
+(long_500k only for sub-quadratic archs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 → d_model // n_heads
+    # attention options
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"             # rmsnorm | nonparam_ln
+    mlp_kind: str = "swiglu"          # swiglu | gelu (GPT-BigCode 2-matrix)
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    attention_impl: str = "blockwise"  # blockwise | naive
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    # MLA (DeepSeek-V2)
+    use_mla: bool = False
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 4096        # tokens per GShard dispatch group
+    # Expert-FFN tensor parallelism over the DATA axis (shard_map explicit
+    # collectives).  ANALYZED AND REJECTED for high-expert-count MoE
+    # (EXPERIMENTS §Perf): with tokens data-sharded, the required
+    # all-to-all + activation reductions move MORE bytes per layer than the
+    # FSDP weight gather they replace (tokens-per-expert ≪ weights-per-
+    # expert at 160 experts).  Kept as an option for low-expert configs.
+    moe_ffn_tp: bool = False
+    # SSM / RWKV
+    d_inner: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_state: int = 64
+    conv_k: int = 4
+    ssm_segment: int = 256
+    rwkv_lora: int = 64
+    # WKV execution: "serial" (token scan, paper-faithful recurrence) or
+    # "chunked" (segmented matmul formulation — the TPU adaptation; §Perf)
+    wkv_impl: str = "serial"
+    wkv_chunk: int = 32
+    # Mamba2/SSD execution: "serial" token scan or "chunked" SSD blocks
+    ssm_impl: str = "serial"
+    ssd_chunk: int = 128
+    # hybrid
+    shared_attn_every: int = 6
+    # enc-dec
+    n_enc_layers: int = 0
+    # vlm
+    n_patches: int = 0
+    # numerics
+    compute_dtype: object = jnp.bfloat16
+    param_dtype: object = jnp.float32
+    opt_state_dtype: object = jnp.float32
+    grad_accum_dtype: object = jnp.float32
+    loss_chunk: int = 512
+    # training
+    remat: bool = True
+    train_n_micro: int = 4            # grad-accum microbatches for train_4k
+    # serving
+    decode_margin: int = 128          # extra cache slots beyond seq_len
+                                      # (128 keeps cache length divisible by
+                                      # the mesh axes for cache_seq sharding)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table vocab padded to a multiple of 128 so the vocab
+        axis shards over any mesh axis (92553 → 92672 etc.).  Logits over
+        padded columns are real (trained) params that no target indexes —
+        the standard MaxText-style treatment."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def applicable_shapes(self) -> List[str]:
+        out = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.family in ("rwkv", "hybrid"):
+            out.append("long_500k")   # sub-quadratic archs only (DESIGN §6)
+        return out
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Registry -------------------------------------------------------------------
+
+_REGISTRY: Dict[str, "ModelConfig"] = {}
+_REDUCED: Dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig, reduced: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    return (_REDUCED if reduced else _REGISTRY)[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY.keys())
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        olmo_1b, granite_20b, qwen2_72b, internlm2_20b, seamless_m4t_large_v2,
+        internvl2_2b, deepseek_v2_236b, olmoe_1b_7b, rwkv6_3b, zamba2_1p2b)

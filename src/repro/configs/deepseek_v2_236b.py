@@ -1,0 +1,28 @@
+"""DeepSeek-V2-236B [arXiv:2405.04434]: 60L, d=5120, 128H MLA
+(kv_lora=512, rope 64), MoE 2 shared + 160 routed top-6, expert ff 1536,
+vocab 102400."""
+import jax.numpy as jnp
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="deepseek-v2-236b", family="moe",
+        n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+        head_dim=128, d_ff=1536, vocab=102400,
+        use_mla=True, q_lora=1536, kv_lora=512,
+        qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+        n_experts=160, moe_top_k=6, n_shared_experts=2,
+        opt_state_dtype=jnp.bfloat16,   # 236B: keep optimizer in HBM budget
+        grad_accum_dtype=jnp.bfloat16,  # halve the accumulation buffer too
+        param_dtype=jnp.bfloat16,       # pure-bf16 2-D-sharded params (§Perf It.7)
+        train_n_micro=8,                # §Perf It.5: best memory/perf point
+    ),
+    reduced=ModelConfig(
+        name="deepseek-v2-236b", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=32, vocab=512,
+        use_mla=True, q_lora=32, kv_lora=16, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16, n_experts=8, moe_top_k=2, n_shared_experts=1,
+        loss_chunk=32, ssm_segment=16,
+    ),
+)

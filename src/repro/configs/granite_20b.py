@@ -1,0 +1,17 @@
+"""Granite-20B-Code [arXiv:2405.04324]: 52L, d=6144, 48H MQA (kv=1),
+ff 24576, vocab 49152 — llama-style architecture for code."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="granite-20b", family="dense",
+        n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab=49152,
+        mlp_kind="gelu",   # GPT-BigCode 2-matrix MLP (matches the 20B count)
+    ),
+    reduced=ModelConfig(
+        name="granite-20b", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+        d_ff=128, vocab=512, mlp_kind="gelu", loss_chunk=32, ssm_segment=16,
+    ),
+)

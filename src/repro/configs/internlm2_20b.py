@@ -1,0 +1,16 @@
+"""InternLM2-20B [arXiv:2403.17297]: 48L, d=6144, 48H GQA kv=8, ff 16384,
+vocab 92544."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="internlm2-20b", family="dense",
+        n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab=92544,
+    ),
+    reduced=ModelConfig(
+        name="internlm2-20b", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512, loss_chunk=32, ssm_segment=16,
+    ),
+)

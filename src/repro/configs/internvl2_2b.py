@@ -1,0 +1,17 @@
+"""InternVL2-2B [arXiv:2404.16821]: InternLM2-1.8B backbone, 24L, d=2048,
+16H GQA kv=8, ff 8192, vocab 92553.  InternViT frontend is a STUB:
+input_specs() provides precomputed patch embeddings."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="internvl2-2b", family="vlm",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+        d_ff=8192, vocab=92553, n_patches=256,
+    ),
+    reduced=ModelConfig(
+        name="internvl2-2b", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512, n_patches=8, loss_chunk=32, ssm_segment=16,
+    ),
+)

@@ -1,0 +1,17 @@
+"""OLMo-1B [arXiv:2402.00838]: 16L, d=2048, 16H (MHA), ff 8192, vocab 50304.
+Distinctive: non-parametric LayerNorm."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="olmo-1b", family="dense",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=8192, vocab=50304, norm="nonparam_ln",
+    ),
+    reduced=ModelConfig(
+        name="olmo-1b", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512, norm="nonparam_ln",
+        loss_chunk=32, ssm_segment=16,
+    ),
+)

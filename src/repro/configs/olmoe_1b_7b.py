@@ -1,0 +1,18 @@
+"""OLMoE-1B-7B [arXiv:2409.02060]: 16L, d=2048, 16H, MoE 64 experts top-8,
+expert ff 1024, vocab 50304."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1024, vocab=50304,
+        n_experts=64, moe_top_k=8, n_shared_experts=0,
+    ),
+    reduced=ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=32, vocab=512, n_experts=8, moe_top_k=2, n_shared_experts=0,
+        loss_chunk=32, ssm_segment=16,
+    ),
+)

@@ -1,0 +1,18 @@
+"""Qwen2-72B [arXiv:2407.10671]: 80L, d=8192, 64H GQA kv=8, ff 29568,
+vocab 152064.  Distinctive: QKV bias, rope_theta 1e6."""
+import jax.numpy as jnp
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2-72b", family="dense",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=29568, vocab=152064, qkv_bias=True, rope_theta=1e6,
+        opt_state_dtype=jnp.bfloat16,   # 72B: keep optimizer in HBM budget
+    ),
+    reduced=ModelConfig(
+        name="qwen2-72b", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512, qkv_bias=True, loss_chunk=32, ssm_segment=16,
+    ),
+)

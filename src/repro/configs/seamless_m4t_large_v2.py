@@ -1,0 +1,17 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596]: enc-dec, 24L(+24L dec), d=1024,
+16H, ff 8192, vocab 256206.  Modality frontend is a STUB: input_specs()
+provides precomputed frame embeddings (brief/DESIGN §6)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="seamless-m4t-large-v2", family="encdec",
+        n_layers=24, n_enc_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=8192, vocab=256206,
+    ),
+    reduced=ModelConfig(
+        name="seamless-m4t-large-v2", family="encdec",
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512, loss_chunk=32, ssm_segment=16,
+    ),
+)

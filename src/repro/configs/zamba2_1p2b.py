@@ -1,0 +1,23 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: 38 Mamba2 layers, d=2048, ssm_state=64,
+plus a SHARED attention block (32H, ff 8192) applied every 6 layers."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab=32000,
+        d_inner=4096, ssm_heads=64, ssm_head_dim=64, ssm_state=64,
+        shared_attn_every=6,
+        # chunked SSD (exact Mamba2 block decomposition, §Perf): replaces
+        # the token-serial scan's per-token state HBM round-trips
+        ssm_impl="chunked",
+    ),
+    reduced=ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=512,
+        d_inner=128, ssm_heads=8, ssm_head_dim=16, ssm_state=16,
+        shared_attn_every=2, loss_chunk=32, ssm_segment=16,
+    ),
+)

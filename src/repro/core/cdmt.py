@@ -1,0 +1,218 @@
+"""Content-Defined Merkle Tree (CDMT) — the paper's core contribution (Sec. IV).
+
+A Merkle tree whose *internal-node* boundaries are content-defined, exactly as
+CDC makes *chunk* boundaries content-defined.  Building a level, children are
+appended to the open parent one at a time; after the parent holds at least
+``window`` children, a rolling hash over the **last ``window`` child
+fingerprints** is tested against a pattern rule (low ``rule_bits`` bits zero).
+On a match the parent is "cut" (closed) — so parent extents are functions of
+child *content*, not child *position*, and a chunk split/merge only perturbs
+the O(height) path above the edit (Fig. 3).
+
+Node identifiers remain Merkle-style — blake2b over the concatenation of ALL
+child fingerprints — so the authentication-path property (Sec. III-B) and
+content-addressed node sharing both hold.
+
+Implements:
+  * Algorithm 1 (build)  — ``CDMT.build``          O(N) expected
+  * Algorithm 2 (compare) — ``compare`` / ``diff_chunks``  BFS with pruning
+  * authentication paths over the variable-fanout structure
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from . import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class CDMTParams:
+    window: int = 8          # rolling window of child fingerprints (paper: 8)
+    rule_bits: int = 2       # boundary rule: low bits zero (paper: ~1/4 fanout)
+    max_fanout: int = 64     # hard cap so adversarial content can't flatten the tree
+
+    @property
+    def rule_mask(self) -> int:
+        return (1 << self.rule_bits) - 1
+
+
+DEFAULT_PARAMS = CDMTParams()
+
+
+@dataclasses.dataclass
+class CDMTNode:
+    fp: bytes
+    children: Tuple[bytes, ...]     # () for leaves
+    is_leaf: bool
+    n_leaves: int                   # leaves under this node (for accounting)
+
+
+def _window_matches(children: Sequence[bytes], params: CDMTParams) -> bool:
+    """Rolling-window boundary test: blake2b over the last ``window`` child
+    fps, low ``rule_bits`` bits zero.  Uses full blake2b (not a weaker rolling
+    poly) because the window is tiny — ≤ window × 16 bytes per test."""
+    w = children[-params.window:]
+    h = hashing.node_fingerprint(w)
+    return (h[-1] & params.rule_mask) == 0
+
+
+class CDMT:
+    """The CDMT index for one artifact version."""
+
+    def __init__(self, params: CDMTParams = DEFAULT_PARAMS):
+        self.params = params
+        self.nodes: Dict[bytes, CDMTNode] = {}
+        self.root: Optional[bytes] = None
+        self.levels: List[List[bytes]] = []
+
+    # ------------------------------------------------------------------ build
+
+    @classmethod
+    def build(cls, leaf_fps: Sequence[bytes], params: CDMTParams = DEFAULT_PARAMS,
+              node_store: Optional[Dict[bytes, CDMTNode]] = None) -> "CDMT":
+        """Algorithm 1.  ``node_store`` (the hashmap ``hm`` of the paper) lets
+        multiple versions share node objects — node-copying persistence falls
+        out of content addressing: only nodes on changed paths are new."""
+        t = cls(params=params)
+        hm = node_store if node_store is not None else t.nodes
+        if not leaf_fps:
+            return t
+
+        level: List[bytes] = []
+        for fp in leaf_fps:                       # lines 4–10: insert leaves
+            if fp not in hm:
+                hm[fp] = CDMTNode(fp=fp, children=(), is_leaf=True, n_leaves=1)
+            t.nodes[fp] = hm[fp]
+            level.append(fp)
+        t.levels.append(list(level))
+
+        while len(level) > 1:                     # lines 12–28: level passes
+            nxt: List[bytes] = []
+            open_children: List[bytes] = []
+            for i, child in enumerate(level):
+                open_children.append(child)       # line 14–15: extend window
+                is_last = i == len(level) - 1
+                cut = False
+                if len(open_children) >= params.window:
+                    cut = _window_matches(open_children, params)   # line 17
+                if len(open_children) >= params.max_fanout:
+                    cut = True
+                if cut or is_last:                # line 18 / lines 23–24
+                    kids = tuple(open_children)
+                    fp = hashing.node_fingerprint(kids)
+                    if fp not in hm:
+                        hm[fp] = CDMTNode(
+                            fp=fp, children=kids, is_leaf=False,
+                            n_leaves=sum(hm[c].n_leaves for c in kids))
+                    t.nodes[fp] = hm[fp]
+                    nxt.append(fp)
+                    open_children = []
+            # share subtree nodes into the version-local map
+            t.levels.append(list(nxt))
+            level = nxt
+        t.root = level[0]
+        # pull every reachable node into t.nodes (shared from hm)
+        if node_store is not None:
+            stack = [t.root]
+            while stack:
+                fp = stack.pop()
+                if fp in t.nodes:
+                    node = t.nodes[fp]
+                else:
+                    node = hm[fp]
+                    t.nodes[fp] = node
+                stack.extend(c for c in node.children if c not in t.nodes)
+        return t
+
+    # ---------------------------------------------------------------- queries
+
+    def node_set(self) -> Set[bytes]:
+        return set(self.nodes.keys())
+
+    def leaf_fps(self) -> List[bytes]:
+        return list(self.levels[0]) if self.levels else []
+
+    def height(self) -> int:
+        return len(self.levels)
+
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def index_size_bytes(self) -> int:
+        """Serialized index footprint (the paper: "~KBs")."""
+        total = 0
+        for n in self.nodes.values():
+            total += len(n.fp) + sum(len(c) for c in n.children) + 2
+        return total
+
+    def authentication_path(self, leaf_fp: bytes) -> List[bytes]:
+        """Sibling fps of every node on the path from ``leaf_fp`` to root."""
+        # parent map (variable fanout ⇒ walk levels)
+        parent: Dict[bytes, bytes] = {}
+        for lvl in self.levels[1:]:
+            for pfp in lvl:
+                for c in self.nodes[pfp].children:
+                    parent[c] = pfp
+        path: List[bytes] = []
+        cur = leaf_fp
+        while cur != self.root:
+            p = parent[cur]
+            path.extend(c for c in self.nodes[p].children if c != cur)
+            cur = p
+        return path
+
+
+# -------------------------------------------------------------------- compare
+
+def compare(client: Optional[CDMT], server: CDMT) -> Tuple[Set[bytes], int]:
+    """Algorithm 2 — BFS over the server tree, pruning subtrees whose node id
+    the client already has.  Returns (leaf fps the client is MISSING,
+    number of node comparisons performed).
+
+    With ``client=None`` (fresh pull of a new image) every leaf is missing and
+    zero comparisons are needed — the paper's "push of a new image" case.
+    """
+    if server.root is None:
+        return set(), 0
+    if client is None:
+        return set(server.leaf_fps()), 0
+    have = client.node_set()
+    missing: Set[bytes] = set()
+    comparisons = 0
+    queue: List[bytes] = [server.root]
+    while queue:                                    # lines 3–11
+        fp = queue.pop(0)
+        comparisons += 1
+        if fp in have:                              # subtree shared: prune
+            continue
+        node = server.nodes[fp]
+        if node.children:                           # line 5–6: descend
+            queue.extend(node.children)
+        else:                                       # line 8: yield leaf
+            missing.add(fp)
+    return missing, comparisons
+
+
+def diff_chunks(old: Optional[CDMT], new: CDMT) -> Set[bytes]:
+    """Leaf fingerprints present in ``new`` but not detectable via ``old``."""
+    return compare(old, new)[0]
+
+
+def common_node_ratio(a: CDMT, b: CDMT) -> float:
+    """|shared node ids| / |nodes of b| — CDMT side of Fig. 8."""
+    if not b.nodes:
+        return 1.0
+    return len(a.node_set() & b.node_set()) / len(b.nodes)
+
+
+def comparison_ratio(client: CDMT, server: CDMT) -> float:
+    """Fig. 9 metric: comparisons via CDMT ÷ comparisons via flat key-value
+    lookup (= number of server leaves).  < 1 ⇒ authentication-path pruning
+    is saving work."""
+    n_leaves = len(server.leaf_fps())
+    if n_leaves == 0:
+        return 0.0
+    _, comps = compare(client, server)
+    return comps / n_leaves

@@ -1,0 +1,97 @@
+"""Container/artifact registry (paper Sec. V).
+
+Hosts all versions of each artifact lineage plus **one CDMT index per
+lineage** (maintained with node-copying as new versions are pushed).  The
+registry never re-chunks on push — the client ships chunk fps + new chunks +
+the new CDMT leaf sequence; the registry rebuilds/extends the versioned index
+(cheap: Fig. 10 shows indexing ≪ hashing) and verifies the root matches the
+client's claim, which doubles as the authentication mechanism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
+from .store import DedupStore, Recipe
+from .versioning import VersionedCDMT, VersionRecord
+
+
+@dataclasses.dataclass
+class PushReceipt:
+    lineage: str
+    tag: str
+    version: int
+    chunks_received: int
+    bytes_received: int
+    index_bytes: int
+    root: bytes
+
+
+class Registry:
+    """A registry: global chunk store + per-lineage versioned CDMT."""
+
+    def __init__(self, directory: Optional[str] = None,
+                 cdmt_params: CDMTParams = DEFAULT_PARAMS):
+        self.store = DedupStore(directory)
+        self.cdmt_params = cdmt_params
+        self.lineages: Dict[str, VersionedCDMT] = {}
+        self.recipes: Dict[Tuple[str, str], Recipe] = {}   # (lineage, tag)
+        self.metadata: Dict[Tuple[str, str], bytes] = {}   # small blobs (manifests)
+
+    # -- server-side API (what the wire protocol calls) -----------------------
+
+    def lineage(self, name: str) -> VersionedCDMT:
+        if name not in self.lineages:
+            self.lineages[name] = VersionedCDMT(params=self.cdmt_params)
+        return self.lineages[name]
+
+    def latest_index(self, lineage: str) -> Optional[CDMT]:
+        lin = self.lineages.get(lineage)
+        if lin is None or not lin.roots:
+            return None
+        return lin.get_version(lin.roots[-1].version)
+
+    def index_for_tag(self, lineage: str, tag: str) -> CDMT:
+        return self.lineage(lineage).get_tag(tag)
+
+    def has_chunks(self, fps: Iterable[bytes]) -> List[bytes]:
+        """Which of ``fps`` the registry is missing."""
+        return self.store.missing(fps)
+
+    def receive_push(self, lineage: str, tag: str, recipe: Recipe,
+                     chunks: Dict[bytes, bytes],
+                     parent_version: Optional[int] = None) -> PushReceipt:
+        """Accept a push: store new chunks, extend the versioned CDMT."""
+        nbytes = 0
+        nchunks = 0
+        for fp, data in chunks.items():
+            if self.store.chunks.put(fp, data):
+                nchunks += 1
+                nbytes += len(data)
+        self.recipes[(lineage, tag)] = recipe
+        self.store.recipes[f"{lineage}:{tag}"] = recipe
+        rec = self.lineage(lineage).commit(recipe.fps, tag=tag, parent=parent_version)
+        idx = self.lineage(lineage).get_version(rec.version)
+        return PushReceipt(lineage=lineage, tag=tag, version=rec.version,
+                           chunks_received=nchunks, bytes_received=nbytes,
+                           index_bytes=idx.index_size_bytes(), root=rec.root)
+
+    def serve_chunks(self, fps: Sequence[bytes]) -> Dict[bytes, bytes]:
+        return {fp: self.store.chunks.get(fp) for fp in fps}
+
+    def recipe_for(self, lineage: str, tag: str) -> Recipe:
+        return self.recipes[(lineage, tag)]
+
+    def tags(self, lineage: str) -> List[str]:
+        lin = self.lineages.get(lineage)
+        return [r.tag for r in lin.roots] if lin else []
+
+    # -- small metadata blobs (checkpoint manifests etc.) ---------------------
+
+    def put_metadata(self, lineage: str, tag: str, blob: bytes) -> None:
+        self.metadata[(lineage, tag)] = blob
+
+    def get_metadata(self, lineage: str, tag: str) -> bytes:
+        return self.metadata[(lineage, tag)]

@@ -1,0 +1,189 @@
+"""Deduplicated storage — the paper's three-component prototype (Sec. V):
+
+  (i)   **container store**  — unique CDC chunks in log-structured storage,
+  (ii)  **fingerprint index** — fp → physical location (here, the CDMT serves
+        as the *comparison* index; the flat map is the location index),
+  (iii) **recipe store**     — per-artifact ordered fp list for reconstruction.
+
+Backed either by memory (tests/benchmarks) or a directory (examples /
+checkpointing).  All writes are append-only; chunks are immutable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import cdc, hashing
+
+
+@dataclasses.dataclass
+class Recipe:
+    """Ordered fingerprint sequence reconstructing one artifact (layer)."""
+    name: str
+    fps: List[bytes]
+    sizes: List[int]
+
+    @property
+    def total_size(self) -> int:
+        return sum(self.sizes)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "fps": [f.hex() for f in self.fps],
+            "sizes": self.sizes,
+        })
+
+    @classmethod
+    def from_json(cls, s: str) -> "Recipe":
+        d = json.loads(s)
+        return cls(name=d["name"], fps=[bytes.fromhex(f) for f in d["fps"]],
+                   sizes=d["sizes"])
+
+
+class ChunkStore:
+    """Log-structured unique-chunk store with a fingerprint→location index."""
+
+    def __init__(self, directory: Optional[str] = None):
+        self.directory = directory
+        self._mem: Dict[bytes, bytes] = {}
+        self._index: Dict[bytes, Tuple[int, int]] = {}   # fp -> (offset, size)
+        self._log_path = None
+        self._log_size = 0
+        if directory is not None:
+            os.makedirs(directory, exist_ok=True)
+            self._log_path = os.path.join(directory, "chunks.log")
+            self._idx_path = os.path.join(directory, "chunks.idx")
+            self._load()
+
+    # -- persistence ---------------------------------------------------------
+
+    def _load(self) -> None:
+        if self._log_path and os.path.exists(self._idx_path):
+            with open(self._idx_path, "rb") as f:
+                data = f.read()
+            off = 0
+            while off < len(data):
+                fp = data[off:off + hashing.DIGEST_SIZE]
+                o, s = struct.unpack_from("<QQ", data, off + hashing.DIGEST_SIZE)
+                self._index[fp] = (o, s)
+                off += hashing.DIGEST_SIZE + 16
+            self._log_size = os.path.getsize(self._log_path) if os.path.exists(self._log_path) else 0
+
+    # -- API -----------------------------------------------------------------
+
+    def has(self, fp: bytes) -> bool:
+        return fp in self._index or fp in self._mem
+
+    def put(self, fp: bytes, data: bytes) -> bool:
+        """Store chunk if absent.  Returns True if newly stored."""
+        if self.has(fp):
+            return False
+        if self._log_path is not None:
+            with open(self._log_path, "ab") as f:
+                f.write(data)
+            with open(self._idx_path, "ab") as f:
+                f.write(fp + struct.pack("<QQ", self._log_size, len(data)))
+            self._index[fp] = (self._log_size, len(data))
+            self._log_size += len(data)
+        else:
+            self._mem[fp] = data
+            self._index[fp] = (0, len(data))
+        return True
+
+    def get(self, fp: bytes) -> bytes:
+        if fp in self._mem:
+            return self._mem[fp]
+        if self._log_path is not None and fp in self._index:
+            off, size = self._index[fp]
+            with open(self._log_path, "rb") as f:
+                f.seek(off)
+                return f.read(size)
+        raise KeyError(fp.hex())
+
+    def chunk_size(self, fp: bytes) -> int:
+        return self._index[fp][1]
+
+    def n_chunks(self) -> int:
+        return len(self._index)
+
+    def stored_bytes(self) -> int:
+        return sum(s for _, s in self._index.values())
+
+    def fingerprints(self) -> Iterable[bytes]:
+        return self._index.keys()
+
+
+class DedupStore:
+    """Client/registry-side deduplicated store: chunks + recipes + accounting."""
+
+    def __init__(self, directory: Optional[str] = None,
+                 cdc_params: cdc.CDCParams = cdc.DEFAULT_PARAMS):
+        self.chunks = ChunkStore(directory)
+        self.recipes: Dict[str, Recipe] = {}
+        self.cdc_params = cdc_params
+        # accounting
+        self.ingested_bytes = 0
+        self.new_chunk_bytes = 0
+        self.dup_chunk_bytes = 0
+
+    # -- ingest --------------------------------------------------------------
+
+    def ingest(self, name: str, data: bytes) -> Recipe:
+        """CDC-chunk ``data``, dedup-store new chunks, record the recipe."""
+        fps: List[bytes] = []
+        sizes: List[int] = []
+        for chunk in cdc.chunk_bytes(data, self.cdc_params):
+            fp = hashing.chunk_fingerprint(chunk)
+            if self.chunks.put(fp, chunk):
+                self.new_chunk_bytes += len(chunk)
+            else:
+                self.dup_chunk_bytes += len(chunk)
+            fps.append(fp)
+            sizes.append(len(chunk))
+        self.ingested_bytes += len(data)
+        recipe = Recipe(name=name, fps=fps, sizes=sizes)
+        self.recipes[name] = recipe
+        return recipe
+
+    def ingest_chunks(self, name: str, fps: Sequence[bytes],
+                      chunks: Dict[bytes, bytes],
+                      sizes: Sequence[int]) -> Recipe:
+        """Store pre-chunked data (pull path: only missing chunks provided)."""
+        for fp in fps:
+            if fp in chunks:
+                self.chunks.put(fp, chunks[fp])
+        recipe = Recipe(name=name, fps=list(fps), sizes=list(sizes))
+        self.recipes[name] = recipe
+        return recipe
+
+    # -- restore -------------------------------------------------------------
+
+    def restore(self, name: str) -> bytes:
+        recipe = self.recipes[name]
+        return b"".join(self.chunks.get(fp) for fp in recipe.fps)
+
+    def restore_into(self, name: str, out: np.ndarray) -> None:
+        """Zero-extra-copy restore into a preallocated uint8 buffer."""
+        recipe = self.recipes[name]
+        off = 0
+        for fp in recipe.fps:
+            c = self.chunks.get(fp)
+            out[off:off + len(c)] = np.frombuffer(c, dtype=np.uint8)
+            off += len(c)
+
+    # -- accounting ----------------------------------------------------------
+
+    def dedup_ratio(self) -> float:
+        """raw ingested bytes / stored bytes (higher = better; Fig. 6/7)."""
+        stored = self.chunks.stored_bytes()
+        return self.ingested_bytes / stored if stored else 1.0
+
+    def missing(self, fps: Iterable[bytes]) -> List[bytes]:
+        return [fp for fp in fps if not self.chunks.has(fp)]

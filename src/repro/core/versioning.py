@@ -1,0 +1,135 @@
+"""Versioned CDMT maintenance (paper Sec. V-A).
+
+Two forms of versioning, both kept inside ONE index per artifact lineage:
+
+* **Layering (COW)** — successive committed versions of the *same* branch
+  (paper: new file versions in upper layers).  Realized as a per-node
+  *modification history*: each logical node slot records (version → fp), so a
+  traversal at version v resolves each slot to its hash at v.  Access slowdown
+  is O(log m) in the number of modifications, as the paper analyzes — we store
+  the history sorted and bisect.
+* **Branching** — user-visible forks (tagged images / fine-tune forks).
+  Realized by **node-copying**: because node ids are content-addressed, a new
+  version's tree shares every unchanged subtree with its parent by
+  construction; only the changed root-to-leaf paths materialize new nodes.
+  The lineage keeps an **array of roots** (paper: "array of roots where each
+  root corresponds to a 'taggable' container branch").
+
+The shared ``node_store`` dict is the hashmap ``hm`` of Algorithm 1 — it is
+what makes node-copying free.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .cdmt import CDMT, CDMTNode, CDMTParams, DEFAULT_PARAMS, compare
+
+
+@dataclasses.dataclass
+class VersionRecord:
+    version: int
+    tag: str
+    root: bytes
+    parent: Optional[int]          # parent version number (branch point)
+    n_leaves: int
+    new_nodes: int                 # nodes materialized by this version
+
+
+class VersionedCDMT:
+    """A lineage of CDMT versions over a shared node store."""
+
+    def __init__(self, params: CDMTParams = DEFAULT_PARAMS):
+        self.params = params
+        self.node_store: Dict[bytes, CDMTNode] = {}
+        self.roots: List[VersionRecord] = []           # array of roots
+        self._by_tag: Dict[str, int] = {}
+        # layering modification history: slot-path -> sorted [(version, fp)]
+        self.mod_history: Dict[bytes, List[Tuple[int, bytes]]] = {}
+
+    # ------------------------------------------------------------------ write
+
+    def commit(self, leaf_fps: Sequence[bytes], tag: str,
+               parent: Optional[int] = None) -> VersionRecord:
+        """Commit a new version (push of a committed image).  Node-copying:
+        only nodes absent from the shared store are created."""
+        before = len(self.node_store)
+        tree = CDMT.build(leaf_fps, params=self.params, node_store=self.node_store)
+        created = len(self.node_store) - before
+        version = len(self.roots)
+        if parent is None and self.roots:
+            parent = self.roots[-1].version
+        rec = VersionRecord(version=version, tag=tag, root=tree.root,
+                            parent=parent, n_leaves=len(leaf_fps),
+                            new_nodes=created)
+        self.roots.append(rec)
+        self._by_tag[tag] = version
+        # layering history: record the root evolution per branch head
+        hist = self.mod_history.setdefault(b"root:" + tag.split("@")[0].encode(), [])
+        hist.append((version, tree.root))
+        return rec
+
+    # ------------------------------------------------------------------- read
+
+    def get_version(self, version: int) -> CDMT:
+        """Reconstruct the CDMT of a version in time linear in tree size
+        (paper Sec. I: 'a given version ... obtained in linear time')."""
+        rec = self.roots[version]
+        t = CDMT(params=self.params)
+        if rec.root is None:
+            return t
+        stack = [rec.root]
+        seen: Set[bytes] = set()
+        while stack:
+            fp = stack.pop()
+            if fp in seen:
+                continue
+            seen.add(fp)
+            node = self.node_store[fp]
+            t.nodes[fp] = node
+            stack.extend(node.children)
+        t.root = rec.root
+        t.levels = _levels_from_root(t)
+        return t
+
+    def get_tag(self, tag: str) -> CDMT:
+        return self.get_version(self._by_tag[tag])
+
+    def resolve_at(self, slot: bytes, version: int) -> Optional[bytes]:
+        """Layering lookup: the fp a slot held at ``version`` — O(log m)."""
+        hist = self.mod_history.get(slot)
+        if not hist:
+            return None
+        idx = bisect.bisect_right(hist, (version, b"\xff" * 32)) - 1
+        return hist[idx][1] if idx >= 0 else None
+
+    def diff(self, old_version: Optional[int], new_version: int) -> Set[bytes]:
+        """Leaf fps in ``new`` missing from ``old`` (Algorithm 2)."""
+        old = self.get_version(old_version) if old_version is not None else None
+        new = self.get_version(new_version)
+        return compare(old, new)[0]
+
+    # ------------------------------------------------------------- accounting
+
+    def total_nodes(self) -> int:
+        return len(self.node_store)
+
+    def version_records(self) -> List[VersionRecord]:
+        return list(self.roots)
+
+
+def _levels_from_root(t: CDMT) -> List[List[bytes]]:
+    """Recover bottom-up levels for a tree reconstructed from a node store."""
+    if t.root is None:
+        return []
+    levels_down: List[List[bytes]] = [[t.root]]
+    while True:
+        nxt: List[bytes] = []
+        for fp in levels_down[-1]:
+            nxt.extend(t.nodes[fp].children)
+        if not nxt:
+            break
+        levels_down.append(nxt)
+    return list(reversed(levels_down))

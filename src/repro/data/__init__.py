@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline with host sharding."""
+from repro.data.pipeline import (DataConfig, TokenPipeline, make_train_iterator)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+``gear_cdc``   — CDC boundary scan (the paper's hashing hot loop, Fig. 10).
+``chunk_fp``   — parallel polynomial page fingerprints (device-side dedup).
+``flash_attention`` — blockwise fused attention (LM prefill hot spot).
+
+``ops`` holds the jit'd dispatch wrappers; ``ref`` the pure-jnp oracles.
+EXAMPLE.md documents the kernel/ops/ref convention.
+"""
+
+from . import ops, ref

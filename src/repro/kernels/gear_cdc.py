@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: content-defined-chunking boundary scan (gear hash).
+
+The paper's CDC hot loop (Sec. III-A, VI-D) is a byte-serial rolling hash —
+hostile to a TPU.  Two adaptations (DESIGN.md §4) make it TPU-native:
+
+1. **Table lookup → one-hot matmul.**  ``G[byte]`` over a 256-entry table is
+   a gather (slow on TPU).  Instead each byte becomes a one-hot row of a
+   ``(sub, 256)`` matrix and the lookup is a ``(sub,256) @ (256,2)``
+   matmul on the MXU.  The uint32 gear values are split into two exact
+   16-bit halves so fp32 MXU accumulation is exact (one-hot rows select a
+   single entry; |half| < 2^16 < 2^24).
+
+2. **Serial recurrence → bounded convolution.**  ``h_i = 2 h_{i-1} + g_i``
+   (mod 2^32) has bounded memory: after 32 doublings a term leaves the
+   register, so ``h_i = Σ_{j<32} 2^j g_{i-j}`` — a 32-tap convolution,
+   computed with static shifted adds on the VPU (int32 wraparound = mod
+   2^32).  Cross-block dependence is only a 31-byte halo, passed as a
+   second blocked operand, so grid steps are fully independent.
+
+Grid: 1-D over byte-stream tiles of ``BLOCK`` (16 KiB).  VMEM per step:
+in/out tiles ~80 KiB + one (SUB=2048, 256) f32 one-hot scratch of 2 MiB —
+well inside the ~16 MiB/core budget; sub-tiling keeps the one-hot from
+scaling with BLOCK.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.cdc import GEAR_WINDOW, gear_table
+
+BLOCK = 16384          # bytes per grid step
+SUB = 2048             # one-hot sub-tile rows (VMEM: (SUB,256) f32 = 2 MiB)
+HALO = GEAR_WINDOW     # 32 trailing bytes of the previous block
+
+
+def _gear_table_halves() -> jax.Array:
+    """(256, 2) f32: [hi16, lo16] of each gear entry — exact in fp32."""
+    g = gear_table()
+    hi = (g >> 16).astype(np.float32)
+    lo = (g & 0xFFFF).astype(np.float32)
+    return jnp.stack([jnp.asarray(hi), jnp.asarray(lo)], axis=1)
+
+
+def _gear_cdc_kernel(bytes_ref, halo_ref, table_ref, hash_ref):
+    """One grid step: rolling gear hash of BLOCK bytes (uint32 bits in int32)."""
+    data = jnp.concatenate([halo_ref[...], bytes_ref[...]], axis=0)
+    n = BLOCK + HALO
+    table = table_ref[...]                                    # (256, 2) f32
+    data_i32 = data.astype(jnp.int32)
+
+    # --- 1. gear lookup via one-hot matmul (MXU), per sub-tile -------------
+    def lookup(sub):                                          # (m,) int32
+        onehot = (sub[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (sub.shape[0], 256), 1)).astype(jnp.float32)
+        halves = jnp.dot(onehot, table,
+                         preferred_element_type=jnp.float32)  # (m, 2)
+        hi = halves[:, 0].astype(jnp.int32)
+        lo = halves[:, 1].astype(jnp.int32)
+        return (hi << 16) + lo                                # exact uint32 bits
+
+    g_parts = [lookup(data_i32[s0:min(s0 + SUB, n)])          # static unroll
+               for s0 in range(0, n, SUB)]
+    g = jnp.concatenate(g_parts, axis=0)                      # (BLOCK+HALO,)
+
+    # Block 0 has no predecessor: its halo is padding, not stream bytes, so
+    # its gear contributions must be zero (ref semantics: h_i sums only
+    # over existing positions i-j >= 0).
+    first = pl.program_id(0) == 0
+    idx = jax.lax.broadcasted_iota(jnp.int32, (BLOCK + HALO,), 0)
+    g = jnp.where(jnp.logical_and(first, idx < HALO), 0, g)
+
+    # --- 2. 32-tap convolution with weights 2^j (VPU shifted adds) ---------
+    h = jnp.zeros((BLOCK,), dtype=jnp.int32)
+    for j in range(GEAR_WINDOW):
+        # output position i (block coords) reads g[HALO + i - j]
+        h = h + (g[HALO - j: HALO - j + BLOCK] << j)
+    hash_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gear_hash_pallas(data: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Rolling gear hash of a uint8 stream via the Pallas kernel.
+
+    ``data`` length must be a multiple of BLOCK (ops.py pads).  Returns
+    uint32 hashes, bit-identical to ``ref.gear_hash_ref``.
+    """
+    n = data.shape[0]
+    assert n % BLOCK == 0, "pad to BLOCK first (see ops.gear_boundary_mask)"
+    n_blocks = n // BLOCK
+    blocks = data.reshape(n_blocks, BLOCK)
+    # halo operand: the 32 bytes preceding each block (zeros for block 0)
+    halo_rows = jnp.concatenate(
+        [jnp.zeros((1, HALO), jnp.uint8), blocks[:-1, -HALO:]], axis=0)
+
+    out = pl.pallas_call(
+        _gear_cdc_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((HALO,), lambda i: (i,)),
+            pl.BlockSpec((256, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(blocks.reshape(-1), halo_rows.reshape(-1), table := _gear_table_halves())
+    return jax.lax.bitcast_convert_type(out, jnp.uint32)

@@ -1,0 +1,117 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: Pallas (compiled) on TPU backends, Pallas ``interpret=True``
+or the pure-jnp reference on CPU — selectable with ``impl=``.  All wrappers
+handle padding/reshaping so callers never see tile-size constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cdc
+from . import ref
+from .chunk_fp import PAGE_TILE, page_fingerprint_pallas
+from .flash_attention import Q_TILE, flash_attention_pallas
+from .gear_cdc import BLOCK, gear_hash_pallas
+
+Impl = Literal["auto", "pallas", "interpret", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: Impl) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+# ---------------------------------------------------------------------------
+# CDC boundary scan
+# ---------------------------------------------------------------------------
+
+
+def gear_hash(data: jax.Array, impl: Impl = "auto") -> jax.Array:
+    """Rolling gear hash (uint32) per byte of a uint8 stream."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.gear_hash_ref(data)
+    n = data.shape[0]
+    pad = (-n) % BLOCK
+    padded = jnp.pad(data, (0, pad))
+    out = gear_hash_pallas(padded, interpret=(mode == "interpret"))
+    return out[:n]
+
+
+def gear_boundary_mask(data: jax.Array, mask_bits: int,
+                       impl: Impl = "auto") -> jax.Array:
+    """Candidate chunk boundaries: low ``mask_bits`` of the rolling hash zero."""
+    h = gear_hash(data, impl=impl)
+    return (h & jnp.uint32((1 << mask_bits) - 1)) == 0
+
+
+def chunk_boundaries_accelerated(data: bytes, params: cdc.CDCParams,
+                                 impl: Impl = "auto") -> list:
+    """Full CDC: device boundary scan + host min/max pass (DESIGN.md §4)."""
+    arr = jnp.asarray(np.frombuffer(data, dtype=np.uint8))
+    mask = np.asarray(gear_boundary_mask(arr, params.mask_bits, impl=impl))
+    return cdc.boundaries_from_mask(mask, params)
+
+
+# ---------------------------------------------------------------------------
+# Page fingerprints
+# ---------------------------------------------------------------------------
+
+
+def page_fingerprints(pages: jax.Array, impl: Impl = "auto") -> jax.Array:
+    """(n_pages, page_size) uint8 → (n_pages, 2) int32 fingerprint pairs."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.page_fingerprint_ref(pages)
+    n = pages.shape[0]
+    pad = (-n) % PAGE_TILE
+    padded = jnp.pad(pages, ((0, pad), (0, 0)))
+    out = page_fingerprint_pallas(padded, interpret=(mode == "interpret"))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    impl: Impl = "auto") -> jax.Array:
+    """Fused attention over (B, H, S, D) with (B, KVH, S, D) k/v (GQA ok).
+
+    Repeats kv heads to match q heads, flattens (B,H) for the kernel, pads S
+    to the 128 tile.  fp32 accumulation; returns q.dtype.
+    """
+    mode = _resolve(impl)
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    if kvh != h:
+        assert h % kvh == 0
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if mode == "ref":
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+
+    skv = k.shape[2]
+    pad_q = (-s) % Q_TILE
+    pad_kv = (-skv) % Q_TILE
+    qf = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))).reshape(b * h, s + pad_q, d)
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0))).reshape(b * h, skv + pad_kv, d)
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0))).reshape(b * h, skv + pad_kv, d)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, scale=scale,
+                                 interpret=(mode == "interpret"))
+    return out[:, :s, :].reshape(b, h, s, d)

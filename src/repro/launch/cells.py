@@ -1,0 +1,222 @@
+"""Cell construction: (arch × shape × mesh) → lowerable step + shardings.
+
+A *cell* is one entry of the dry-run/roofline matrix.  ``build_cell``
+returns everything needed to ``jit(...).lower(...)``:
+
+  fn            step function (train_step / prefill / decode_step)
+  args          ShapeDtypeStruct pytree of inputs (no allocation)
+  in_shardings  NamedSharding pytree matching args
+  donate        argnums to donate (state / cache)
+  meta          tokens-per-step, model params, family, n_micro, ...
+
+Baseline sharding rules come from ``parallel.sharding.DEFAULT_RULES`` plus
+per-cell overrides below; perf iterations (EXPERIMENTS.md §Perf) swap these
+via the ``rules`` argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
+from repro.models import serve
+from repro.models.api import Model
+from repro.parallel import sharding as sh
+from repro.runtime.train_step import (TrainConfig, abstract_train_state,
+                                      make_train_step)
+
+DEFAULT_N_MICRO = 4
+
+
+def baseline_rule_overrides(cfg: ModelConfig, shape: ShapeSpec,
+                            mesh: Mesh) -> Dict[str, Any]:
+    """Per-cell sharding-rule overrides (the baseline; §Perf hillclimbs these).
+
+    Divisibility-aware: any logical axis whose size does not divide over the
+    mesh axis it maps to is replicated instead (with a better-sharded
+    substitute where one exists) — e.g. rwkv6's 40 heads and GQA kv<16 heads
+    cannot shard over model=16, so the cache shards its sequence axis.
+    """
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = msize.get("model", 1)
+    rules: Dict[str, Any] = {}
+
+    if cfg.n_kv_heads % model_n != 0:
+        # kv projections + kv activations are small; replicate over model
+        rules["kv_heads"] = None
+        rules["act_kv"] = None
+    if cfg.family == "rwkv" and cfg.n_heads % model_n != 0:
+        rules["act_heads"] = None        # (B,S,40,64) cannot shard heads
+
+    if shape.kind in ("decode", "prefill"):
+        # (prefill RETURNS the cache: its sharding bounds output bytes)
+        if cfg.use_mla:
+            # MLA latent cache has no heads axis: shard time over model
+            rules["cache_seq"] = "model"
+        if cfg.n_kv_heads % model_n != 0:
+            # MQA/GQA<model: cache heads cannot shard; shard cache time
+            rules["cache_heads"] = None
+            rules["cache_seq"] = "model"
+        if cfg.family == "rwkv" and cfg.n_heads % model_n != 0:
+            rules["cache_heads"] = None  # wkv state (B,40,64,64)
+        if shape.name == "long_500k":
+            # batch=1: batch axes cannot shard; give 'data' to the cache
+            # sequence (zamba2 attn KV) — rwkv state has no seq axis and
+            # stays replicated per the rules above.
+            rules["batch"] = None
+            rules["cache_batch"] = None
+            rules["cache_seq"] = "data"
+    return rules
+
+
+def _batch_pspec(shape_name: str, mesh: Mesh) -> Any:
+    if shape_name == "long_500k":
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes or None
+
+
+def _spec_tree_shardings(mesh: Mesh, tree):
+    """ParamSpec tree → NamedSharding tree under the ambient rules."""
+    from repro.models import spec as S
+    return S.map_axes(tree, lambda s: NamedSharding(
+        mesh, sh.logical_to_pspec(s.axes)))
+
+
+def _axes_to_sharding(mesh: Mesh, axes_tree, struct_tree):
+    """Logical-axis tuples tree → NamedSharding tree (matching structs)."""
+    return jax.tree.map(
+        lambda axes, _: NamedSharding(mesh, sh.logical_to_pspec(tuple(axes))),
+        axes_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    mesh: Mesh
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+    rules: Dict[str, Any]
+    out_shardings: Any = None
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               rules: Optional[Dict[str, Any]] = None,
+               n_micro: Optional[int] = None,
+               remat: Optional[bool] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    model = Model(cfg)
+    eff_rules = baseline_rule_overrides(cfg, shape, mesh)
+    if rules:
+        eff_rules.update(rules)
+
+    n_params = model.param_count()
+    n_active = model.active_param_count()
+    meta: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "family": cfg.family,
+        "params": n_params, "active_params": n_active,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "rules": {k: str(v) for k, v in eff_rules.items()},
+    }
+
+    with sh.use_mesh(mesh, eff_rules):
+        if shape.kind == "train":
+            nm = n_micro or cfg.train_n_micro or DEFAULT_N_MICRO
+            from repro.optim import AdamWConfig
+            tc = TrainConfig(
+                n_micro=nm,
+                # honor the arch's optimizer-state dtype (bf16 for 70B+)
+                adamw=AdamWConfig(state_dtype=cfg.opt_state_dtype),
+                accum_dtype=cfg.grad_accum_dtype)
+            step = make_train_step(model, tc)
+            state = abstract_train_state(model, tc)
+            b, s = shape.global_batch, shape.seq_len
+            mb = b // nm
+            batch = model.input_specs(shape)
+            # (B, ...) -> (n_micro, B/n_micro, ...)
+            batch = {k: jax.ShapeDtypeStruct((nm, mb) + v.shape[1:], v.dtype)
+                     for k, v in batch.items()}
+            bd = _batch_pspec(shape_name, mesh)
+            batch_sh = {k: NamedSharding(
+                mesh, P(*((None, bd) + (None,) * (len(v.shape) - 2))))
+                for k, v in batch.items()}
+            pspecs = _spec_tree_shardings(mesh, model.specs)
+            opt_sh = {"m": pspecs, "v": pspecs,
+                      "count": NamedSharding(mesh, P())}
+            state_sh = type(state)(params=pspecs, opt=opt_sh,
+                                   step=NamedSharding(mesh, P()))
+            meta.update(tokens_per_step=b * s, step_kind="train",
+                        n_micro=nm, flops_factor=6)
+            return Cell(arch, shape, mesh, step, (state, batch),
+                        (state_sh, batch_sh), (0,), meta, eff_rules)
+
+        if shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return model.prefill(params, batch)
+
+            params = model.abstract_params()
+            batch = model.input_specs(shape)
+            bd = _batch_pspec(shape_name, mesh)
+            batch_sh = {k: NamedSharding(
+                mesh, P(*((bd,) + (None,) * (len(v.shape) - 1))))
+                for k, v in batch.items()}
+            pspecs = _spec_tree_shardings(mesh, model.specs)
+            # pin the RETURNED cache's sharding (it dominates output bytes;
+            # XLA otherwise materializes under-sharded KV for GQA<model)
+            s = shape.seq_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+            cache_struct = serve.cache_struct(cfg, shape.global_batch,
+                                              s + cfg.decode_margin)
+            cache_sh = _axes_to_sharding(mesh, serve.cache_axes(cfg),
+                                         cache_struct)
+            logits_sh = NamedSharding(mesh, P(bd, None, None))
+            meta.update(tokens_per_step=shape.global_batch * shape.seq_len,
+                        step_kind="prefill", flops_factor=2)
+            cell = Cell(arch, shape, mesh, prefill_fn, (params, batch),
+                        (pspecs, batch_sh), (), meta, eff_rules)
+            cell.meta["out_shardings"] = True
+            cell.out_shardings = (cache_sh, logits_sh)
+            return cell
+
+        # decode
+        def decode_fn(params, cache, tokens):
+            return model.decode_step(params, cache, tokens)
+
+        params = model.abstract_params()
+        specs = model.input_specs(shape)
+        cache, tokens = specs["cache"], specs["tokens"]
+        bd = _batch_pspec(shape_name, mesh)
+        tok_sh = NamedSharding(mesh, P(bd, None))
+        cache_sh = _axes_to_sharding(mesh, serve.cache_axes(cfg), cache)
+        pspecs = _spec_tree_shardings(mesh, model.specs)
+        meta.update(tokens_per_step=shape.global_batch, step_kind="decode",
+                    flops_factor=2)
+        return Cell(arch, shape, mesh, decode_fn, (params, cache, tokens),
+                    (pspecs, cache_sh, tok_sh), (1,), meta, eff_rules)
+
+
+def lower_cell(cell: Cell):
+    """jit + lower under the cell's mesh/rules (tracing reads the context)."""
+    with sh.use_mesh(cell.mesh, cell.rules):
+        kw = {}
+        if cell.out_shardings is not None:
+            kw["out_shardings"] = cell.out_shardings
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate, **kw)
+        return jitted.lower(*cell.args)

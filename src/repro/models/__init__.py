@@ -1,0 +1,2 @@
+"""Model definitions for all assigned architectures."""
+from repro.models.api import Model, build_model

@@ -1,0 +1,164 @@
+"""Public model API: one ``Model`` object per architecture config.
+
+Wraps the family assemblies with a uniform surface used by the trainer,
+server, dry-run and tests:
+
+    model = Model(get_config("qwen2-72b"))
+    params = model.init_params(key)          # reduced configs only
+    loss   = model.loss(params, microbatch)
+    cache, logits = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens)
+    model.input_specs(SHAPES["train_4k"])    # ShapeDtypeStructs for dry-run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm, serve
+from repro.models import spec as S
+from repro.parallel import sharding
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+
+    @functools.cached_property
+    def specs(self):
+        specs = lm.param_specs(self.cfg)
+        if self.cfg.param_dtype != jnp.float32:
+            # pure-low-precision params (no f32 master): halves resident
+            # bytes AND the FSDP gather wire.  Norm scales / biases / tiny
+            # vectors stay f32 (cheap, numerically load-bearing).
+            specs = S.map_axes(
+                specs, lambda s: dataclasses.replace(
+                    s, dtype=self.cfg.param_dtype) if len(s.shape) >= 2 else s)
+        return specs
+
+    def abstract_params(self):
+        return S.abstract(self.specs)
+
+    def init_params(self, key: jax.Array):
+        return S.initialize(self.specs, key)
+
+    def param_partition_specs(self):
+        return sharding.tree_partition_specs(self.specs)
+
+    def param_count(self) -> int:
+        return S.param_count(self.specs)
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (for MODEL_FLOPS = 6·N_active·D)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.family != "moe":
+            return total
+        e, k = cfg.n_experts, cfg.moe_top_k
+        expert_p = 3 * cfg.d_model * cfg.d_ff * e * cfg.n_layers
+        active_expert_p = expert_p * k // e
+        return total - expert_p + active_expert_p
+
+    # ------------------------------------------------------------- compute
+
+    def loss(self, params, batch):
+        return lm.loss_fn(params, batch, self.cfg)
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        return serve.prefill(params, batch, self.cfg, max_len=max_len)
+
+    def decode_step(self, params, cache, tokens):
+        return serve.decode_step(params, cache, tokens, self.cfg)
+
+    # ------------------------------------------------------------- specs
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        i32 = jnp.int32
+        if shape.kind == "train":
+            out = self._train_batch_struct(b, s)
+        elif shape.kind == "prefill":
+            out = self._prompt_struct(b, s)
+        elif shape.kind == "decode":
+            out = {"tokens": sds((b, 1), i32),
+                   "cache": serve.cache_struct(cfg, b, s + cfg.decode_margin)}
+        else:
+            raise ValueError(shape.kind)
+        return out
+
+    def _train_batch_struct(self, b, s):
+        cfg = self.cfg
+        sds, i32 = jax.ShapeDtypeStruct, jnp.int32
+        s_text = s - cfg.n_patches if cfg.family == "vlm" else s
+        out = {"tokens": sds((b, s_text), i32),
+               "targets": sds((b, s_text), i32),
+               "mask": sds((b, s_text), jnp.float32)}
+        if cfg.family == "vlm":
+            out["patches"] = sds((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, s_text, cfg.d_model), jnp.float32)
+        return out
+
+    def _prompt_struct(self, b, s):
+        cfg = self.cfg
+        sds, i32 = jax.ShapeDtypeStruct, jnp.int32
+        s_text = s - cfg.n_patches if cfg.family == "vlm" else s
+        out = {"tokens": sds((b, s_text), i32)}
+        if cfg.family == "vlm":
+            out["patches"] = sds((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            out["frames"] = sds((b, s_text, cfg.d_model), jnp.float32)
+        return out
+
+    def batch_axes(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """Logical axes per input (mirrors input_specs)."""
+        cfg = self.cfg
+        tok = ("batch", "seq")
+        if shape.kind in ("train", "prefill"):
+            out = {k: tok for k in ("tokens", "targets", "mask")}
+            if shape.kind == "prefill":
+                out = {"tokens": tok}
+            if cfg.family == "vlm":
+                out["patches"] = ("batch", "seq", None)
+            if cfg.family == "encdec":
+                out["frames"] = ("batch", "seq", None)
+            return out
+        return {"tokens": ("batch", None), "cache": serve.cache_axes(cfg)}
+
+    # ------------------------------------------------------------- data gen
+
+    def make_batch(self, shape_kind: str, b: int, s: int, seed: int = 0):
+        """Materialize a random batch (smoke tests / examples)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(seed)
+        s_text = s - cfg.n_patches if cfg.family == "vlm" else s
+        toks = rng.integers(0, cfg.vocab, size=(b, s_text), dtype=np.int32)
+        out = {"tokens": jnp.asarray(toks)}
+        if shape_kind == "train":
+            tgt = np.roll(toks, -1, axis=1)
+            out["targets"] = jnp.asarray(tgt)
+            out["mask"] = jnp.ones((b, s_text), jnp.float32)
+        if cfg.family == "vlm":
+            out["patches"] = jnp.asarray(
+                rng.standard_normal((b, cfg.n_patches, cfg.d_model)), jnp.float32)
+        if cfg.family == "encdec":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((b, s_text, cfg.d_model)), jnp.float32)
+        return out
+
+
+def build_model(name: str, reduced: bool = False) -> Model:
+    from repro.configs.base import get_config
+    return Model(get_config(name, reduced=reduced))

@@ -1,0 +1,414 @@
+"""Family assemblies: decoder-only (dense/MoE/VLM), enc-dec, RWKV6, hybrid.
+
+All families expose the same functional surface (see ``api.Model``):
+  loss(params, batch)                    one microbatch, scalar
+  prefill(params, batch) -> (cache, logits_last)
+  decode_step(params, cache, tokens) -> (logits, cache)
+
+Layer parameters are stacked on a leading "layers" axis and applied with
+``lax.scan`` (+ per-block remat) so the HLO stays one-block-sized for 80-layer
+models — dry-run compile time and analyzability depend on this.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import spec as S
+from repro.models.spec import p
+from repro.parallel.sharding import constrain
+
+# ===========================================================================
+# Param specs
+# ===========================================================================
+
+
+def _norm_spec(cfg, d=None):
+    if cfg.norm == "nonparam_ln":
+        return {}
+    return {"scale": p((d or cfg.d_model,), ("embed",), init="ones")}
+
+
+def _attn_specs(cfg) -> Dict[str, Any]:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        "wq": p((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": p((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": p((d, kvh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": p((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = p((h, hd), ("heads", "head_dim"), init="zeros")
+        out["bk"] = p((kvh, hd), ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = p((kvh, hd), ("kv_heads", "head_dim"), init="zeros")
+    return out
+
+
+def _mla_specs(cfg) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": p((d, cfg.q_lora), ("embed", "lora")),
+        "q_norm": {"scale": p((cfg.q_lora,), ("lora",), init="ones")},
+        "w_uq": p((cfg.q_lora, h, dn + dr), ("lora", "heads", "head_dim")),
+        "w_dkv": p((d, cfg.kv_lora), ("embed", "lora")),
+        "kv_norm": {"scale": p((cfg.kv_lora,), ("lora",), init="ones")},
+        "w_kr": p((d, dr), ("embed", "head_dim")),
+        "w_uk": p((cfg.kv_lora, h, dn), ("lora", "heads", "head_dim")),
+        "w_uv": p((cfg.kv_lora, h, dv), ("lora", "heads", "head_dim")),
+        "w_o": p((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlp_specs(cfg, d_ff=None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out = {
+        "w1": p((d, f), ("embed", "mlp")),
+        "w2": p((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_kind == "swiglu":
+        out["w3"] = p((d, f), ("embed", "mlp"))
+    return out
+
+
+def _moe_specs(cfg) -> Dict[str, Any]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    out = {
+        "router": p((d, e), ("embed", "experts")),
+        # 2-D expert sharding: experts over `model`, the CONTRACTED dim of
+        # each matmul over `data` (w1/w3: d; w2: f) so the shard_map
+        # row-parallel path (layers._expert_ffn) contracts shard-locally
+        # and psums activations instead of gathering weights.
+        "w1": p((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w3": p((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w2": p((e, f, d), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.n_shared_experts:
+        out["shared"] = _mlp_specs(cfg, d_ff=cfg.n_shared_experts * f)
+    return out
+
+
+def _dense_block_specs(cfg) -> Dict[str, Any]:
+    blk = {
+        "attn_norm": _norm_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "attn": _mla_specs(cfg) if cfg.use_mla else _attn_specs(cfg),
+    }
+    blk["mlp"] = _moe_specs(cfg) if cfg.family == "moe" else _mlp_specs(cfg)
+    return blk
+
+
+def _rwkv_block_specs(cfg) -> Dict[str, Any]:
+    d, r = cfg.d_model, cfg.rwkv_lora
+    hn, hd = cfg.n_heads, cfg.hd
+    tm = {
+        "lora_A": p((d, r), ("embed", "lora")),
+        "w0": p((d,), ("embed",), init="zeros"),
+        "wlora_A": p((d, r), ("embed", "lora")),
+        "wlora_B": p((r, d), ("lora", "embed"), init="small"),
+        "w_bias": p((d,), ("embed",), init="zeros"),
+        # literal head-count dim (40 for rwkv6-3b): tiny — keep replicated
+        # so it never constrains mesh divisibility
+        "u": p((hn, hd), ("null", "head_dim")),
+        "w_r": p((d, d), ("embed", "heads")),
+        "w_k": p((d, d), ("embed", "heads")),
+        "w_v": p((d, d), ("embed", "heads")),
+        "w_g": p((d, d), ("embed", "heads")),
+        "w_o": p((d, d), ("heads", "embed")),
+        "ln_x": {"scale": p((d,), ("embed",), init="ones")},
+    }
+    for name in ("r", "k", "v", "w", "g"):
+        tm[f"mu_{name}"] = p((d,), ("embed",), init="zeros")
+        tm[f"lora_B_{name}"] = p((r, d), ("lora", "embed"), init="small")
+    cm = {
+        "mu_ck": p((d,), ("embed",), init="zeros"),
+        "mu_cr": p((d,), ("embed",), init="zeros"),
+        "w_ck": p((d, cfg.d_ff), ("embed", "mlp")),
+        "w_cv": p((cfg.d_ff, d), ("mlp", "embed")),
+        "w_cr": p((d, d), ("embed", "heads")),
+    }
+    return {"tm_norm": _norm_spec(cfg), "cm_norm": _norm_spec(cfg),
+            "time_mix": tm, "channel_mix": cm}
+
+
+def _mamba_block_specs(cfg) -> Dict[str, Any]:
+    d, di, hn, nn = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    z = 2 * di + 2 * nn + hn
+    return {
+        "norm": _norm_spec(cfg),
+        "in_proj": p((d, z), ("embed", "mlp")),
+        "conv_w": p((cfg.conv_k, di), ("conv", "mlp"), init="small"),
+        "dt_bias": p((hn,), ("heads",), init="zeros"),
+        "a_log": p((hn,), ("heads",), init="zeros"),
+        "d_skip": p((hn,), ("heads",), init="ones"),
+        "out_norm": {"scale": p((di,), ("mlp",), init="ones")},
+        "out_proj": p((di, d), ("mlp", "embed")),
+    }
+
+
+def _stack(n: int, tree):
+    return S.map_axes(tree, lambda s: S.ParamSpec(
+        (n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype))
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    out: Dict[str, Any] = {
+        "embed": p((v, d), ("vocab", "embed"), init="embed"),
+        "lm_head": p((d, v), ("embed", "vocab")),
+        "final_norm": _norm_spec(cfg),
+    }
+    if cfg.family in ("dense", "moe", "vlm"):
+        out["blocks"] = _stack(cfg.n_layers, _dense_block_specs(cfg))
+    elif cfg.family == "rwkv":
+        out["blocks"] = _stack(cfg.n_layers, _rwkv_block_specs(cfg))
+    elif cfg.family == "hybrid":
+        out["blocks"] = _stack(cfg.n_layers, _mamba_block_specs(cfg))
+        shared_cfg = cfg.replace(family="dense")
+        out["shared_attn"] = _dense_block_specs(shared_cfg)
+    elif cfg.family == "encdec":
+        out["enc_blocks"] = _stack(cfg.n_enc_layers, _dense_block_specs(cfg))
+        dec = _dense_block_specs(cfg)
+        dec["cross_attn"] = _attn_specs(cfg)
+        dec["cross_norm"] = _norm_spec(cfg)
+        out["blocks"] = _stack(cfg.n_layers, dec)
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+# ===========================================================================
+# Block forwards (uniform signature)
+# ===========================================================================
+
+
+def dense_block(lp, x, cfg, *, cache=None, positions=None, causal=True,
+                cross_kv=None, return_kv=False):
+    """Pre-norm transformer block; returns (x, new_cache)."""
+    h = L.apply_norm(lp, "attn_norm", x, cfg.norm)
+    # plain tuples wrap (attn_cache, ...); NamedTuple caches pass through
+    is_plain_tuple = isinstance(cache, tuple) and not hasattr(cache, "_fields")
+    attn_cache = cache[0] if is_plain_tuple else cache
+    if cfg.use_mla:
+        a, new_cache = L.mla_attention(lp["attn"], h, cfg, cache=attn_cache,
+                                       positions=positions)
+    else:
+        a, new_cache = L.gqa_attention(lp["attn"], h, cfg, cache=attn_cache,
+                                       positions=positions, causal=causal)
+    x = x + a
+    if cross_kv is not None:
+        h = L.apply_norm(lp, "cross_norm", x, cfg.norm)
+        c, _ = L.gqa_attention(lp["cross_attn"], h, cfg, kv_source=cross_kv,
+                               causal=False)
+        x = x + c
+    h = L.apply_norm(lp, "mlp_norm", x, cfg.norm)
+    if cfg.family == "moe":
+        m = L.moe_mlp(lp["mlp"], h, cfg)
+    else:
+        m = L.swiglu_mlp(lp["mlp"], h, cfg)
+    x = x + m
+    x = constrain(x, "batch", "seq_sp", None)
+    return x, new_cache
+
+
+def rwkv_block(lp, x, cfg, *, state=None):
+    h = L.apply_norm(lp, "tm_norm", x, cfg.norm)
+    tm_state = None
+    if state is not None:
+        tm_state = L.RWKVState(wkv=state["wkv"], shift_t=state["shift_t"],
+                               shift_c=state["shift_c"])
+    a, (wkv1, shift1) = L.rwkv6_time_mix(lp["time_mix"], h, cfg, state=tm_state)
+    x = x + a
+    h = L.apply_norm(lp, "cm_norm", x, cfg.norm)
+    prev_c = state["shift_c"] if state is not None else None
+    m, shift_c1 = L.rwkv6_channel_mix(lp["channel_mix"], h, cfg, prev=prev_c)
+    x = x + m
+    x = constrain(x, "batch", "seq_sp", None)
+    new_state = None
+    if state is not None:
+        new_state = {"wkv": wkv1, "shift_t": shift1, "shift_c": shift_c1}
+    return x, new_state
+
+
+def mamba_block(lp, x, cfg, *, state=None):
+    h = L.apply_norm(lp, "norm", x, cfg.norm)
+    if isinstance(state, dict):
+        state = L.MambaState(ssm=state["ssm"], conv=state["conv"])
+    m, new_state = L.mamba2_block(lp, h, cfg, state=state)
+    x = x + m
+    x = constrain(x, "batch", "seq_sp", None)
+    return x, new_state
+
+
+# ===========================================================================
+# Stacks (scan over layers)
+# ===========================================================================
+
+
+def _scan_blocks(blocks, x, block_fn, remat=True):
+    f = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(h, lp):
+        h2, _ = f(lp, h)
+        return h2, None
+
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
+def _scan_blocks_cache(blocks, x, caches, block_fn):
+    """Decode/prefill scan: caches stacked on leading layer axis."""
+    def body(h, xs):
+        lp, c = xs
+        h2, c2 = block_fn(lp, h, c)
+        return h2, c2
+
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    return x, new_caches
+
+
+# ===========================================================================
+# Losses
+# ===========================================================================
+
+
+def lm_loss_from_hidden(params, hidden, targets, mask, cfg):
+    """Chunked softmax CE — never materializes (B, S, V) at once."""
+    b, s_len, d = hidden.shape
+    c = L._segment_size(s_len, cfg.loss_chunk)
+    n = s_len // c
+    w = params["lm_head"]
+    dt = cfg.compute_dtype
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        h, t, m = xs                                # (B,c,d) (B,c) (B,c)
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(dt), w.astype(dt))
+        logits = constrain(logits.astype(jnp.float32), "batch", None, "act_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # NOTE(§Perf, refuted): replacing this gather with a where+iota
+        # masked reduction did NOT change the lowered collectives (XLA
+        # already handles the sharded-vocab gather) and cost +1GiB of
+        # materialized iota — keep the straightforward form.
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        loss_sum, tok_sum = carry
+        return (loss_sum + jnp.sum((lse - ll) * m), tok_sum + jnp.sum(m)), None
+
+    resh = lambda z: z.reshape((b, n, c) + z.shape[2:]).swapaxes(0, 1)
+    (loss_sum, tok_sum), _ = jax.lax.scan(
+        chunk, (jnp.float32(0), jnp.float32(0)),
+        (resh(hidden), resh(targets), resh(mask)))
+    return loss_sum / jnp.maximum(tok_sum, 1.0)
+
+
+def logits_last(params, hidden, cfg):
+    """Logits of the final position only (serving)."""
+    dt = cfg.compute_dtype
+    h = hidden[:, -1:]
+    logits = jnp.einsum("bcd,dv->bcv", h.astype(dt),
+                        params["lm_head"].astype(dt))
+    return logits.astype(jnp.float32)
+
+
+# ===========================================================================
+# Family forward passes
+# ===========================================================================
+
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    return x * np.sqrt(cfg.d_model)
+
+
+def decoder_hidden(params, tokens, cfg, *, patches=None, remat=None):
+    """Decoder-only trunk (dense/moe/vlm). Returns final-norm hidden."""
+    x = _embed(params, tokens, cfg)
+    if patches is not None:                         # VLM: prepend patch embeds
+        x = jnp.concatenate([patches.astype(cfg.compute_dtype), x], axis=1)
+    x = constrain(x, "batch", "seq_sp", None)
+    block = functools.partial(dense_block, cfg=cfg)
+    x = _scan_blocks(params["blocks"], x, lambda lp, h: block(lp, h),
+                     remat=cfg.remat if remat is None else remat)
+    return L.apply_norm(params, "final_norm", x, cfg.norm)
+
+
+def rwkv_hidden(params, tokens, cfg, *, remat=None):
+    x = _embed(params, tokens, cfg)
+    x = constrain(x, "batch", "seq_sp", None)
+    x = _scan_blocks(params["blocks"], x,
+                     lambda lp, h: rwkv_block(lp, h, cfg),
+                     remat=cfg.remat if remat is None else remat)
+    return L.apply_norm(params, "final_norm", x, cfg.norm)
+
+
+def hybrid_hidden(params, tokens, cfg, *, remat=None):
+    """Zamba2: groups of Mamba2 layers with a shared attention block between."""
+    x = _embed(params, tokens, cfg)
+    x = constrain(x, "batch", "seq_sp", None)
+    shared_cfg = cfg.replace(family="dense")
+    use_remat = cfg.remat if remat is None else remat
+    every = cfg.shared_attn_every
+    n = cfg.n_layers
+    for g0 in range(0, n, every):
+        g1 = min(g0 + every, n)
+        seg = jax.tree.map(lambda a: a[g0:g1], params["blocks"])
+        x = _scan_blocks(seg, x, lambda lp, h: mamba_block(lp, h, cfg),
+                         remat=use_remat)
+        if g1 < n:
+            blk = functools.partial(dense_block, cfg=shared_cfg)
+            f = jax.checkpoint(lambda lp, h: blk(lp, h)) if use_remat else (
+                lambda lp, h: blk(lp, h))
+            x, _ = f(params["shared_attn"], x)
+    return L.apply_norm(params, "final_norm", x, cfg.norm)
+
+
+def encdec_hidden(params, frames, tokens, cfg, *, remat=None):
+    """Seamless: encoder over frame embeddings, causal decoder w/ cross-attn."""
+    use_remat = cfg.remat if remat is None else remat
+    enc = frames.astype(cfg.compute_dtype)
+    enc = constrain(enc, "batch", "seq_sp", None)
+    enc = _scan_blocks(params["enc_blocks"], enc,
+                       lambda lp, h: dense_block(lp, h, cfg, causal=False),
+                       remat=use_remat)
+    enc = L.apply_norm(params, "final_norm", enc, cfg.norm)
+
+    x = _embed(params, tokens, cfg)
+    x = constrain(x, "batch", "seq_sp", None)
+    block = lambda lp, h: dense_block(lp, h, cfg, cross_kv=enc)
+    x = _scan_blocks(params["blocks"], x, block, remat=use_remat)
+    return L.apply_norm(params, "final_norm", x, cfg.norm)
+
+
+def family_hidden(params, batch, cfg, *, remat=None):
+    if cfg.family in ("dense", "moe"):
+        return decoder_hidden(params, batch["tokens"], cfg, remat=remat)
+    if cfg.family == "vlm":
+        return decoder_hidden(params, batch["tokens"], cfg,
+                              patches=batch["patches"], remat=remat)
+    if cfg.family == "rwkv":
+        return rwkv_hidden(params, batch["tokens"], cfg, remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid_hidden(params, batch["tokens"], cfg, remat=remat)
+    if cfg.family == "encdec":
+        return encdec_hidden(params, batch["frames"], batch["tokens"], cfg,
+                             remat=remat)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(params, batch, cfg):
+    """One-microbatch LM loss."""
+    hidden = family_hidden(params, batch, cfg)
+    targets, mask = batch["targets"], batch["mask"]
+    if cfg.family == "vlm":
+        # hidden includes patch positions; loss only over text positions
+        pad = jnp.zeros((targets.shape[0], cfg.n_patches), targets.dtype)
+        mpad = jnp.zeros((targets.shape[0], cfg.n_patches), mask.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+        mask = jnp.concatenate([mpad, mask], axis=1)
+    return lm_loss_from_hidden(params, hidden, targets, mask, cfg)

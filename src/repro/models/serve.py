@@ -1,0 +1,347 @@
+"""Serving paths: prefill (fill caches at O(S) memory) and decode_step.
+
+Caches are plain dict pytrees stacked on a leading "layers" axis so decode
+scans over (block_params, cache) pairs — one block of HLO regardless of
+depth.  All cache buffers carry logical sharding axes; for batch=1 long-
+context shapes the launch layer swaps rules to shard the cache *sequence*
+axis instead (flash-decode style, DESIGN §5/§6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import lm
+from repro.parallel.sharding import constrain
+
+# ===========================================================================
+# Cache construction
+# ===========================================================================
+
+
+def cache_struct(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the decode cache (also used to allocate)."""
+    ct = cfg.compute_dtype
+    ln, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    sds = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "vlm") or (cfg.family == "moe" and not cfg.use_mla):
+        return {"k": sds((ln, batch, max_len, kvh, hd), ct),
+                "v": sds((ln, batch, max_len, kvh, hd), ct),
+                "length": sds((ln,), jnp.int32)}
+    if cfg.family == "moe" and cfg.use_mla:
+        return {"ckv": sds((ln, batch, max_len, cfg.kv_lora), ct),
+                "k_rope": sds((ln, batch, max_len, cfg.qk_rope_dim), ct),
+                "length": sds((ln,), jnp.int32)}
+    if cfg.family == "rwkv":
+        return {"wkv": sds((ln, batch, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+                "shift_t": sds((ln, batch, cfg.d_model), ct),
+                "shift_c": sds((ln, batch, cfg.d_model), ct)}
+    if cfg.family == "hybrid":
+        n_apps = max(1, (cfg.n_layers - 1) // cfg.shared_attn_every)
+        return {
+            "mamba": {
+                "ssm": sds((ln, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+                "conv": sds((ln, batch, cfg.conv_k - 1, cfg.d_inner), ct)},
+            "attn": {"k": sds((n_apps, batch, max_len, kvh, hd), ct),
+                     "v": sds((n_apps, batch, max_len, kvh, hd), ct),
+                     "length": sds((n_apps,), jnp.int32)},
+        }
+    if cfg.family == "encdec":
+        enc_len = max_len   # encoder length == prefill length for this bench
+        return {"self": {"k": sds((ln, batch, max_len, kvh, hd), ct),
+                         "v": sds((ln, batch, max_len, kvh, hd), ct),
+                         "length": sds((ln,), jnp.int32)},
+                "cross_k": sds((ln, batch, enc_len, kvh, hd), ct),
+                "cross_v": sds((ln, batch, enc_len, kvh, hd), ct)}
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg) -> Dict[str, Any]:
+    """Logical axis names mirroring cache_struct (for shardings)."""
+    kv = ("layers", "cache_batch", "cache_seq", "cache_heads", "head_dim")
+    if cfg.family in ("dense", "vlm") or (cfg.family == "moe" and not cfg.use_mla):
+        return {"k": kv, "v": kv, "length": ("layers",)}
+    if cfg.family == "moe" and cfg.use_mla:
+        return {"ckv": ("layers", "cache_batch", "cache_seq", None),
+                "k_rope": ("layers", "cache_batch", "cache_seq", None),
+                "length": ("layers",)}
+    if cfg.family == "rwkv":
+        return {"wkv": ("layers", "cache_batch", "cache_heads", None, None),
+                "shift_t": ("layers", "cache_batch", None),
+                "shift_c": ("layers", "cache_batch", None)}
+    if cfg.family == "hybrid":
+        return {"mamba": {"ssm": ("layers", "cache_batch", "cache_heads", None, None),
+                          "conv": ("layers", "cache_batch", None, "act_mlp")},
+                "attn": {"k": kv, "v": kv, "length": ("layers",)}}
+    if cfg.family == "encdec":
+        return {"self": {"k": kv, "v": kv, "length": ("layers",)},
+                "cross_k": kv, "cross_v": kv}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_len))
+
+
+# ===========================================================================
+# Prefill
+# ===========================================================================
+
+
+def _pad_time(kv: jax.Array, max_len: int, axis: int = 2) -> jax.Array:
+    pad = [(0, 0)] * kv.ndim
+    pad[axis] = (0, max_len - kv.shape[axis])
+    return jnp.pad(kv, pad)
+
+
+def prefill(params, batch, cfg, max_len: Optional[int] = None):
+    """Process the prompt, return (cache, last-position logits)."""
+    s = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        s += cfg.n_patches
+    b = batch["tokens"].shape[0]
+    t = max_len or (s + cfg.decode_margin)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = lm._embed(params, batch["tokens"], cfg)
+        if cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["patches"].astype(cfg.compute_dtype), x], axis=1)
+        x = constrain(x, "batch", "seq_sp", None)
+
+        def block_kv(lp, h):
+            hh = L.apply_norm(lp, "attn_norm", h, cfg.norm)
+            if cfg.use_mla:
+                a, kv = L.mla_attention(lp["attn"], hh, cfg, return_kv=True)
+            else:
+                a, kv = L.gqa_attention(lp["attn"], hh, cfg, return_kv=True)
+            h = h + a
+            hh = L.apply_norm(lp, "mlp_norm", h, cfg.norm)
+            m = (L.moe_mlp(lp["mlp"], hh, cfg) if cfg.family == "moe"
+                 else L.swiglu_mlp(lp["mlp"], hh, cfg))
+            h = constrain(h + m, "batch", "seq_sp", None)
+            return h, kv
+
+        x, kvs = jax.lax.scan(lambda h, lp: block_kv(lp, h), x,
+                              params["blocks"])
+        hidden = L.apply_norm(params, "final_norm", x, cfg.norm)
+        ln = cfg.n_layers
+        if cfg.use_mla:
+            cache = {"ckv": _pad_time(kvs[0], t),
+                     "k_rope": _pad_time(kvs[1], t),
+                     "length": jnp.full((ln,), s, jnp.int32)}
+        else:
+            cache = {"k": _pad_time(kvs[0], t), "v": _pad_time(kvs[1], t),
+                     "length": jnp.full((ln,), s, jnp.int32)}
+        return cache, lm.logits_last(params, hidden, cfg)
+
+    if cfg.family == "rwkv":
+        x = lm._embed(params, batch["tokens"], cfg)
+        x = constrain(x, "batch", "seq_sp", None)
+        zero = {"wkv": jnp.zeros((b, cfg.n_heads, cfg.hd, cfg.hd), jnp.float32),
+                "shift_t": jnp.zeros((b, cfg.d_model), cfg.compute_dtype),
+                "shift_c": jnp.zeros((b, cfg.d_model), cfg.compute_dtype)}
+
+        def body(h, lp):
+            h2, st = lm.rwkv_block(lp, h, cfg, state=zero)
+            return h2, st
+
+        x, states = jax.lax.scan(lambda h, lp: body(h, lp), x, params["blocks"])
+        hidden = L.apply_norm(params, "final_norm", x, cfg.norm)
+        return states, lm.logits_last(params, hidden, cfg)
+
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, batch, cfg, b, s, t)
+
+    if cfg.family == "encdec":
+        return _encdec_prefill(params, batch, cfg, b, t)
+
+    raise ValueError(cfg.family)
+
+
+def _hybrid_prefill(params, batch, cfg, b, s, t):
+    x = lm._embed(params, batch["tokens"], cfg)
+    x = constrain(x, "batch", "seq_sp", None)
+    shared_cfg = cfg.replace(family="dense")
+    every, n = cfg.shared_attn_every, cfg.n_layers
+    zero = {"ssm": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((b, cfg.conv_k - 1, cfg.d_inner),
+                              cfg.compute_dtype)}
+    m_states, a_caches = [], []
+    for g0 in range(0, n, every):
+        g1 = min(g0 + every, n)
+        seg = jax.tree.map(lambda a: a[g0:g1], params["blocks"])
+
+        def body(h, lp):
+            h2, st = lm.mamba_block(lp, h, cfg, state=zero)
+            return h2, st
+
+        x, sts = jax.lax.scan(lambda h, lp: body(h, lp), x, seg)
+        m_states.append(sts)
+        if g1 < n:
+            hh = L.apply_norm(params["shared_attn"], "attn_norm", x, cfg.norm)
+            a, kv = L.gqa_attention(params["shared_attn"]["attn"], hh,
+                                    shared_cfg, return_kv=True)
+            x = x + a
+            hh = L.apply_norm(params["shared_attn"], "mlp_norm", x, cfg.norm)
+            x = constrain(x + L.swiglu_mlp(params["shared_attn"]["mlp"], hh,
+                                           shared_cfg), "batch", "seq_sp", None)
+            a_caches.append(kv)
+    hidden = L.apply_norm(params, "final_norm", x, cfg.norm)
+    mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *m_states)
+    if isinstance(mamba, L.MambaState):      # normalize to the cache schema
+        mamba = {"ssm": mamba.ssm, "conv": mamba.conv}
+    n_apps = len(a_caches)
+    cache = {"mamba": mamba,
+             "attn": {"k": _pad_time(jnp.stack([kv[0] for kv in a_caches]), t),
+                      "v": _pad_time(jnp.stack([kv[1] for kv in a_caches]), t),
+                      "length": jnp.full((n_apps,), s, jnp.int32)}}
+    return cache, lm.logits_last(params, hidden, cfg)
+
+
+def _encdec_prefill(params, batch, cfg, b, t):
+    """Encode frames; fill cross-attn K/V; empty self cache."""
+    enc = batch["frames"].astype(cfg.compute_dtype)
+    enc = constrain(enc, "batch", "seq_sp", None)
+    enc = lm._scan_blocks(params["enc_blocks"], enc,
+                          lambda lp, h: lm.dense_block(lp, h, cfg, causal=False),
+                          remat=False)
+    enc = L.apply_norm(params, "final_norm", enc, cfg.norm)
+
+    def cross_kv(lp):
+        dt = cfg.compute_dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"].astype(dt))
+        return k, v
+
+    _, (ck, cv) = jax.lax.scan(
+        lambda _, lp: (None, cross_kv(lp)), None, params["blocks"])
+    ln, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    cache = {"self": {"k": jnp.zeros((ln, b, t, kvh, hd), cfg.compute_dtype),
+                      "v": jnp.zeros((ln, b, t, kvh, hd), cfg.compute_dtype),
+                      "length": jnp.zeros((ln,), jnp.int32)},
+             "cross_k": ck, "cross_v": cv}
+    bos = jnp.zeros((b, 1), jnp.int32)
+    logits, cache = decode_step(params, cache, bos, cfg)
+    return cache, logits
+
+
+# ===========================================================================
+# Decode
+# ===========================================================================
+
+
+def decode_step(params, cache, tokens, cfg):
+    """One decode step: tokens (B,1) → (logits (B,1,V), new cache)."""
+    x = lm._embed(params, tokens, cfg)
+    x = constrain(x, "batch", None, None)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            lp, c = xs
+            pos = c["length"][None, None] + jnp.zeros((1, 1), jnp.int32)
+            if cfg.use_mla:
+                kv = L.MLACache(c["ckv"], c["k_rope"], c["length"])
+                h2, nc = lm.dense_block(lp, h, cfg, cache=kv, positions=pos)
+                c2 = {"ckv": nc.ckv, "k_rope": nc.k_rope, "length": nc.length}
+            else:
+                kv = L.KVCache(c["k"], c["v"], c["length"])
+                h2, nc = lm.dense_block(lp, h, cfg, cache=kv, positions=pos)
+                c2 = {"k": nc.k, "v": nc.v, "length": nc.length}
+            return h2, c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family == "rwkv":
+        def body(h, xs):
+            lp, st = xs
+            h2, st2 = lm.rwkv_block(lp, h, cfg, state=st)
+            return h2, st2
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(params, cache, x, cfg)
+
+    elif cfg.family == "encdec":
+        def body(h, xs):
+            lp, c = xs
+            pos = c["length"][None, None] + jnp.zeros((1, 1), jnp.int32)
+            kv = L.KVCache(c["k"], c["v"], c["length"])
+            hh = L.apply_norm(lp, "attn_norm", h, cfg.norm)
+            a, nc = L.gqa_attention(lp["attn"], hh, cfg, cache=kv, positions=pos)
+            h = h + a
+            hh = L.apply_norm(lp, "cross_norm", h, cfg.norm)
+            ca = _cross_decode(lp["cross_attn"], hh, c["ck"], c["cv"], cfg)
+            h = h + ca
+            hh = L.apply_norm(lp, "mlp_norm", h, cfg.norm)
+            h = h + L.swiglu_mlp(lp["mlp"], hh, cfg)
+            return h, {"k": nc.k, "v": nc.v, "length": nc.length,
+                       "ck": c["ck"], "cv": c["cv"]}
+
+        merged = dict(cache["self"])
+        merged["ck"], merged["cv"] = cache["cross_k"], cache["cross_v"]
+        x, nc = jax.lax.scan(body, x, (params["blocks"], merged))
+        new_cache = {"self": {"k": nc["k"], "v": nc["v"], "length": nc["length"]},
+                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    else:
+        raise ValueError(cfg.family)
+
+    hidden = L.apply_norm(params, "final_norm", x, cfg.norm)
+    return lm.logits_last(params, hidden, cfg), new_cache
+
+
+def _cross_decode(ap, h, ck, cv, cfg):
+    """Single-step cross-attention against precomputed K/V."""
+    dt = cfg.compute_dtype
+    hn, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", h.astype(dt), ap["wq"].astype(dt))
+    krep = L._repeat_kv(ck.astype(dt), hn // kvh)
+    vrep = L._repeat_kv(cv.astype(dt), hn // kvh)
+    logits = jnp.einsum("bshk,bthk->bhst", q, krep) / np.sqrt(hd)
+    p_att = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(dt)
+    out = jnp.einsum("bhst,bthk->bshk", p_att, vrep)
+    return jnp.einsum("bshk,hkd->bsd", out, ap["wo"].astype(dt))
+
+
+def _hybrid_decode(params, cache, x, cfg):
+    shared_cfg = cfg.replace(family="dense")
+    every, n = cfg.shared_attn_every, cfg.n_layers
+    new_m, new_a = [], []
+    gi = 0
+    for g0 in range(0, n, every):
+        g1 = min(g0 + every, n)
+        seg = jax.tree.map(lambda a: a[g0:g1], params["blocks"])
+        seg_cache = jax.tree.map(lambda a: a[g0:g1], cache["mamba"])
+
+        def body(h, xs):
+            lp, st = xs
+            h2, st2 = lm.mamba_block(lp, h, cfg, state=st)
+            return h2, st2
+
+        x, sts = jax.lax.scan(body, x, (seg, seg_cache))
+        new_m.append(sts)
+        if g1 < n:
+            ac = jax.tree.map(lambda a: a[gi], cache["attn"])
+            kv = L.KVCache(ac["k"], ac["v"], ac["length"])
+            pos = ac["length"][None, None] + jnp.zeros((1, 1), jnp.int32)
+            hh = L.apply_norm(params["shared_attn"], "attn_norm", x, cfg.norm)
+            a, nc = L.gqa_attention(params["shared_attn"]["attn"], hh,
+                                    shared_cfg, cache=kv, positions=pos)
+            x = x + a
+            hh = L.apply_norm(params["shared_attn"], "mlp_norm", x, cfg.norm)
+            x = x + L.swiglu_mlp(params["shared_attn"]["mlp"], hh, shared_cfg)
+            new_a.append({"k": nc.k, "v": nc.v, "length": nc.length})
+            gi += 1
+    mamba = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_m)
+    attn = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_a)
+    return x, {"mamba": mamba, "attn": attn}

@@ -1,0 +1,80 @@
+"""Parameter specification machinery.
+
+Models declare parameters as trees of ``ParamSpec`` (shape + *logical* axis
+names + init).  From one spec tree we derive:
+
+  * ``abstract(tree)``   — ShapeDtypeStruct tree (dry-run lowering, no alloc)
+  * ``initialize(tree)`` — materialized arrays (smoke tests / examples)
+  * ``partition_specs``  — PartitionSpec tree via the active sharding rules
+
+Logical axes (resolved by ``repro.parallel.sharding`` rules):
+  embed, vocab, heads, kv_heads, head_dim, mlp, experts, layers, seq,
+  batch, state, conv, lora, null
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def p(shape, axes, init="normal", scale=0.02, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree,
+        is_leaf=is_spec)
+
+
+def initialize(tree, key: jax.Array):
+    """Materialize parameters (reduced configs only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        elif spec.init in ("normal", "embed"):
+            arr = (jax.random.normal(k, spec.shape, jnp.float32)
+                   * spec.scale).astype(spec.dtype)
+        elif spec.init == "small":
+            arr = (jax.random.normal(k, spec.shape, jnp.float32)
+                   * (spec.scale * 0.1)).astype(spec.dtype)
+        else:
+            raise ValueError(spec.init)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def map_axes(tree, fn: Callable[[ParamSpec], Any]):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)

@@ -1,0 +1,4 @@
+"""Optimizers, schedules, gradient clipping and compression."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedule import Schedule, cosine_schedule

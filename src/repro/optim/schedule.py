@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Schedule:
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+    return f
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)

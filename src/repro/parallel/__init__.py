@@ -1,0 +1,2 @@
+"""Distribution: sharding rules, meshes, pipeline parallelism."""
+from repro.parallel import sharding

@@ -1,0 +1,197 @@
+"""Logical-axis sharding: rules mapping model axis names → mesh axes.
+
+MaxText-style: model code annotates parameters and activations with *logical*
+axis names; a rule table (swappable per experiment — this is the main
+hillclimbing knob) resolves them to mesh axes.  With no active mesh (CPU
+smoke tests) every constraint is the identity.
+
+Default layout (single pod, mesh ``(data=16, model=16)``):
+  * weights: ``embed → data`` (FSDP/ZeRO-3 dimension) × ``heads/mlp/vocab/
+    experts → model`` (tensor/expert dimension) ⇒ params+opt state sharded
+    over all 256 chips.
+  * activations: ``batch → (pod, data)``; residual-stream ``seq → model``
+    (sequence parallelism, so remat-saved activations are 1/16 per chip).
+Multi-pod default keeps ``pod`` on batch (cross-pod DP); pipeline mode
+reassigns it (see parallel/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Logical axis -> mesh axis (or tuple of mesh axes) or None (replicated).
+Rules = Dict[str, MeshAxes]
+
+# fmt: off
+DEFAULT_RULES: Rules = {
+    # parameter axes
+    "embed":     "data",     # FSDP shard dim of weight matrices
+    "embed_out": None,       # second embed dim where both appear (w2)
+    "vocab":     "model",
+    "heads":     "model",
+    "kv_heads":  "model",
+    "head_dim":  None,
+    "mlp":       "model",
+    "experts":   "model",    # expert parallelism
+    "expert_mlp": None,
+    "expert_ffn": "data",    # w2 contraction dim (row-parallel over data)
+    "layers":    None,
+    "state":     None,
+    "conv":      None,
+    "lora":      "data",     # MLA/RWKV low-rank dims: FSDP-shard (dedup'd
+                             # to None when "data" already used by "embed")
+    "null":      None,
+    # activation axes
+    "batch":     ("pod", "data"),
+    "seq":       None,
+    "seq_sp":    "model",    # residual stream between blocks (SP)
+    "kv_seq":    None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv":    "model",
+    "act_mlp":   "model",
+    "act_experts": "model",
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_heads": "model",
+}
+# fmt: on
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Optional[Mesh] = None
+    rules: Rules = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    exclude: frozenset = frozenset()   # mesh axes constraints must not use
+                                       # (e.g. the manual axis inside a
+                                       # partially-manualized shard_map)
+
+
+_ctx = threading.local()
+
+
+def _get() -> ShardingContext:
+    if not hasattr(_ctx, "v"):
+        _ctx.v = ShardingContext()
+    return _ctx.v
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None,
+             exclude: frozenset = frozenset()):
+    """Activate mesh+rules for model code executed inside (incl. tracing)."""
+    prev = _get()
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _ctx.v = ShardingContext(mesh=mesh, rules=merged, exclude=frozenset(exclude))
+    try:
+        yield _ctx.v
+    finally:
+        _ctx.v = prev
+
+
+@contextlib.contextmanager
+def exclude_axes(*axes: str):
+    """Within a partially-manualized shard_map body, constraints must not
+    reference the manual axes — drop them from rule resolution."""
+    prev = _get()
+    _ctx.v = ShardingContext(mesh=prev.mesh, rules=dict(prev.rules),
+                             exclude=prev.exclude | frozenset(axes))
+    try:
+        yield _ctx.v
+    finally:
+        _ctx.v = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _get().mesh
+
+
+def _resolve_axis(name: Optional[str], rules: Rules, mesh: Mesh,
+                  exclude: frozenset = frozenset()) -> MeshAxes:
+    if name is None:
+        return None
+    axes = rules.get(name)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names and axes not in exclude \
+            else None
+    present = tuple(a for a in axes
+                    if a in mesh.axis_names and a not in exclude)
+    return present if present else None
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...]) -> P:
+    """Resolve logical axes to a PartitionSpec under the active context."""
+    ctx = _get()
+    if ctx.mesh is None:
+        return P()
+    resolved = []
+    used = set()
+    for name in axes:
+        r = _resolve_axis(name, ctx.rules, ctx.mesh, ctx.exclude)
+        # a mesh axis may appear only once in a PartitionSpec
+        if isinstance(r, tuple):
+            r = tuple(a for a in r if a not in used) or None
+        if isinstance(r, str) and r in used:
+            r = None
+        if r is not None:
+            used.update(r if isinstance(r, tuple) else (r,))
+        resolved.append(r)
+    return P(*resolved)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without mesh)."""
+    ctx = _get()
+    if ctx.mesh is None:
+        return x
+    spec = logical_to_pspec(tuple(axes))
+    mesh = ctx.mesh
+    # inside a (partially-manual) shard_map the constraint must carry the
+    # ambient abstract mesh — its axis types differ from the concrete mesh
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names == mesh.axis_names and \
+                any("Manual" in str(t) for t in am.axis_types):
+            mesh = am
+    except Exception:      # noqa: BLE001 — older jax: no abstract mesh API
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_axes(x: jax.Array, axes) -> jax.Array:
+    return constrain(x, *axes)
+
+
+def named_sharding(axes: Tuple[Optional[str], ...]) -> Optional[NamedSharding]:
+    ctx = _get()
+    if ctx.mesh is None:
+        return None
+    return NamedSharding(ctx.mesh, logical_to_pspec(axes))
+
+
+def tree_partition_specs(spec_tree):
+    """ParamSpec tree -> PartitionSpec tree under the active context."""
+    from repro.models import spec as pspec_mod
+    return pspec_mod.map_axes(
+        spec_tree, lambda s: logical_to_pspec(s.axes))
+
+
+def tree_named_shardings(spec_tree):
+    ctx = _get()
+    assert ctx.mesh is not None, "tree_named_shardings requires an active mesh"
+    from repro.models import spec as pspec_mod
+    return pspec_mod.map_axes(
+        spec_tree,
+        lambda s: NamedSharding(ctx.mesh, logical_to_pspec(s.axes)))

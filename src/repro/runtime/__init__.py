@@ -1,0 +1,4 @@
+"""Training runtime: train step, trainer loop, fault tolerance."""
+from repro.runtime.train_step import (TrainConfig, TrainState, make_train_step,
+                                      init_train_state, abstract_train_state)
+from repro.runtime.trainer import Trainer, SimulatedFailure

@@ -1,0 +1,87 @@
+"""Straggler detection and mitigation.
+
+Two mechanisms, both enabled by *stateless* substrate layers:
+
+1. **Data-shard reassignment** — per-step host wall times are tracked with an
+   EWMA; a host slower than ``threshold ×`` the median is marked a straggler
+   and its data-shard rows are reassigned to the fastest host.  Because the
+   data pipeline is a pure function of (step, row), the fast host regenerates
+   the straggler's rows locally — zero data movement (data/pipeline.py).
+
+2. **Chunk-granular peer fetch** — on restore, a slow-to-fetch host's client
+   may fetch missing chunks from *peer* clients instead of the registry
+   (BitTorrent-style), chunk-granular thanks to the CDMT index: peers serve
+   any chunk whose fingerprint they hold, regardless of which version it
+   came from.  (``peer_fetch`` below; used by runtime/fault_tolerance.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pushpull import Client
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    threshold: float = 1.8        # × median EWMA step time
+    ewma: float = 0.7
+    min_history: int = 3
+
+
+class StragglerTracker:
+    """EWMA step-time tracker → reassignment map for the data pipeline."""
+
+    def __init__(self, n_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.n_hosts = n_hosts
+        self.times = np.zeros(n_hosts)
+        self.count = 0
+
+    def record_step(self, host_times: Sequence[float]) -> None:
+        t = np.asarray(host_times, dtype=float)
+        if self.count == 0:
+            self.times = t
+        else:
+            self.times = self.cfg.ewma * self.times + (1 - self.cfg.ewma) * t
+        self.count += 1
+
+    def stragglers(self) -> List[int]:
+        if self.count < self.cfg.min_history:
+            return []
+        med = float(np.median(self.times))
+        return [i for i, t in enumerate(self.times)
+                if t > self.cfg.threshold * med]
+
+    def reassignment(self) -> Dict[int, int]:
+        """straggler host → replacement host (fastest non-straggler)."""
+        slow = set(self.stragglers())
+        if not slow:
+            return {}
+        fast_order = [h for h in np.argsort(self.times) if h not in slow]
+        if not fast_order:
+            return {}
+        out: Dict[int, int] = {}
+        for i, h in enumerate(sorted(slow)):
+            out[h] = int(fast_order[i % len(fast_order)])
+        return out
+
+
+def peer_fetch(client: Client, peers: Sequence[Client],
+               fps: Sequence[bytes]) -> Dict[bytes, List[int]]:
+    """Fetch missing chunks from peer chunk stores; returns fp → serving
+    peer indices (for accounting).  Falls through silently for chunks no
+    peer holds — the caller then hits the registry for the remainder."""
+    served: Dict[bytes, List[int]] = {}
+    for fp in fps:
+        if client.store.chunks.has(fp):
+            continue
+        for pi, peer in enumerate(peers):
+            if peer.store.chunks.has(fp):
+                client.store.chunks.put(fp, peer.store.chunks.get(fp))
+                served.setdefault(fp, []).append(pi)
+                break
+    return served

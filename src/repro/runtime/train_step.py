@@ -1,0 +1,139 @@
+"""The jitted train step: microbatch grad accumulation + AdamW.
+
+One ``train_step(state, batch)`` where ``batch`` arrays carry a leading
+``(n_micro, micro_batch, ...)`` layout.  Grad accumulation is a ``lax.scan``
+over microbatches:
+
+* activation memory is bounded by ONE microbatch (with per-block remat this
+  is what fits 32k-token training shapes in HBM);
+* under FSDP sharding XLA hoists the parameter all-gathers that are
+  loop-invariant — or re-gathers per microbatch when HBM pressure demands —
+  and the gradient reduce-scatter overlaps the next microbatch's compute
+  (the compute/comm-overlap trick, DESIGN.md §5).
+
+The optimizer update is sharded identically to the parameters (ZeRO-3
+style): m/v PartitionSpecs reuse the param rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, apply_updates,
+                         clip_by_global_norm, cosine_schedule)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 1                  # grad-accumulation microbatches
+    adamw: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_compression: float = 1.0     # <1 = top-k density (optim/compression)
+    accum_dtype: Any = jnp.float32    # grad-accumulator dtype (bf16 halves
+                                      # the largest temp at 200B+ scale)
+    # Cast f32 masters → bf16 once (sharding-annotated) hoping FSDP gathers
+    # move half-width tensors.  REFUTED on XLA:CPU SPMD (EXPERIMENTS §Perf):
+    # the partitioner still gathers f32 and converts after, and the bf16
+    # copy costs ~1GB of temps — keep off; revisit with explicit shard_map
+    # FSDP or on real TPU toolchains.
+    cast_params_once: bool = False
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def init_train_state(model: Model, key: jax.Array, tc: TrainConfig) -> TrainState:
+    params = model.init_params(key)
+    opt = adamw_init(params, tc.adamw)
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model: Model, tc: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct train state (dry-run / restore unflattening)."""
+    params = model.abstract_params()
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, tc.adamw.state_dtype)
+    opt = {"m": jax.tree.map(sds, params), "v": jax.tree.map(sds, params),
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def reshape_batch_for_accum(batch: Dict[str, Any], n_micro: int) -> Dict[str, Any]:
+    """(B, ...) → (n_micro, B/n_micro, ...)."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return {k: r(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch`` arrays: leading (n_micro, micro_batch).  The function is pure
+    and jit/pjit-able; all sharding comes from in/out shardings plus the
+    logical-axis constraints inside the model.
+    """
+    cfg = model.cfg
+    schedule = cosine_schedule(tc.adamw.lr, tc.warmup_steps, tc.total_steps)
+
+    def cast_sharded(params):
+        """f32 masters → compute dtype once, re-annotated with their param
+        shardings so downstream FSDP gathers move the HALF-width tensors."""
+        from repro.models import spec as S
+        from repro.parallel import sharding as sh
+        leaves_p, tdef = jax.tree.flatten(params)
+        leaves_s = jax.tree.leaves(model.specs, is_leaf=S.is_spec)
+        out = []
+        for p, s in zip(leaves_p, leaves_s):
+            if p.dtype == jnp.float32 and p.ndim >= 2:
+                out.append(sh.constrain_axes(p.astype(cfg.compute_dtype),
+                                             s.axes))
+            else:
+                out.append(p)
+        return jax.tree.unflatten(tdef, out)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        masters = state.params
+        params = cast_sharded(masters) if tc.cast_params_once else masters
+
+        def micro(carry, mb):
+            loss_sum, grad_sum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_sum = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                    grad_sum, grads)
+            return (loss_sum + loss, grad_sum), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, tc.accum_dtype), masters)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            micro, (jnp.float32(0.0), zero_grads), batch)
+        grads = jax.tree.map(lambda g: g / tc.n_micro, grad_sum)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.adamw.grad_clip)
+        lr = schedule(state.step)
+        # updates apply to the f32 MASTERS (mixed-precision discipline)
+        updates, new_opt = adamw_update(grads, state.opt, masters, tc.adamw,
+                                        lr=lr)
+        new_params = apply_updates(masters, updates)
+        metrics = {
+            "loss": loss_sum / tc.n_micro,
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,126 @@
+"""The fault-tolerant training driver.
+
+Responsibilities:
+  * jit the train step (with shardings when a mesh is active),
+  * drive the data pipeline (host-sharded, straggler-aware),
+  * periodic CDMT-dedup checkpoints (sync or async),
+  * crash recovery: on (re)start, restore the latest registry version and
+    resume — the data pipeline is stateless so step k reproduces exactly;
+  * failure injection for tests (``fail_at_step``).
+
+On a real cluster each process runs one Trainer with
+``jax.distributed.initialize``; here host parallelism is simulated
+faithfully at the protocol level (per-host clients, per-host data shards)
+while the device math runs on the local mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, DedupCheckpointManager
+from repro.core.registry import Registry
+from repro.data import DataConfig, TokenPipeline
+from repro.models.api import Model
+from repro.runtime.train_step import (TrainConfig, TrainState,
+                                      abstract_train_state, init_train_state,
+                                      make_train_step, reshape_batch_for_accum)
+from repro.runtime.straggler import StragglerConfig, StragglerTracker
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected failure for fault-tolerance tests."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt: CheckpointConfig = dataclasses.field(default_factory=CheckpointConfig)
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    straggler: StragglerConfig = dataclasses.field(default_factory=StragglerConfig)
+    fail_at_step: Optional[int] = None      # failure injection (tests)
+
+
+class Trainer:
+    def __init__(self, model: Model, data_cfg: DataConfig,
+                 cfg: TrainerConfig, registry: Optional[Registry] = None,
+                 host: int = 0):
+        self.model = model
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.host = host
+        self.pipeline = TokenPipeline(data_cfg)
+        self.registry = registry if registry is not None else Registry()
+        self.ckpt = DedupCheckpointManager(self.registry, cfg.ckpt)
+        self.tracker = StragglerTracker(data_cfg.n_hosts, cfg.straggler)
+        self.reassignment: Dict[int, int] = {}
+        self.metrics_log: List[Dict[str, float]] = []
+        self._step_fn = None
+
+    # ------------------------------------------------------------------ setup
+
+    def _train_step(self):
+        if self._step_fn is None:
+            step = make_train_step(self.model, self.cfg.train)
+            self._step_fn = jax.jit(step, donate_argnums=(0,))
+        return self._step_fn
+
+    def init_or_restore(self, seed: int = 0) -> TrainState:
+        """Fresh init, or resume from the latest registry checkpoint."""
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return init_train_state(self.model, jax.random.PRNGKey(seed),
+                                    self.cfg.train)
+        abstract = abstract_train_state(self.model, self.cfg.train)
+        state_np, step, _ = self.ckpt.restore(abstract, latest)
+        state = jax.tree.map(jnp.asarray, state_np)
+        return TrainState(*state)
+
+    # ------------------------------------------------------------------ train
+
+    def _host_batch(self, step: int) -> Dict[str, np.ndarray]:
+        rows = self.pipeline.shard_rows(step, self.host, self.reassignment)
+        return self.pipeline.batch_for(step, self.host, rows=rows)
+
+    def run(self, state: Optional[TrainState] = None,
+            on_step: Optional[Callable[[int, Dict[str, float]], None]] = None
+            ) -> TrainState:
+        if state is None:
+            state = self.init_or_restore()
+        step_fn = self._train_step()
+        tc = self.cfg.train
+        start = int(state.step)
+        for step in range(start, self.cfg.total_steps):
+            if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.time()
+            batch = self._host_batch(step)
+            batch = reshape_batch_for_accum(batch, tc.n_micro)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_s"] = time.time() - t0
+            self.metrics_log.append(metrics)
+            if on_step:
+                on_step(step, metrics)
+            if (step + 1) % self.cfg.ckpt.every_steps == 0:
+                self.ckpt.save(jax.tree.map(np.asarray, state), step + 1,
+                               block=not self.cfg.ckpt.async_push)
+        self.ckpt.wait()
+        return state
+
+    # --------------------------------------------------------- straggler hook
+
+    def observe_host_times(self, host_times: List[float]) -> Dict[int, int]:
+        """Feed per-host step times (from the cluster control plane); returns
+        the active data-shard reassignment map."""
+        self.tracker.record_step(host_times)
+        self.reassignment = self.tracker.reassignment()
+        return self.reassignment

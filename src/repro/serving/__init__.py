@@ -1,0 +1,2 @@
+"""Serving runtime: batched prefill/decode over the model serve paths."""
+from repro.serving.engine import ServeConfig, ServingEngine, Request

@@ -1,0 +1,109 @@
+"""Batched serving engine.
+
+Static-batch engine over the model's ``prefill``/``decode_step``:
+requests are grouped into fixed-size batches (padding short prompts),
+prefilled once, then decoded step-by-step with greedy or temperature
+sampling.  Weight distribution to serving hosts uses the CDMT pull path
+(examples/serve_weights.py) — a new model version moves only changed chunks.
+
+This is deliberately the *simple, correct* engine: the dry-run shapes
+(decode_32k, long_500k) exercise the sharded decode step itself via
+launch/dryrun.py; this engine exists so examples and tests can run real
+token loops on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray               # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0         # 0 = greedy
+    # filled by the engine
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    max_len: int = 512
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=cfg.max_len))
+
+    def _pad_prompts(self, reqs: List[Request]) -> Tuple[np.ndarray, np.ndarray]:
+        maxlen = max(len(r.prompt) for r in reqs)
+        b = len(reqs)
+        toks = np.zeros((b, maxlen), np.int32)
+        lens = np.zeros((b,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, maxlen - len(r.prompt):] = r.prompt    # left-pad
+            lens[i] = len(r.prompt)
+        return toks, lens
+
+    def serve_batch(self, reqs: List[Request]) -> List[Request]:
+        """Prefill + decode one batch of requests to completion."""
+        assert len(reqs) <= self.cfg.batch_size
+        t0 = time.time()
+        cfg_m = self.model.cfg
+        toks, _ = self._pad_prompts(reqs)
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg_m.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (len(reqs), cfg_m.n_patches, cfg_m.d_model), jnp.float32)
+        if cfg_m.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (len(reqs), toks.shape[1], cfg_m.d_model), jnp.float32)
+        cache, logits = self._prefill(self.params, batch)
+
+        max_new = max(r.max_new_tokens for r in reqs)
+        outs = np.zeros((len(reqs), max_new), np.int32)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        for t in range(max_new):
+            if reqs[0].temperature > 0:
+                key, sk = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sk, jnp.asarray(logits[:, -1]) / reqs[0].temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            outs[:, t] = np.asarray(nxt)[:, 0]
+            logits, cache = self._decode(self.params, cache, nxt)
+        dt = time.time() - t0
+        for i, r in enumerate(reqs):
+            r.output = outs[i, :r.max_new_tokens]
+            r.latency_s = dt
+        return reqs
+
+    def serve(self, reqs: List[Request]) -> Dict[str, float]:
+        """Serve all requests in batches; returns throughput metrics."""
+        t0 = time.time()
+        done: List[Request] = []
+        for i in range(0, len(reqs), self.cfg.batch_size):
+            done.extend(self.serve_batch(reqs[i:i + self.cfg.batch_size]))
+        wall = time.time() - t0
+        new_tokens = sum(r.max_new_tokens for r in done)
+        return {"requests": len(done), "wall_s": wall,
+                "tokens_per_s": new_tokens / wall if wall else 0.0}

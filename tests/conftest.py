@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the dry-run (and only it) forces
+# 512 placeholder devices in its own entrypoint.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,161 @@
+"""CDMT (Alg. 1 build, Alg. 2 compare) and the chunk-shift contrast vs
+plain Merkle trees — the paper's core claims as tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cdc, hashing, merkle
+from repro.core.cdmt import (CDMT, CDMTParams, common_node_ratio, compare,
+                             comparison_ratio, diff_chunks)
+
+P = CDMTParams(window=4, rule_bits=2)
+
+
+def _fps(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [hashing.chunk_fingerprint(rng.bytes(32)) for _ in range(n)]
+
+
+class TestBuild:
+    def test_empty(self):
+        t = CDMT.build([], P)
+        assert t.root is None and t.n_nodes() == 0
+
+    def test_single_leaf(self):
+        fps = _fps(1)
+        t = CDMT.build(fps, P)
+        assert t.root == fps[0]
+
+    def test_all_leaves_present(self):
+        fps = _fps(200)
+        t = CDMT.build(fps, P)
+        assert t.leaf_fps() == fps
+        assert all(fp in t.nodes for fp in fps)
+
+    def test_root_depends_on_content(self):
+        a = CDMT.build(_fps(50, seed=1), P)
+        b = CDMT.build(_fps(50, seed=2), P)
+        assert a.root != b.root
+
+    def test_deterministic(self):
+        fps = _fps(100, seed=3)
+        assert CDMT.build(fps, P).root == CDMT.build(fps, P).root
+
+    def test_expected_fanout(self):
+        """rule_bits=2 ⇒ ~1 parent per 4 children ⇒ total nodes ≤ (4/3)N + h
+        (the paper's O(N) complexity argument)."""
+        fps = _fps(3000, seed=4)
+        t = CDMT.build(fps, P)
+        assert t.n_nodes() < 1.6 * len(fps)
+
+    def test_low_height(self):
+        fps = _fps(4096, seed=5)
+        t = CDMT.build(fps, P)
+        assert t.height() <= 16
+
+
+class TestCompare:
+    def test_identical_trees_one_comparison(self):
+        fps = _fps(128)
+        a, b = CDMT.build(fps, P), CDMT.build(fps, P)
+        missing, comps = compare(a, b)
+        assert missing == set() and comps == 1    # root matches, prune all
+
+    def test_fresh_pull(self):
+        fps = _fps(64)
+        t = CDMT.build(fps, P)
+        missing, comps = compare(None, t)
+        assert missing == set(fps) and comps == 0
+
+    def test_detects_exactly_the_new_leaves(self):
+        fps = _fps(256, seed=6)
+        new = _fps(3, seed=7)
+        edited = fps[:100] + new + fps[100:]
+        a = CDMT.build(fps, P)
+        b = CDMT.build(edited, P)
+        missing = diff_chunks(a, b)
+        assert set(new) <= missing
+        # locality: only the edit path may be extra
+        assert len(missing) <= len(new) + 4 * P.window
+
+    def test_comparisons_sublinear_for_similar_trees(self):
+        fps = _fps(2048, seed=8)
+        edited = list(fps)
+        edited[1024] = hashing.chunk_fingerprint(b"edit")
+        a, b = CDMT.build(fps, P), CDMT.build(edited, P)
+        assert comparison_ratio(a, b) < 0.2       # Fig. 9 regime
+
+
+class TestChunkShiftResistance:
+    """Fig. 8: an insertion that changes the chunk COUNT renames nearly every
+    internal node of a plain Merkle tree, but leaves most CDMT nodes intact."""
+
+    def _trees(self, n=512, insert_at=200, seed=9):
+        fps = _fps(n, seed=seed)
+        shifted = fps[:insert_at] + _fps(1, seed=99) + fps[insert_at:]
+        return fps, shifted
+
+    def test_cdmt_resists_chunk_shift(self):
+        fps, shifted = self._trees()
+        a, b = CDMT.build(fps, P), CDMT.build(shifted, P)
+        assert common_node_ratio(a, b) > 0.9
+
+    def test_merkle_suffers_chunk_shift(self):
+        fps, shifted = self._trees()
+        ma, mb = merkle.MerkleTree.build(fps, k=4), merkle.MerkleTree.build(shifted, k=4)
+        merkle_ratio = merkle.common_node_ratio(ma, mb)
+        a, b = CDMT.build(fps, P), CDMT.build(shifted, P)
+        cdmt_ratio = common_node_ratio(a, b)
+        # leaves are shared either way (diluting the ratio); internal nodes
+        # diverge only in Merkle — the internal-only contrast is below
+        assert cdmt_ratio > merkle_ratio + 0.1
+
+    def test_merkle_internal_nodes_nearly_all_change(self):
+        # insert near the FRONT: the paper (Sec. III-C) — every internal node
+        # to the right of the shift changes, so almost nothing survives
+        fps, shifted = self._trees(insert_at=40)
+        ma = merkle.MerkleTree.build(fps, k=4)
+        mb = merkle.MerkleTree.build(shifted, k=4)
+        internal_a = ma.node_set() - set(fps)
+        internal_b = mb.node_set() - set(shifted)
+        shared = internal_a & internal_b
+        assert len(shared) / len(internal_b) < 0.2
+        # CDMT on the same shift keeps most internal nodes
+        a, b = CDMT.build(fps, P), CDMT.build(shifted, P)
+        int_a = a.node_set() - set(fps)
+        int_b = b.node_set() - set(shifted)
+        assert len(int_a & int_b) / len(int_b) > 0.8
+
+
+class TestAuthenticationPath:
+    def test_path_verifies_leaf(self):
+        fps = _fps(300, seed=10)
+        t = CDMT.build(fps, P)
+        path = t.authentication_path(fps[17])
+        assert all(p in t.nodes for p in path)
+        assert len(path) < len(fps)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), seed=st.integers(0, 50))
+def test_property_build_covers_all_leaves(n, seed):
+    fps = _fps(n, seed)
+    t = CDMT.build(fps, P)
+    missing, _ = compare(None, t)
+    assert missing == set(fps)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 300), seed=st.integers(0, 50),
+       k=st.integers(0, 7))
+def test_property_compare_finds_all_new(n, seed, k):
+    fps = _fps(n, seed)
+    new = _fps(k, seed + 1000)
+    pos = n // 2
+    edited = fps[:pos] + new + fps[pos:]
+    a, b = CDMT.build(fps, P), CDMT.build(edited, P)
+    missing, _ = compare(a, b)
+    # Alg. 2 must never MISS a chunk the client lacks (superset is fine —
+    # extra chunks only cost bandwidth, missing ones break reconstruction)
+    assert set(new) <= missing | set(fps)
