@@ -1,0 +1,165 @@
+"""Delivery-stack scale benchmark: N concurrent clients upgrading through a
+``RegistryServer``, registry-only vs swarm mode.
+
+Each client is warm (provisioned with an older version of the app) and pulls
+the latest version during a **rolling upgrade**: clients arrive in waves of
+``n/4`` (concurrent within a wave, waves in order), the way fleets actually
+roll.  In swarm mode every completed puller registers as a provider, so wave
+1 drains the registry once and later waves fetch chunk payloads from peers —
+the registry keeps serving only the KB-sized index/recipe (EdgePier's
+offload).  Registry-only mode runs the identical schedule without peers.
+Reported per (app × mode × N):
+
+  * ``registry_egress_mb`` — actual serialized frame bytes leaving the
+    registry (the number a capacity planner cares about);
+  * ``naive_egress_mb``    — what N full-artifact transfers would cost;
+  * ``cache_hit_rate``     — tiered-cache hits over the wave;
+  * ``coalesced``          — chunk reads that piggy-backed on an identical
+    in-flight read;
+  * ``peer_offload``       — fraction of chunk bytes served by peers
+    (swarm mode; 0 for registry-only);
+  * ``wall_s``             — wave wall-clock.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_delivery_scale [scale]
+      PYTHONPATH=src python -m benchmarks.run delivery_scale
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+from typing import List
+
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams
+from repro.core.pushpull import Client
+from repro.core.registry import Registry
+from repro.delivery import (DeltaSession, RegistryServer, SwarmNode,
+                            SwarmTracker, swarm_pull)
+
+from benchmarks.common import Report, Timer
+from benchmarks.corpus import corpus
+
+CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
+CDMT_PARAMS = CDMTParams(window=8, rule_bits=2)
+
+APPS = ["node", "redis", "nginx"]       # small/medium apps: waves stay quick
+N_CLIENTS = [2, 8, 16]
+
+
+def _loaded_server(app: str, versions) -> RegistryServer:
+    reg = Registry(cdmt_params=CDMT_PARAMS)
+    pub = Client(cdc_params=CDC_PARAMS, cdmt_params=CDMT_PARAMS)
+    for v in versions:
+        pub.commit(app, v.tag, v.tar())
+        pub.push(reg, app, v.tag)
+    return RegistryServer(reg)
+
+
+def _rolling_waves(n: int, worker, wave_size: int = 0) -> float:
+    """Run ``worker(i)`` for i in 0..n-1 as a rolling upgrade: waves of
+    ``wave_size`` clients run concurrently (barrier-released), waves proceed
+    in order.  Default wave size: n/4, ≥1."""
+    wave_size = wave_size or max(1, n // 4)
+    errors: List[BaseException] = []
+
+    def run(i, barrier):
+        try:
+            barrier.wait()
+            worker(i)
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    with Timer() as t:
+        for start in range(0, n, wave_size):
+            members = range(start, min(start + wave_size, n))
+            barrier = threading.Barrier(len(members))
+            threads = [threading.Thread(target=run, args=(i, barrier))
+                       for i in members]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            if errors:
+                raise errors[0]
+    return t.s
+
+
+def _registry_only(app: str, versions, n: int, warm_tag: str, new_tag: str):
+    srv = _loaded_server(app, versions)
+    sessions = []
+    for _ in range(n):
+        cl = Client(cdc_params=CDC_PARAMS, cdmt_params=CDMT_PARAMS)
+        sess = DeltaSession(cl, srv, batch_chunks=64, pipeline_depth=4)
+        sess.pull(app, warm_tag)              # provision (not measured)
+        sessions.append(sess)
+    base = srv.snapshot()
+    base_cache = srv.cache.stats
+
+    wall = _rolling_waves(n, lambda i: sessions[i].pull(app, new_tag))
+
+    s = srv.snapshot()
+    cache = srv.cache.stats
+    hits = cache.hits - base_cache.hits
+    misses = cache.misses - base_cache.misses
+    return {
+        "registry_egress_mb": (s.egress_bytes - base.egress_bytes) / 2**20,
+        "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+        "coalesced": s.coalesced_reads - base.coalesced_reads,
+        "peer_offload": 0.0,
+        "wall_s": wall,
+    }
+
+
+def _swarm(app: str, versions, n: int, warm_tag: str, new_tag: str):
+    srv = _loaded_server(app, versions)
+    tracker = SwarmTracker()
+    nodes = []
+    for i in range(n):
+        node = SwarmNode(f"n{i}", cdc_params=CDC_PARAMS,
+                         cdmt_params=CDMT_PARAMS)
+        swarm_pull(node, srv, tracker, app, warm_tag)   # provision + register
+        nodes.append(node)
+    base = srv.snapshot()
+    base_cache = srv.cache.stats
+    stats_out: List = [None] * n
+
+    def worker(i):
+        stats_out[i] = swarm_pull(nodes[i], srv, tracker, app, new_tag,
+                                  max_peers=4)
+
+    wall = _rolling_waves(n, worker)
+
+    s = srv.snapshot()
+    cache = srv.cache.stats
+    hits = cache.hits - base_cache.hits
+    misses = cache.misses - base_cache.misses
+    peer_b = sum(st.peer_chunk_bytes for st in stats_out)
+    reg_b = sum(st.registry_chunk_bytes for st in stats_out)
+    return {
+        "registry_egress_mb": (s.egress_bytes - base.egress_bytes) / 2**20,
+        "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+        "coalesced": s.coalesced_reads - base.coalesced_reads,
+        "peer_offload": peer_b / (peer_b + reg_b) if peer_b + reg_b else 0.0,
+        "wall_s": wall,
+    }
+
+
+def run(scale: float = 1.0) -> Report:
+    rep = Report("delivery_scale")
+    c = corpus(scale)
+    for app in APPS:
+        versions = c[app]
+        warm_tag = versions[max(0, len(versions) - 4)].tag   # a few behind
+        new_tag = versions[-1].tag
+        naive_mb = versions[-1].size / 2**20
+        for n in N_CLIENTS:
+            for mode, fn in (("registry", _registry_only), ("swarm", _swarm)):
+                row = fn(app, versions, n, warm_tag, new_tag)
+                rep.add(app=app, mode=mode, n_clients=n,
+                        naive_egress_mb=naive_mb * n, **row)
+    return rep
+
+
+if __name__ == "__main__":
+    run(float(sys.argv[1]) if len(sys.argv) > 1 else 1.0).print_csv()

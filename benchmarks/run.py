@@ -9,8 +9,8 @@ import time
 from benchmarks import (bench_build_time, bench_cdmt_ablation,
                         bench_cdmt_vs_merkle, bench_checkpoint_delivery,
                         bench_comparison_ratio, bench_dedup_ratio,
-                        bench_global_dedup, bench_kernels,
-                        bench_pushpull_io, roofline)
+                        bench_delivery_scale, bench_global_dedup,
+                        bench_kernels, bench_pushpull_io, roofline)
 
 ALL = {
     "fig6_dedup_ratio": bench_dedup_ratio.run,
@@ -19,6 +19,7 @@ ALL = {
     "fig9_comparison_ratio": bench_comparison_ratio.run,
     "fig10_build_time": bench_build_time.run,
     "table2_pushpull_io": bench_pushpull_io.run,
+    "delivery_scale": bench_delivery_scale.run,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
     "kernels": bench_kernels.run,

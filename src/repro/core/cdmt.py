@@ -22,6 +22,7 @@ Implements:
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from . import hashing
@@ -166,33 +167,52 @@ class CDMT:
 
 # -------------------------------------------------------------------- compare
 
-def compare(client: Optional[CDMT], server: CDMT) -> Tuple[Set[bytes], int]:
-    """Algorithm 2 — BFS over the server tree, pruning subtrees whose node id
-    the client already has.  Returns (leaf fps the client is MISSING,
-    number of node comparisons performed).
+def iter_missing_leaves(client: Optional[CDMT], server: CDMT,
+                        on_compare=None):
+    """Streaming Algorithm 2 — BFS over the server tree, pruning subtrees
+    whose node id the client already has, yielding missing leaf fps *as the
+    walk discovers them* (deduplicated) so transfer can overlap comparison.
 
-    With ``client=None`` (fresh pull of a new image) every leaf is missing and
-    zero comparisons are needed — the paper's "push of a new image" case.
+    ``on_compare`` is invoked once per node comparison (accounting hook).
+    With ``client=None`` (fresh pull of a new image) every leaf is missing
+    and zero comparisons are needed — the paper's "push of a new image" case.
     """
     if server.root is None:
-        return set(), 0
+        return
+    yielded: Set[bytes] = set()
     if client is None:
-        return set(server.leaf_fps()), 0
+        for fp in server.leaf_fps():
+            if fp not in yielded:
+                yielded.add(fp)
+                yield fp
+        return
     have = client.node_set()
-    missing: Set[bytes] = set()
-    comparisons = 0
-    queue: List[bytes] = [server.root]
+    queue: "deque[bytes]" = deque([server.root])
     while queue:                                    # lines 3–11
-        fp = queue.pop(0)
-        comparisons += 1
+        fp = queue.popleft()
+        if on_compare is not None:
+            on_compare()
         if fp in have:                              # subtree shared: prune
             continue
         node = server.nodes[fp]
         if node.children:                           # line 5–6: descend
             queue.extend(node.children)
-        else:                                       # line 8: yield leaf
-            missing.add(fp)
-    return missing, comparisons
+        elif fp not in yielded:                     # line 8: yield leaf
+            yielded.add(fp)
+            yield fp
+
+
+def compare(client: Optional[CDMT], server: CDMT) -> Tuple[Set[bytes], int]:
+    """Algorithm 2 — returns (leaf fps the client is MISSING, number of node
+    comparisons performed).  Set-materialized form of
+    :func:`iter_missing_leaves` (the single BFS implementation)."""
+    comparisons = [0]
+
+    def tick():
+        comparisons[0] += 1
+
+    missing = set(iter_missing_leaves(client, server, on_compare=tick))
+    return missing, comparisons[0]
 
 
 def diff_chunks(old: Optional[CDMT], new: CDMT) -> Set[bytes]:

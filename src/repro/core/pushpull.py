@@ -6,6 +6,16 @@ index first, run Algorithm 2 locally, and move only the missing chunks.
 
 Every call returns a ``WireStats`` so benchmarks (Table II / the ≥40% network
 saving claim) and the checkpoint layer can account exact bytes moved.
+
+Byte accounting routes through :mod:`repro.delivery.wire`: ``index_bytes`` /
+``recipe_bytes`` / ``chunk_bytes`` are the lengths of the *actually
+serialized* frames (round-trippable), not structural estimates.
+
+Layering note: ``repro.delivery`` depends on this module at import time
+(``delta``/``swarm`` wrap :class:`Client`), so the wire-format sizing used
+here is imported lazily inside ``push``/``pull`` — this is the one
+deliberate upward reference from core to the delivery layer, kept to the
+sizing helpers only.
 """
 
 from __future__ import annotations
@@ -60,6 +70,16 @@ class Client:
         self.indexes[lineage] = CDMT.build(recipe.fps, params=self.cdmt_params)
         return recipe
 
+    def index_for_tag(self, lineage: str, tag: str) -> CDMT:
+        """The CDMT for a committed tag.  The cached per-lineage index is the
+        *head's* tree; pushing an older tag rebuilds its tree from the
+        recipe (leaf sequence fully determines it)."""
+        recipe = self.store.recipes[f"{lineage}:{tag}"]
+        local_idx = self.indexes.get(lineage)
+        if local_idx is not None and local_idx.leaf_fps() == list(recipe.fps):
+            return local_idx
+        return CDMT.build(recipe.fps, params=self.cdmt_params)
+
     # ------------------------------------------------------------------ push
 
     def push(self, registry: Registry, lineage: str, tag: str,
@@ -70,26 +90,31 @@ class Client:
         Committed  → fetch registry's latest CDMT, Alg. 2 diff, ship only
                      changed chunks + the new index (paper push case 2).
         """
+        from repro.delivery import wire
+
         recipe = self.store.recipes[f"{lineage}:{tag}"]
-        local_idx = self.indexes[lineage]
+        local_idx = self.index_for_tag(lineage, tag)
         stats = WireStats(op="push", lineage=lineage, tag=tag,
                           chunks_total=len(recipe.fps),
                           raw_bytes=recipe.total_size)
 
         remote_idx = registry.latest_index(lineage)
         if remote_idx is not None:
-            stats.index_bytes += remote_idx.index_size_bytes()   # download
+            stats.index_bytes += wire.index_wire_bytes(remote_idx)   # download
         missing, comps = compare(remote_idx, local_idx)
         stats.comparisons = comps
 
         payload = {fp: self.store.chunks.get(fp) for fp in missing}
         stats.chunks_moved = len(payload)
-        stats.chunk_bytes = sum(len(v) for v in payload.values())
-        stats.recipe_bytes = len(recipe.fps) * hashing.DIGEST_SIZE
-        stats.index_bytes += local_idx.index_size_bytes()        # upload
+        # nothing to ship ⇒ no CHUNK_BATCH frame crosses the wire at all
+        stats.chunk_bytes = wire.chunk_batch_wire_bytes(payload) if payload else 0
+        stats.recipe_bytes = wire.recipe_wire_bytes(recipe)
+        stats.index_bytes += wire.index_wire_bytes(local_idx)        # upload
 
         registry.receive_push(lineage, tag, recipe, payload,
-                              parent_version=parent_version)
+                              parent_version=parent_version,
+                              claimed_root=local_idx.root,
+                              claimed_params=self.cdmt_params)
         self.log.append(stats)
         return stats
 
@@ -98,13 +123,15 @@ class Client:
     def pull(self, registry: Registry, lineage: str, tag: str) -> WireStats:
         """Pull a version: download its CDMT, Alg. 2 against local CDMT,
         fetch only missing chunks, reconstruct via the recipe."""
+        from repro.delivery import wire
+
         server_idx = registry.index_for_tag(lineage, tag)
         recipe = registry.recipe_for(lineage, tag)
         stats = WireStats(op="pull", lineage=lineage, tag=tag,
                           chunks_total=len(recipe.fps),
                           raw_bytes=recipe.total_size,
-                          index_bytes=server_idx.index_size_bytes(),
-                          recipe_bytes=len(recipe.fps) * hashing.DIGEST_SIZE)
+                          index_bytes=wire.index_wire_bytes(server_idx),
+                          recipe_bytes=wire.recipe_wire_bytes(recipe))
 
         local_idx = self.indexes.get(lineage)
         missing, comps = compare(local_idx, server_idx)
@@ -114,7 +141,8 @@ class Client:
         to_fetch = [fp for fp in missing if not self.store.chunks.has(fp)]
         payload = registry.serve_chunks(to_fetch)
         stats.chunks_moved = len(payload)
-        stats.chunk_bytes = sum(len(v) for v in payload.values())
+        # nothing to fetch ⇒ no CHUNK_BATCH frame crosses the wire at all
+        stats.chunk_bytes = wire.chunk_batch_wire_bytes(payload) if payload else 0
 
         self.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps, payload,
                                  recipe.sizes)

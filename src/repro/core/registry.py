@@ -13,9 +13,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
+from . import hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
 from .store import DedupStore, Recipe
 from .versioning import VersionedCDMT, VersionRecord
+
+
+class PushRejected(ValueError):
+    """Push failed server-side verification (root mismatch / bad chunk)."""
 
 
 @dataclasses.dataclass
@@ -62,8 +67,65 @@ class Registry:
 
     def receive_push(self, lineage: str, tag: str, recipe: Recipe,
                      chunks: Dict[bytes, bytes],
-                     parent_version: Optional[int] = None) -> PushReceipt:
-        """Accept a push: store new chunks, extend the versioned CDMT."""
+                     parent_version: Optional[int] = None,
+                     claimed_root: Optional[bytes] = None,
+                     claimed_params: Optional[CDMTParams] = None,
+                     chunks_verified: bool = False) -> PushReceipt:
+        """Accept a push: verify, store new chunks, extend the versioned CDMT.
+
+        Verification (paper Sec. V — the root check doubles as the
+        authentication mechanism):
+
+        * every pushed chunk's blake2b must equal its claimed fingerprint
+          (skipped with ``chunks_verified`` — the wire frontend already
+          hashes every payload during ``decode_chunk_batch``);
+        * every fingerprint the recipe references must be covered — either
+          pushed now or already stored — so a committed version is always
+          reconstructable, and every pushed chunk must be referenced by the
+          recipe, so no unreachable data enters the store;
+        * with ``claimed_root`` given, the CDMT rebuilt from the recipe's
+          leaf sequence must hash to exactly that root.  The rebuild uses
+          ``claimed_params`` (the tree parameters the client built with —
+          carried in the push header on the wire path) so clients with
+          non-default ``CDMTParams`` verify correctly; the check binds the
+          stored recipe to the root the client vouched for.
+
+        All checks run *before* any state is mutated (the verification tree
+        uses a throwaway node store); a failed push leaves the registry
+        untouched and raises :class:`PushRejected`.
+        """
+        if not chunks_verified:
+            for fp, data in chunks.items():
+                if hashing.chunk_fingerprint(data) != fp:
+                    raise PushRejected(
+                        f"push {lineage}:{tag}: chunk {fp.hex()[:12]} payload "
+                        f"does not hash to its fingerprint")
+        referenced = set(recipe.fps)
+        stray = [fp for fp in chunks if fp not in referenced]
+        if stray:
+            raise PushRejected(
+                f"push {lineage}:{tag}: {len(stray)} pushed chunk(s) not "
+                f"referenced by the recipe (first: {stray[0].hex()[:12]}) — "
+                f"refusing to store unreachable data")
+        unavailable = [fp for fp in self.store.missing(recipe.fps)
+                       if fp not in chunks]
+        if unavailable:
+            raise PushRejected(
+                f"push {lineage}:{tag}: recipe references "
+                f"{len(unavailable)} chunk(s) neither pushed nor stored "
+                f"(first: {unavailable[0].hex()[:12]})")
+        rebuilt: Optional[CDMT] = None
+        if claimed_root is not None:
+            params = claimed_params or self.cdmt_params
+            rebuilt = CDMT.build(recipe.fps, params=params)
+            if rebuilt.root != claimed_root:
+                raise PushRejected(
+                    f"push {lineage}:{tag}: rebuilt CDMT root "
+                    f"{rebuilt.root.hex()[:12] if rebuilt.root else None} != "
+                    f"claimed {claimed_root.hex()[:12]}")
+            if params != self.cdmt_params:
+                rebuilt = None          # cannot donate a differently-cut tree
+        lin = self.lineage(lineage)
         nbytes = 0
         nchunks = 0
         for fp, data in chunks.items():
@@ -72,8 +134,9 @@ class Registry:
                 nbytes += len(data)
         self.recipes[(lineage, tag)] = recipe
         self.store.recipes[f"{lineage}:{tag}"] = recipe
-        rec = self.lineage(lineage).commit(recipe.fps, tag=tag, parent=parent_version)
-        idx = self.lineage(lineage).get_version(rec.version)
+        rec = lin.commit(recipe.fps, tag=tag, parent=parent_version,
+                         tree=rebuilt)
+        idx = lin.get_version(rec.version)
         return PushReceipt(lineage=lineage, tag=tag, version=rec.version,
                            chunks_received=nchunks, bytes_received=nbytes,
                            index_bytes=idx.index_size_bytes(), root=rec.root)

@@ -52,12 +52,27 @@ class VersionedCDMT:
     # ------------------------------------------------------------------ write
 
     def commit(self, leaf_fps: Sequence[bytes], tag: str,
-               parent: Optional[int] = None) -> VersionRecord:
+               parent: Optional[int] = None,
+               tree: Optional[CDMT] = None) -> VersionRecord:
         """Commit a new version (push of a committed image).  Node-copying:
-        only nodes absent from the shared store are created."""
-        before = len(self.node_store)
-        tree = CDMT.build(leaf_fps, params=self.params, node_store=self.node_store)
-        created = len(self.node_store) - before
+        only nodes absent from the shared store are created.
+
+        ``tree`` lets a caller that already built this version's CDMT with
+        identical params (e.g. registry push verification) donate it instead
+        of rebuilding; its nodes are merged content-addressed, preserving
+        the ``new_nodes`` accounting.
+        """
+        if tree is None:
+            before = len(self.node_store)
+            tree = CDMT.build(leaf_fps, params=self.params,
+                              node_store=self.node_store)
+            created = len(self.node_store) - before
+        else:
+            created = 0
+            for fp, node in tree.nodes.items():
+                if fp not in self.node_store:
+                    self.node_store[fp] = node
+                    created += 1
         version = len(self.roots)
         if parent is None and self.roots:
             parent = self.roots[-1].version

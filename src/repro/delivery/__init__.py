@@ -1,0 +1,37 @@
+"""``repro.delivery`` — the measurable delivery stack on top of the CDMT core.
+
+The core (``repro.core``) proves the paper's *algorithms*; this package turns
+them into a delivery *system* whose byte counts are real:
+
+  * :mod:`repro.delivery.wire`   — varint-framed binary wire format for CDMT
+    indexes, recipes, chunk batches, and want-lists (round-trip, self-verifying);
+  * :mod:`repro.delivery.cache`  — tiered chunk cache (in-memory LRU over the
+    disk/log ``ChunkStore``) with hit/miss/eviction accounting;
+  * :mod:`repro.delivery.server` — concurrent registry frontend: many pullers,
+    request coalescing, batched chunk responses, exact egress/ingress meters;
+  * :mod:`repro.delivery.delta`  — session protocol pipelining Algorithm 2
+    compare with chunk transfer (compare keeps walking while batches fetch);
+  * :mod:`repro.delivery.swarm`  — EdgePier-style peer mode: provisioned
+    clients serve chunks to later pullers before the registry is consulted.
+"""
+
+from .cache import CacheStats, TieredChunkCache
+from .delta import DeliveryError, DeliveryStats, DeltaSession
+from .server import RegistryServer, ServerStats
+from .swarm import SwarmNode, SwarmStats, SwarmTracker, swarm_pull
+from .wire import (FrameType, WireError, decode_chunk_batch, decode_frame,
+                   decode_index, decode_recipe, decode_want, encode_chunk_batch,
+                   encode_frame, encode_index, encode_recipe, encode_want)
+
+__all__ = [
+    "CacheStats", "TieredChunkCache",
+    "DeliveryError", "DeliveryStats", "DeltaSession",
+    "RegistryServer", "ServerStats",
+    "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
+    "FrameType", "WireError",
+    "encode_frame", "decode_frame",
+    "encode_index", "decode_index",
+    "encode_recipe", "decode_recipe",
+    "encode_chunk_batch", "decode_chunk_batch",
+    "encode_want", "decode_want",
+]

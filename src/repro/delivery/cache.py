@@ -1,0 +1,120 @@
+"""Tiered chunk cache: in-memory LRU over the log-structured ``ChunkStore``.
+
+Both sides of the wire use it — the registry frontend serves hot chunks
+without touching the chunk log (many pullers upgrading the same lineage hit
+the same few-hundred-KB working set), and clients keep recently materialized
+chunks resident for swarm serving.
+
+Accounting is explicit (:class:`CacheStats`): the scale benchmark reports the
+hit rate alongside registry egress, because a warm cache is what makes the
+coalesced frontend O(working set) instead of O(requests) in store reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.store import ChunkStore
+
+DEFAULT_CAPACITY = 32 << 20  # 32 MiB — plenty for the scaled-down corpus
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    puts: int = 0
+    resident_bytes: int = 0
+    capacity_bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class TieredChunkCache:
+    """Write-through LRU in front of a ``ChunkStore``.
+
+    * ``get`` — memory first (hit), else backing store (miss + promote);
+    * ``put`` — write-through: backing store then memory;
+    * eviction — strict LRU by bytes against ``capacity_bytes``.
+
+    Thread-safe: the registry frontend calls it from many puller threads.
+    Chunks larger than the capacity bypass the memory tier entirely.
+    """
+
+    def __init__(self, backing: ChunkStore,
+                 capacity_bytes: int = DEFAULT_CAPACITY):
+        self.backing = backing
+        self.capacity_bytes = capacity_bytes
+        self._lru: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self._resident = 0
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._puts = 0
+
+    # ---------------------------------------------------------------- reads
+
+    def get(self, fp: bytes) -> bytes:
+        with self._lock:
+            data = self._lru.get(fp)
+            if data is not None:
+                self._lru.move_to_end(fp)
+                self._hits += 1
+                return data
+            self._misses += 1
+        data = self.backing.get(fp)        # may raise KeyError: truly absent
+        with self._lock:
+            self._admit(fp, data)
+        return data
+
+    def has(self, fp: bytes) -> bool:
+        with self._lock:
+            if fp in self._lru:
+                return True
+        return self.backing.has(fp)
+
+    # --------------------------------------------------------------- writes
+
+    def put(self, fp: bytes, data: bytes) -> bool:
+        """Write-through store; returns True if the chunk was new."""
+        new = self.backing.put(fp, data)
+        with self._lock:
+            self._puts += 1
+            self._admit(fp, data)
+        return new
+
+    def _admit(self, fp: bytes, data: bytes) -> None:
+        # caller holds the lock
+        if len(data) > self.capacity_bytes:
+            return
+        prev = self._lru.pop(fp, None)
+        if prev is not None:
+            self._resident -= len(prev)
+        self._lru[fp] = data
+        self._resident += len(data)
+        while self._resident > self.capacity_bytes:
+            _, victim = self._lru.popitem(last=False)
+            self._resident -= len(victim)
+            self._evictions += 1
+
+    # ----------------------------------------------------------- accounting
+
+    @property
+    def stats(self) -> CacheStats:
+        with self._lock:
+            return CacheStats(hits=self._hits, misses=self._misses,
+                              evictions=self._evictions, puts=self._puts,
+                              resident_bytes=self._resident,
+                              capacity_bytes=self.capacity_bytes)
+
+    def resident_fps(self) -> List[bytes]:
+        with self._lock:
+            return list(self._lru.keys())

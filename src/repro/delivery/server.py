@@ -1,0 +1,214 @@
+"""Concurrent registry frontend — serves many simultaneous pullers.
+
+Wraps a ``repro.core.registry.Registry`` behind the wire format:
+
+  * every response is a serialized frame, and every byte that crosses the
+    boundary is metered (``egress_bytes`` / ``ingress_bytes`` are *actual*
+    frame lengths, not estimates);
+  * chunk reads go through the tiered LRU cache (:mod:`repro.delivery.cache`);
+  * identical in-flight chunk requests **coalesce**: when N pullers ask for
+    the same fingerprint concurrently, one thread performs the store/cache
+    read and the rest wait on its result (``coalesced_reads`` counts the
+    piggy-backers) — under a thundering herd of upgrades the chunk log sees
+    the working set once;
+  * chunk responses are **batched**: a WANT list is answered with one or more
+    CHUNK_BATCH frames of at most ``max_batch_chunks`` chunks, so a session
+    can pipeline decode/ingest against later batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.registry import PushReceipt, Registry
+from repro.core.store import Recipe
+
+from . import wire
+from .cache import DEFAULT_CAPACITY, TieredChunkCache
+
+
+@dataclasses.dataclass
+class ServerStats:
+    egress_bytes: int = 0          # serialized frames out (index/recipe/chunks)
+    ingress_bytes: int = 0         # serialized frames in (wants/pushes)
+    index_requests: int = 0
+    recipe_requests: int = 0
+    want_requests: int = 0
+    chunks_served: int = 0
+    chunk_bytes_served: int = 0
+    store_reads: int = 0           # chunk reads that reached cache/store
+    coalesced_reads: int = 0       # piggy-backed on an identical in-flight read
+    pushes: int = 0
+
+    def snapshot(self) -> "ServerStats":
+        return dataclasses.replace(self)
+
+
+class _InFlight:
+    __slots__ = ("event", "value", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.value: Optional[bytes] = None
+        self.error: Optional[BaseException] = None
+
+
+class RegistryServer:
+    """Thread-safe wire frontend over an in-process ``Registry``."""
+
+    def __init__(self, registry: Registry,
+                 cache_bytes: int = DEFAULT_CAPACITY,
+                 max_batch_chunks: int = 64):
+        self.registry = registry
+        self.cache = TieredChunkCache(registry.store.chunks, cache_bytes)
+        self.max_batch_chunks = max_batch_chunks
+        self.stats = ServerStats()
+        self._stats_lock = threading.Lock()
+        self._registry_lock = threading.RLock()   # Registry itself is not MT-safe
+        self._inflight: Dict[bytes, _InFlight] = {}
+        self._inflight_lock = threading.Lock()
+
+    # ------------------------------------------------------------ index/recipe
+
+    def get_index(self, lineage: str, tag: str) -> bytes:
+        """Serialized INDEX frame for ``lineage:tag``."""
+        with self._registry_lock:
+            idx = self.registry.index_for_tag(lineage, tag)
+            frame = wire.encode_index(idx)
+        with self._stats_lock:
+            self.stats.index_requests += 1
+            self.stats.egress_bytes += len(frame)
+        return frame
+
+    def get_latest_index(self, lineage: str) -> Optional[bytes]:
+        """Serialized INDEX frame of the lineage head, or None (new lineage)."""
+        with self._registry_lock:
+            idx = self.registry.latest_index(lineage)
+            frame = wire.encode_index(idx) if idx is not None else None
+        if frame is not None:
+            with self._stats_lock:
+                self.stats.index_requests += 1
+                self.stats.egress_bytes += len(frame)
+        return frame
+
+    def get_recipe(self, lineage: str, tag: str) -> bytes:
+        with self._registry_lock:
+            frame = wire.encode_recipe(self.registry.recipe_for(lineage, tag))
+        with self._stats_lock:
+            self.stats.recipe_requests += 1
+            self.stats.egress_bytes += len(frame)
+        return frame
+
+    # ----------------------------------------------------------------- chunks
+
+    def handle_want(self, want_frame: bytes) -> List[bytes]:
+        """Answer a WANT frame with batched CHUNK_BATCH frames.
+
+        Unknown fingerprints are silently omitted (the client's decode sees
+        which fps arrived); the session layer decides whether absence is an
+        error.
+        """
+        fps = wire.decode_want(want_frame)
+        with self._stats_lock:
+            self.stats.want_requests += 1
+            self.stats.ingress_bytes += len(want_frame)
+        frames: List[bytes] = []
+        for start in range(0, len(fps), self.max_batch_chunks):
+            batch: Dict[bytes, bytes] = {}
+            for fp in fps[start:start + self.max_batch_chunks]:
+                data = self._read_chunk(fp)
+                if data is not None:
+                    batch[fp] = data
+            frame = wire.encode_chunk_batch(batch)
+            frames.append(frame)
+            with self._stats_lock:
+                self.stats.egress_bytes += len(frame)
+                self.stats.chunks_served += len(batch)
+                self.stats.chunk_bytes_served += sum(len(v) for v in batch.values())
+        if not frames:                       # empty WANT still gets an answer
+            frame = wire.encode_chunk_batch({})
+            with self._stats_lock:
+                self.stats.egress_bytes += len(frame)
+            frames.append(frame)
+        return frames
+
+    def _read_chunk(self, fp: bytes) -> Optional[bytes]:
+        """Cache/store read with request coalescing."""
+        while True:
+            with self._inflight_lock:
+                slot = self._inflight.get(fp)
+                leader = slot is None
+                if leader:
+                    slot = _InFlight()
+                    self._inflight[fp] = slot
+            if leader:
+                try:
+                    try:
+                        slot.value = self.cache.get(fp)
+                        with self._stats_lock:
+                            self.stats.store_reads += 1
+                    except KeyError:
+                        slot.value = None    # registry does not have it
+                    except BaseException as e:
+                        slot.error = e       # followers must retry, not
+                        raise                # treat the chunk as absent
+                finally:
+                    with self._inflight_lock:
+                        del self._inflight[fp]
+                    slot.event.set()
+                return slot.value
+            slot.event.wait()
+            if slot.error is not None:       # leader failed (I/O error etc.)
+                continue                     # retry as a fresh leader
+            with self._stats_lock:
+                self.stats.coalesced_reads += 1
+            return slot.value
+
+    # ------------------------------------------------------------------- push
+
+    def handle_push(self, header_frame: bytes, recipe_frame: bytes,
+                    chunk_frames: Sequence[bytes]) -> PushReceipt:
+        """Accept a wire push: decode, verify, commit.
+
+        The chunk batches are decoded with fingerprint verification and the
+        registry additionally checks the rebuilt CDMT root against the
+        client-claimed root in the header (paper Sec. V authentication).
+        Ingress is metered up-front: the frames crossed the wire whether or
+        not the push is ultimately accepted.
+        """
+        nbytes = (len(header_frame) + len(recipe_frame)
+                  + sum(len(f) for f in chunk_frames))
+        with self._stats_lock:
+            self.stats.ingress_bytes += nbytes
+        hdr = wire.decode_push_header(header_frame)
+        recipe = wire.decode_recipe(recipe_frame)
+        if hdr.root is None and recipe.fps:
+            # only an empty artifact may omit the root — otherwise omission
+            # would bypass the registry's index verification
+            raise wire.WireError(
+                f"push {hdr.lineage}:{hdr.tag}: non-empty recipe with no "
+                f"claimed root")
+        chunks: Dict[bytes, bytes] = {}
+        for f in chunk_frames:
+            chunks.update(wire.decode_chunk_batch(f))   # hashes every payload
+        with self._registry_lock:
+            receipt = self.registry.receive_push(
+                hdr.lineage, hdr.tag, recipe, chunks,
+                parent_version=hdr.parent_version, claimed_root=hdr.root,
+                claimed_params=hdr.params, chunks_verified=True)
+        for fp, data in chunks.items():
+            self.cache.put(fp, data)         # warm the cache for pullers
+        with self._stats_lock:
+            self.stats.pushes += 1
+        return receipt
+
+    # ------------------------------------------------------------- accounting
+
+    def snapshot(self) -> ServerStats:
+        with self._stats_lock:
+            return self.stats.snapshot()
+
+    def cache_hit_rate(self) -> float:
+        return self.cache.stats.hit_rate

@@ -1,0 +1,192 @@
+"""EdgePier-style peer swarm (arXiv:2109.12983 applied to CDMT delivery).
+
+Clients that finished provisioning a lineage register with a
+:class:`SwarmTracker`; later pullers resolve their missing chunk set via the
+registry's CDMT index as usual, but fetch the chunk *payloads* from peers
+first — the central registry only serves the remainder (chunks no reachable
+peer holds).  Every peer exchange uses the same WANT/CHUNK_BATCH wire frames
+as the registry path, so peer traffic and registry egress are measured in the
+same units and the offload fraction is exact.
+
+The index and recipe still come from the registry: they are KB-sized and
+carry the authentication root, so the registry stays the source of truth
+while payload bandwidth spreads over the swarm (chunk batches are
+fingerprint-verified on decode, so a peer cannot forge content).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams, DEFAULT_PARAMS
+from repro.core.pushpull import Client
+
+from . import wire
+from .cache import DEFAULT_CAPACITY, TieredChunkCache
+from .delta import DeliveryError, DeliveryStats, iter_missing
+from .server import RegistryServer
+
+
+@dataclasses.dataclass
+class SwarmStats(DeliveryStats):
+    """Delivery accounting split by source."""
+    peer_chunk_bytes: int = 0      # CHUNK_BATCH bytes served by peers
+    registry_chunk_bytes: int = 0  # CHUNK_BATCH bytes served by the registry
+    chunks_from_peers: int = 0
+    peer_rounds: int = 0
+
+    @property
+    def peer_offload_fraction(self) -> float:
+        total = self.peer_chunk_bytes + self.registry_chunk_bytes
+        return self.peer_chunk_bytes / total if total else 0.0
+
+
+class SwarmNode:
+    """A client that can also *serve* its chunks to other swarm members."""
+
+    def __init__(self, name: str,
+                 cdc_params: cdc.CDCParams = cdc.DEFAULT_PARAMS,
+                 cdmt_params: CDMTParams = DEFAULT_PARAMS,
+                 cache_bytes: int = DEFAULT_CAPACITY):
+        self.name = name
+        self.client = Client(cdc_params=cdc_params, cdmt_params=cdmt_params)
+        self.cache = TieredChunkCache(self.client.store.chunks, cache_bytes)
+        self.served_bytes = 0
+        self.served_chunks = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ peer server
+
+    def serve_want(self, want_frame: bytes) -> bytes:
+        """Answer a WANT with the subset of chunks this node holds (one
+        CHUNK_BATCH frame; absent fps are omitted, the requester falls back
+        to other peers / the registry for them)."""
+        fps = wire.decode_want(want_frame)
+        batch: Dict[bytes, bytes] = {}
+        for fp in fps:
+            if self.cache.has(fp):
+                batch[fp] = self.cache.get(fp)
+        frame = wire.encode_chunk_batch(batch)
+        with self._lock:
+            self.served_bytes += len(frame)
+            self.served_chunks += len(batch)
+        return frame
+
+
+class SwarmTracker:
+    """Who has which version (EdgePier's DHT, reduced to a table).
+
+    Providers are tracked per ``(lineage, tag)``: a peer that finished
+    provisioning v7 is a *complete* source for v7's chunks, while peers on
+    other tags of the same lineage still hold the shared prefix — so lookups
+    return exact-tag holders first, then same-lineage holders as a second
+    tier.
+    """
+
+    def __init__(self):
+        self._providers: Dict[Tuple[str, str], List[SwarmNode]] = {}
+        self._lock = threading.Lock()
+        self._rr = itertools.count()
+
+    def register(self, lineage: str, tag: str, node: SwarmNode) -> None:
+        with self._lock:
+            nodes = self._providers.setdefault((lineage, tag), [])
+            if node not in nodes:
+                nodes.append(node)
+
+    def providers(self, lineage: str, tag: str,
+                  exclude: Optional[SwarmNode] = None,
+                  limit: int = 4) -> List[SwarmNode]:
+        """Up to ``limit`` providers — exact-tag holders first, same-lineage
+        holders after, each tier rotated round-robin so concurrent pullers
+        spread load across the swarm."""
+        with self._lock:
+            exact = [n for n in self._providers.get((lineage, tag), ())
+                     if n is not exclude]
+            rest: List[SwarmNode] = []
+            for (lin, t), nodes in self._providers.items():
+                if lin == lineage and t != tag:
+                    rest.extend(n for n in nodes
+                                if n is not exclude and n not in exact
+                                and n not in rest)
+            rot = next(self._rr)
+        out: List[SwarmNode] = []
+        for tier in (exact, rest):
+            if tier:
+                start = rot % len(tier)
+                out.extend(tier[start:] + tier[:start])
+        return out[:limit]
+
+
+def swarm_pull(node: SwarmNode, server: RegistryServer, tracker: SwarmTracker,
+               lineage: str, tag: str, batch_chunks: int = 64,
+               max_peers: int = 4) -> SwarmStats:
+    """Pull ``lineage:tag``: index + recipe from the registry, chunk payloads
+    peers-first, registry for the remainder.  Registers ``node`` as a
+    provider on success."""
+    client = node.client
+    idx_frame = server.get_index(lineage, tag)
+    server_idx = wire.decode_index(idx_frame)
+    recipe_frame = server.get_recipe(lineage, tag)
+    recipe = wire.decode_recipe(recipe_frame)
+    stats = SwarmStats(op="swarm_pull", lineage=lineage, tag=tag,
+                       index_bytes=len(idx_frame),
+                       recipe_bytes=len(recipe_frame),
+                       chunks_total=len(recipe.fps),
+                       raw_bytes=recipe.total_size)
+
+    local_idx = client.indexes.get(lineage)
+    to_fetch = [fp for fp in iter_missing(local_idx, server_idx, stats)
+                if not client.store.chunks.has(fp)]
+    received: Dict[bytes, bytes] = {}
+    peers = tracker.providers(lineage, tag, exclude=node, limit=max_peers)
+
+    for start in range(0, len(to_fetch), batch_chunks):
+        wanted = [fp for fp in to_fetch[start:start + batch_chunks]
+                  if fp not in received]
+        # 1) swarm first: ask each peer for what is still missing
+        for peer in peers:
+            if not wanted:
+                break
+            want = wire.encode_want(wanted)
+            stats.want_bytes += len(want)
+            frame = peer.serve_want(want)
+            stats.peer_rounds += 1
+            got = wire.decode_chunk_batch(frame)
+            # the frame crossed the wire either way — empty replies count too
+            stats.peer_chunk_bytes += len(frame)
+            stats.chunk_bytes += len(frame)
+            if got:
+                stats.chunks_from_peers += len(got)
+                stats.chunks_moved += len(got)
+                received.update(got)
+                wanted = [fp for fp in wanted if fp not in got]
+        # 2) registry fallback for the remainder
+        if wanted:
+            want = wire.encode_want(wanted)
+            stats.want_bytes += len(want)
+            frames = server.handle_want(want)
+            stats.rounds += 1
+            for f in frames:
+                got = wire.decode_chunk_batch(f)
+                stats.registry_chunk_bytes += len(f)
+                stats.chunk_bytes += len(f)
+                stats.chunks_moved += len(got)
+                received.update(got)
+
+    undelivered = [fp for fp in to_fetch if fp not in received]
+    if undelivered:
+        raise DeliveryError(
+            f"swarm pull {lineage}:{tag}: {len(undelivered)} chunk(s) "
+            f"served by neither peers nor registry "
+            f"(first: {undelivered[0].hex()[:12]})")
+    client.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps, received,
+                               recipe.sizes)
+    client.indexes[lineage] = server_idx
+    # freshly provisioned ⇒ this node can now serve the version
+    tracker.register(lineage, tag, node)
+    return stats

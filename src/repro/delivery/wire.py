@@ -1,0 +1,411 @@
+"""Binary wire format for CDMT delivery (varint-framed).
+
+Everything that crosses the client↔registry↔peer boundary is one of five
+frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
+
+  ``INDEX``        a whole CDMT.  The encoding ships only the *leaf*
+                   fingerprints plus per-level fanout runs — internal node ids
+                   are blake2b over child ids, so the decoder *recomputes*
+                   them.  This keeps the index at ~``n_leaves × digest`` bytes
+                   (the paper's "KB-sized index") and makes the frame
+                   self-verifying: a corrupted byte changes the recomputed
+                   root.
+  ``RECIPE``       ordered (fp, size) list reconstructing one artifact.
+  ``CHUNK_BATCH``  fp-prefixed chunk payloads; the decoder checks each
+                   payload's blake2b against its fp (authenticated transfer).
+  ``WANT``         a fingerprint request list (pull / peer fetch).
+  ``PUSH_HDR``     push envelope: lineage, tag, claimed root, parent version.
+
+All decoders raise :class:`WireError` on truncation, bad magic, trailing
+garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import hashing
+from repro.core.cdmt import CDMT, CDMTNode, CDMTParams
+from repro.core.store import Recipe
+
+MAGIC = b"CW"
+VERSION = 1
+_HEADER = len(MAGIC) + 2  # magic + version byte + type byte
+
+
+class WireError(ValueError):
+    """Malformed, truncated, or tampered wire data."""
+
+
+class FrameType(enum.IntEnum):
+    INDEX = 1
+    RECIPE = 2
+    CHUNK_BATCH = 3
+    WANT = 4
+    PUSH_HDR = 5
+
+
+# ----------------------------------------------------------------- varints
+
+def encode_uvarint(n: int) -> bytes:
+    """LEB128 unsigned varint."""
+    if n < 0:
+        raise WireError(f"uvarint cannot encode negative value {n}")
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def decode_uvarint(buf: bytes, off: int = 0) -> Tuple[int, int]:
+    """Returns ``(value, new_offset)``; raises :class:`WireError` on
+    truncation or a varint longer than 10 bytes (overflow guard)."""
+    result = 0
+    shift = 0
+    for i in range(10):
+        if off + i >= len(buf):
+            raise WireError("truncated uvarint")
+        b = buf[off + i]
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, off + i + 1
+        shift += 7
+    raise WireError("uvarint too long (>10 bytes)")
+
+
+def _take(buf: bytes, off: int, n: int, what: str) -> Tuple[bytes, int]:
+    if off + n > len(buf):
+        raise WireError(f"truncated {what}: need {n} bytes at offset {off}, "
+                        f"have {len(buf) - off}")
+    return buf[off:off + n], off + n
+
+
+# ------------------------------------------------------------------ frames
+
+def encode_frame(ftype: FrameType, payload: bytes) -> bytes:
+    return (MAGIC + bytes((VERSION, int(ftype)))
+            + encode_uvarint(len(payload)) + payload)
+
+
+def decode_frame(buf: bytes, off: int = 0,
+                 expect: Optional[FrameType] = None
+                 ) -> Tuple[FrameType, bytes, int]:
+    """Decode one frame at ``off``; returns ``(type, payload, new_offset)``."""
+    hdr, off = _take(buf, off, _HEADER, "frame header")
+    if hdr[:2] != MAGIC:
+        raise WireError(f"bad magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported wire version {hdr[2]}")
+    try:
+        ftype = FrameType(hdr[3])
+    except ValueError:
+        raise WireError(f"unknown frame type {hdr[3]}") from None
+    size, off = decode_uvarint(buf, off)
+    payload, off = _take(buf, off, size, f"{ftype.name} payload")
+    if expect is not None and ftype is not expect:
+        raise WireError(f"expected {expect.name} frame, got {ftype.name}")
+    return ftype, payload, off
+
+
+def _decode_single(buf: bytes, expect: FrameType) -> bytes:
+    ftype, payload, off = decode_frame(buf, 0, expect=expect)
+    if off != len(buf):
+        raise WireError(f"{len(buf) - off} trailing bytes after "
+                        f"{expect.name} frame")
+    return payload
+
+
+# ------------------------------------------------------------------- INDEX
+
+def encode_index(t: CDMT) -> bytes:
+    """Serialize a CDMT: params, leaf fps, then per-level fanout runs.
+
+    Internal-node fingerprints are NOT shipped — they are a pure function of
+    the leaves and the cut structure, so the decoder recomputes (and thereby
+    verifies) them.
+    """
+    p = t.params
+    out = bytearray()
+    out += encode_uvarint(p.window)
+    out += encode_uvarint(p.rule_bits)
+    out += encode_uvarint(p.max_fanout)
+    out += encode_uvarint(hashing.DIGEST_SIZE)
+    out += encode_uvarint(len(t.levels))
+    if t.levels:
+        leaves = t.levels[0]
+        out += encode_uvarint(len(leaves))
+        for fp in leaves:
+            out += fp
+        for lvl_i in range(1, len(t.levels)):
+            lvl = t.levels[lvl_i]
+            out += encode_uvarint(len(lvl))
+            for pfp in lvl:
+                out += encode_uvarint(len(t.nodes[pfp].children))
+    return encode_frame(FrameType.INDEX, bytes(out))
+
+
+def decode_index(buf: bytes) -> CDMT:
+    """Rebuild a CDMT from an INDEX frame, recomputing internal node ids."""
+    payload = _decode_single(buf, FrameType.INDEX)
+    off = 0
+    window, off = decode_uvarint(payload, off)
+    rule_bits, off = decode_uvarint(payload, off)
+    max_fanout, off = decode_uvarint(payload, off)
+    digest, off = decode_uvarint(payload, off)
+    if digest != hashing.DIGEST_SIZE:
+        raise WireError(f"digest size {digest} != {hashing.DIGEST_SIZE}")
+    if window < 1 or max_fanout < 1:
+        raise WireError("invalid CDMT params on wire")
+    n_levels, off = decode_uvarint(payload, off)
+    t = CDMT(params=CDMTParams(window=window, rule_bits=rule_bits,
+                               max_fanout=max_fanout))
+    if n_levels == 0:
+        if off != len(payload):
+            raise WireError("trailing bytes in empty INDEX payload")
+        return t
+
+    n_leaves, off = decode_uvarint(payload, off)
+    level: List[bytes] = []
+    for _ in range(n_leaves):
+        fp, off = _take(payload, off, digest, "leaf fp")
+        level.append(fp)
+        if fp not in t.nodes:
+            t.nodes[fp] = CDMTNode(fp=fp, children=(), is_leaf=True,
+                                   n_leaves=1)
+    t.levels.append(list(level))
+
+    for _ in range(n_levels - 1):
+        n_parents, off = decode_uvarint(payload, off)
+        if n_parents == 0:
+            raise WireError("empty CDMT level on wire")
+        nxt: List[bytes] = []
+        pos = 0
+        for _ in range(n_parents):
+            fanout, off = decode_uvarint(payload, off)
+            if fanout == 0 or pos + fanout > len(level):
+                raise WireError("level fanouts do not partition child level")
+            kids = tuple(level[pos:pos + fanout])
+            pos += fanout
+            fp = hashing.node_fingerprint(kids)
+            if fp not in t.nodes:
+                t.nodes[fp] = CDMTNode(
+                    fp=fp, children=kids, is_leaf=False,
+                    n_leaves=sum(t.nodes[c].n_leaves for c in kids))
+            nxt.append(fp)
+        if pos != len(level):
+            raise WireError("level fanouts do not cover child level")
+        t.levels.append(list(nxt))
+        level = nxt
+    if len(level) != 1:
+        raise WireError(f"top level has {len(level)} roots, expected 1")
+    if off != len(payload):
+        raise WireError("trailing bytes in INDEX payload")
+    t.root = level[0]
+    return t
+
+
+# ------------------------------------------------------------------ RECIPE
+
+def encode_recipe(r: Recipe) -> bytes:
+    name = r.name.encode("utf-8")
+    out = bytearray()
+    out += encode_uvarint(len(name))
+    out += name
+    out += encode_uvarint(len(r.fps))
+    for fp in r.fps:
+        out += fp
+    for size in r.sizes:
+        out += encode_uvarint(size)
+    return encode_frame(FrameType.RECIPE, bytes(out))
+
+
+def decode_recipe(buf: bytes) -> Recipe:
+    payload = _decode_single(buf, FrameType.RECIPE)
+    off = 0
+    name_len, off = decode_uvarint(payload, off)
+    name_b, off = _take(payload, off, name_len, "recipe name")
+    n, off = decode_uvarint(payload, off)
+    fps: List[bytes] = []
+    for _ in range(n):
+        fp, off = _take(payload, off, hashing.DIGEST_SIZE, "recipe fp")
+        fps.append(fp)
+    sizes: List[int] = []
+    for _ in range(n):
+        s, off = decode_uvarint(payload, off)
+        sizes.append(s)
+    if off != len(payload):
+        raise WireError("trailing bytes in RECIPE payload")
+    return Recipe(name=name_b.decode("utf-8"), fps=fps, sizes=sizes)
+
+
+# ------------------------------------------------------------- CHUNK_BATCH
+
+def encode_chunk_batch(chunks: Mapping[bytes, bytes]) -> bytes:
+    """Batch chunk payloads: ``n | (fp | uvarint(len) | data)*``."""
+    out = bytearray()
+    out += encode_uvarint(len(chunks))
+    for fp, data in chunks.items():
+        if len(fp) != hashing.DIGEST_SIZE:
+            raise WireError(f"bad fingerprint length {len(fp)}")
+        out += fp
+        out += encode_uvarint(len(data))
+        out += data
+    return encode_frame(FrameType.CHUNK_BATCH, bytes(out))
+
+
+def decode_chunk_batch(buf: bytes, verify: bool = True) -> Dict[bytes, bytes]:
+    """Decode a batch; with ``verify`` each payload's blake2b must equal its
+    wire fp (the transfer is authenticated end-to-end)."""
+    payload = _decode_single(buf, FrameType.CHUNK_BATCH)
+    off = 0
+    n, off = decode_uvarint(payload, off)
+    out: Dict[bytes, bytes] = {}
+    for _ in range(n):
+        fp, off = _take(payload, off, hashing.DIGEST_SIZE, "chunk fp")
+        size, off = decode_uvarint(payload, off)
+        data, off = _take(payload, off, size, "chunk data")
+        if verify and hashing.chunk_fingerprint(data) != fp:
+            raise WireError(f"chunk {fp.hex()[:12]} payload hash mismatch")
+        out[fp] = data
+    if off != len(payload):
+        raise WireError("trailing bytes in CHUNK_BATCH payload")
+    return out
+
+
+# -------------------------------------------------------------------- WANT
+
+def encode_want(fps: Sequence[bytes]) -> bytes:
+    out = bytearray()
+    out += encode_uvarint(len(fps))
+    for fp in fps:
+        if len(fp) != hashing.DIGEST_SIZE:
+            raise WireError(f"bad fingerprint length {len(fp)}")
+        out += fp
+    return encode_frame(FrameType.WANT, bytes(out))
+
+
+def decode_want(buf: bytes) -> List[bytes]:
+    payload = _decode_single(buf, FrameType.WANT)
+    off = 0
+    n, off = decode_uvarint(payload, off)
+    fps: List[bytes] = []
+    for _ in range(n):
+        fp, off = _take(payload, off, hashing.DIGEST_SIZE, "want fp")
+        fps.append(fp)
+    if off != len(payload):
+        raise WireError("trailing bytes in WANT payload")
+    return fps
+
+
+# ---------------------------------------------------------------- PUSH_HDR
+
+@dataclasses.dataclass
+class PushHeader:
+    lineage: str
+    tag: str
+    root: Optional[bytes]           # client-claimed CDMT root (None: empty
+    parent_version: Optional[int]   # artifact — its CDMT has no root)
+    params: Optional[CDMTParams] = None   # tree params the root was built
+                                          # with (travel with the claim)
+
+
+def encode_push_header(h: PushHeader) -> bytes:
+    lin = h.lineage.encode("utf-8")
+    tag = h.tag.encode("utf-8")
+    out = bytearray()
+    out += encode_uvarint(len(lin))
+    out += lin
+    out += encode_uvarint(len(tag))
+    out += tag
+    if h.root is None:
+        out += encode_uvarint(0)
+    else:
+        if len(h.root) != hashing.DIGEST_SIZE:
+            raise WireError(f"bad claimed-root length {len(h.root)}")
+        out += encode_uvarint(1)
+        out += h.root
+        p = h.params if h.params is not None else CDMTParams()
+        out += encode_uvarint(p.window)
+        out += encode_uvarint(p.rule_bits)
+        out += encode_uvarint(p.max_fanout)
+    if h.parent_version is None:
+        out += encode_uvarint(0)
+    else:
+        out += encode_uvarint(1)
+        out += encode_uvarint(h.parent_version)
+    return encode_frame(FrameType.PUSH_HDR, bytes(out))
+
+
+def decode_push_header(buf: bytes) -> PushHeader:
+    payload = _decode_single(buf, FrameType.PUSH_HDR)
+    off = 0
+    lin_len, off = decode_uvarint(payload, off)
+    lin, off = _take(payload, off, lin_len, "push lineage")
+    tag_len, off = decode_uvarint(payload, off)
+    tag, off = _take(payload, off, tag_len, "push tag")
+    has_root, off = decode_uvarint(payload, off)
+    root: Optional[bytes] = None
+    params: Optional[CDMTParams] = None
+    if has_root:
+        root, off = _take(payload, off, hashing.DIGEST_SIZE, "push root")
+        window, off = decode_uvarint(payload, off)
+        rule_bits, off = decode_uvarint(payload, off)
+        max_fanout, off = decode_uvarint(payload, off)
+        if window < 1 or max_fanout < 1:
+            raise WireError("invalid CDMT params in PUSH_HDR")
+        params = CDMTParams(window=window, rule_bits=rule_bits,
+                            max_fanout=max_fanout)
+    has_parent, off = decode_uvarint(payload, off)
+    parent: Optional[int] = None
+    if has_parent:
+        parent, off = decode_uvarint(payload, off)
+    if off != len(payload):
+        raise WireError("trailing bytes in PUSH_HDR payload")
+    return PushHeader(lineage=lin.decode("utf-8"), tag=tag.decode("utf-8"),
+                      root=root, parent_version=parent, params=params)
+
+
+# ------------------------------------------------------------------ sizing
+
+def uvarint_len(n: int) -> int:
+    """Encoded length of ``n`` as a LEB128 uvarint, without encoding it."""
+    size = 1
+    while n > 0x7F:
+        n >>= 7
+        size += 1
+    return size
+
+
+def _frame_len(payload_len: int) -> int:
+    return _HEADER + uvarint_len(payload_len) + payload_len
+
+
+def index_wire_bytes(t: CDMT) -> int:
+    """Actual serialized size of the index (replaces the old estimate).
+    The index is KB-sized, so encoding it to measure is cheap."""
+    return len(encode_index(t))
+
+
+def recipe_wire_bytes(r: Recipe) -> int:
+    payload = (uvarint_len(len(r.name.encode("utf-8")))
+               + len(r.name.encode("utf-8"))
+               + uvarint_len(len(r.fps))
+               + len(r.fps) * hashing.DIGEST_SIZE
+               + sum(uvarint_len(s) for s in r.sizes))
+    return _frame_len(payload)
+
+
+def chunk_batch_wire_bytes(chunks: Mapping[bytes, bytes]) -> int:
+    """Exact ``len(encode_chunk_batch(chunks))`` computed arithmetically —
+    measurement must not copy every chunk payload into a throwaway frame."""
+    payload = uvarint_len(len(chunks)) + sum(
+        hashing.DIGEST_SIZE + uvarint_len(len(d)) + len(d)
+        for d in chunks.values())
+    return _frame_len(payload)

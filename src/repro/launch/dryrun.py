@@ -70,6 +70,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                               - ma.alias_size_in_bytes),
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):      # older jax: one dict per device
+            ca = ca[0] if ca else {}
         rec["xla_cost"] = {k: float(v) for k, v in ca.items()
                            if k in ("flops", "bytes accessed", "transcendentals")}
 

@@ -426,8 +426,9 @@ def _expert_ffn(params: Params, xin: jax.Array, cfg, dt) -> jax.Array:
         return jax.lax.psum_scatter(y, "data", scatter_dimension=0,
                                     tiled=True)
 
+    from repro.parallel.compat import shard_map
     bd_spec = bd if len(bd) > 1 else bd[0]
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(bd_spec, "model", None, None),
                   P("model", "data", None), P("model", "data", None),

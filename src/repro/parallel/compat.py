@@ -1,0 +1,45 @@
+"""jax API compatibility shims.
+
+The framework targets the modern ``jax.shard_map`` API (``check_vma``,
+``axis_names``); older jax releases ship it as
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` and the
+complementary ``auto`` set.  This adapter lets every call site use the new
+signature unconditionally.
+"""
+
+from __future__ import annotations
+
+from typing import FrozenSet, Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              axis_names: Optional[FrozenSet[str]] = None):
+    """``jax.shard_map`` on new jax; experimental fallback on old jax."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {}
+    if check_vma is not None:        # omit to keep each version's default
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        # old API: `auto` is the complement — axes left in GSPMD auto mode
+        kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` on new jax; psum-of-ones fallback on old jax
+    (same value, resolved at trace time inside shard_map/pmap bodies)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -45,7 +45,8 @@ def pipeline_forward(stage_params, x_microbatches, block_fn: Callable,
     ``axis``.  Returns (M, mb, S_len, d) outputs (valid on the LAST stage;
     callers read them there).
     """
-    n_stages = jax.lax.axis_size(axis)
+    from repro.parallel.compat import axis_size
+    n_stages = axis_size(axis)
     stage_id = jax.lax.axis_index(axis)
     m = x_microbatches.shape[0]
 
@@ -108,9 +109,10 @@ def make_pipelined_fwd(mesh: Mesh, block_fn: Callable, n_stages: int,
     # manualize ONLY the pipeline axis (axis_names): the stage body keeps
     # the other mesh axes in auto (GSPMD) mode, so Megatron TP / sequence
     # sharding inside the blocks composes with the pipeline (TP-inside-PP).
-    return jax.shard_map(fwd, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False,
-                         axis_names=frozenset({axis}))
+    from repro.parallel.compat import shard_map
+    return shard_map(fwd, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False,
+                     axis_names=frozenset({axis}))
 
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:

@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import cdc
 
@@ -71,24 +70,7 @@ class TestByteShiftResistance:
         assert shared / len(chunks_b) > 0.9
 
 
-@settings(max_examples=25, deadline=None)
-@given(data=st.binary(min_size=0, max_size=30_000))
-def test_property_reconstruction(data):
-    assert b"".join(cdc.chunk_bytes(data, PARAMS)) == data
-
-
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 20_000), seed=st.integers(0, 100),
-       cut=st.integers(0, 20_000), ins=st.binary(min_size=1, max_size=64))
-def test_property_edit_locality(n, seed, cut, ins):
-    data = _rand(n, seed)
-    cut = min(cut, n)
-    edited = data[:cut] + ins + data[cut:]
-    chunks_a = {bytes(c) for c in cdc.chunk_bytes(data, PARAMS)}
-    chunks_b = list(cdc.chunk_bytes(edited, PARAMS))
-    shared = sum(1 for c in chunks_b if bytes(c) in chunks_a)
-    # at most a bounded number of chunks around the edit can change
-    assert len(chunks_b) - shared <= 3 + (len(ins) + 2 * PARAMS.max_size) // PARAMS.min_size
+# Hypothesis property tests live in tests/test_properties.py (optional dep).
 
 
 def test_mask_to_boundaries_matches_direct():

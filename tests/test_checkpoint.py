@@ -128,28 +128,4 @@ class TestManager:
         np.testing.assert_array_equal(back["params"]["w1"], st["params"]["w1"])
 
 
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 1000), groups=st.integers(1, 5),
-       n_leaves=st.integers(1, 6), byte_plane=st.booleans())
-def test_property_serializer_roundtrip(seed, groups, n_leaves, byte_plane):
-    """Any dict pytree of numeric arrays roundtrips exactly through any
-    group count and either layout."""
-    rng = np.random.default_rng(seed)
-    dtypes = [np.float32, np.int32, np.float16, np.uint8, np.int64]
-    tree = {}
-    for i in range(n_leaves):
-        shape = tuple(rng.integers(1, 8, size=rng.integers(0, 3)))
-        dt = dtypes[rng.integers(len(dtypes))]
-        tree[f"leaf{i}"] = (rng.standard_normal(shape) * 100).astype(dt) \
-            if np.issubdtype(dt, np.floating) else \
-            rng.integers(0, 100, size=shape).astype(dt)
-    streams = serialize_tree(tree, groups, byte_plane=byte_plane)
-    manifest = tree_manifest(tree)
-    if byte_plane:
-        manifest["__layout__"] = "byte_plane"
-    back = deserialize_tree(streams, manifest, tree)
-    for k in tree:
-        np.testing.assert_array_equal(np.asarray(back[k]), tree[k])
+# Hypothesis property tests live in tests/test_properties.py (optional dep).

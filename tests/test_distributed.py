@@ -187,7 +187,8 @@ class TestCompressionCollective:
             def body(g, e):
                 return cross_pod_allreduce_compressed(g[0], e[0], axis="pod",
                                                       density=0.05)
-            avg, new_err = jax.jit(jax.shard_map(
+            from repro.parallel.compat import shard_map
+            avg, new_err = jax.jit(shard_map(
                 body, mesh=mesh, in_specs=(P("pod"), P("pod")),
                 out_specs=(P(), P("pod")), check_vma=False))(g, err)
             # mass conservation per shard: sent + err == g

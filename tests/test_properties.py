@@ -1,0 +1,156 @@
+"""Hypothesis property tests (CDC, CDMT, checkpoint serializer, wire format).
+
+Collected only when ``hypothesis`` is installed — the module-level
+``importorskip`` keeps tier-1 runs green on minimal environments while CI
+with dev extras still gets full property coverage.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import cdc, hashing  # noqa: E402
+from repro.core.cdmt import CDMT, CDMTParams, compare  # noqa: E402
+from repro.core.store import Recipe  # noqa: E402
+from repro.delivery import wire  # noqa: E402
+
+PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+P = CDMTParams(window=4, rule_bits=2)
+
+
+def _rand(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 256, size=n,
+                                                dtype=np.uint8).tobytes()
+
+
+def _fps(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [hashing.chunk_fingerprint(rng.bytes(32)) for _ in range(n)]
+
+
+# ------------------------------------------------------------------- CDC
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=0, max_size=30_000))
+def test_property_reconstruction(data):
+    assert b"".join(cdc.chunk_bytes(data, PARAMS)) == data
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 20_000), seed=st.integers(0, 100),
+       cut=st.integers(0, 20_000), ins=st.binary(min_size=1, max_size=64))
+def test_property_edit_locality(n, seed, cut, ins):
+    data = _rand(n, seed)
+    cut = min(cut, n)
+    edited = data[:cut] + ins + data[cut:]
+    chunks_a = {bytes(c) for c in cdc.chunk_bytes(data, PARAMS)}
+    chunks_b = list(cdc.chunk_bytes(edited, PARAMS))
+    shared = sum(1 for c in chunks_b if bytes(c) in chunks_a)
+    # at most a bounded number of chunks around the edit can change
+    assert len(chunks_b) - shared <= 3 + (len(ins) + 2 * PARAMS.max_size) // PARAMS.min_size
+
+
+# ------------------------------------------------------------------ CDMT
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 400), seed=st.integers(0, 50))
+def test_property_build_covers_all_leaves(n, seed):
+    fps = _fps(n, seed)
+    t = CDMT.build(fps, P)
+    missing, _ = compare(None, t)
+    assert missing == set(fps)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 300), seed=st.integers(0, 50),
+       k=st.integers(0, 7))
+def test_property_compare_finds_all_new(n, seed, k):
+    fps = _fps(n, seed)
+    new = _fps(k, seed + 1000)
+    pos = n // 2
+    edited = fps[:pos] + new + fps[pos:]
+    a, b = CDMT.build(fps, P), CDMT.build(edited, P)
+    missing, _ = compare(a, b)
+    # Alg. 2 must never MISS a chunk the client lacks (superset is fine —
+    # extra chunks only cost bandwidth, missing ones break reconstruction)
+    assert set(new) <= missing | set(fps)
+
+
+# ------------------------------------------------------- checkpoint serializer
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), groups=st.integers(1, 5),
+       n_leaves=st.integers(1, 6), byte_plane=st.booleans())
+def test_property_serializer_roundtrip(seed, groups, n_leaves, byte_plane):
+    """Any dict pytree of numeric arrays roundtrips exactly through any
+    group count and either layout."""
+    from repro.checkpoint import deserialize_tree, serialize_tree, tree_manifest
+    rng = np.random.default_rng(seed)
+    dtypes = [np.float32, np.int32, np.float16, np.uint8, np.int64]
+    tree = {}
+    for i in range(n_leaves):
+        shape = tuple(rng.integers(1, 8, size=rng.integers(0, 3)))
+        dt = dtypes[rng.integers(len(dtypes))]
+        tree[f"leaf{i}"] = (rng.standard_normal(shape) * 100).astype(dt) \
+            if np.issubdtype(dt, np.floating) else \
+            rng.integers(0, 100, size=shape).astype(dt)
+    streams = serialize_tree(tree, groups, byte_plane=byte_plane)
+    manifest = tree_manifest(tree)
+    if byte_plane:
+        manifest["__layout__"] = "byte_plane"
+    back = deserialize_tree(streams, manifest, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]), tree[k])
+
+
+# ----------------------------------------------------------------- wire format
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(0, 300), seed=st.integers(0, 50))
+def test_property_index_roundtrip(n, seed):
+    fps = _fps(n, seed)
+    t = CDMT.build(fps, P)
+    back = wire.decode_index(wire.encode_index(t))
+    assert back.root == t.root
+    assert back.levels == t.levels
+    assert set(back.nodes) == set(t.nodes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(0, 5000), max_size=40),
+       seed=st.integers(0, 50), name=st.text(max_size=30))
+def test_property_recipe_roundtrip(sizes, seed, name):
+    rng = np.random.default_rng(seed)
+    fps = [hashing.chunk_fingerprint(rng.bytes(16)) for _ in sizes]
+    r = Recipe(name=name, fps=fps, sizes=list(sizes))
+    back = wire.decode_recipe(wire.encode_recipe(r))
+    assert back.name == r.name and back.fps == r.fps and back.sizes == r.sizes
+
+
+@settings(max_examples=25, deadline=None)
+@given(blobs=st.lists(st.binary(min_size=0, max_size=2000), max_size=20))
+def test_property_chunk_batch_roundtrip(blobs):
+    chunks = {hashing.chunk_fingerprint(b): b for b in blobs}
+    back = wire.decode_chunk_batch(wire.encode_chunk_batch(chunks))
+    assert back == chunks
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(0, 2**64 - 1))
+def test_property_uvarint_roundtrip(n):
+    v, off = wire.decode_uvarint(wire.encode_uvarint(n))
+    assert v == n and off == len(wire.encode_uvarint(n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(blobs=st.lists(st.binary(min_size=1, max_size=500), min_size=1,
+                      max_size=8),
+       cut_frac=st.floats(0.0, 0.999))
+def test_property_truncated_batch_always_raises(blobs, cut_frac):
+    chunks = {hashing.chunk_fingerprint(b): b for b in blobs}
+    frame = wire.encode_chunk_batch(chunks)
+    cut = int(len(frame) * cut_frac)
+    with pytest.raises(wire.WireError):
+        wire.decode_chunk_batch(frame[:cut])
