@@ -1,0 +1,85 @@
+"""Incremental registry push vs full index rebuild (paper Sec. V: "maintain
+the CDMT index efficiently as new image versions are pushed").
+
+For each image size n (leaves) we push a base version and then a chain of
+versions each changing k leaves.  Two metrics show the incremental path is
+O(changed subtrees), not O(n):
+
+  * ``incr_hash_calls`` — blake2b calls per push (node ids + rolling-window
+    boundary tests) on the registry's verified-params path, vs
+    ``full_hash_calls`` for the throwaway full rebuild the registry used to
+    do.  Flat in n ⇒ push cost is proportional to change size.
+  * ``push_ms`` — wall time of ``receive_push`` (includes chunk hashing of
+    the k new payloads and recipe coverage checks).
+
+The acceptance bar (≥5× fewer hash calls at n≈10k, k≈10) is asserted by
+``tests/test_incremental_cdmt.py``; this benchmark shows the scaling curve.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.cdmt import BuildStats, CDMT, DEFAULT_PARAMS
+from repro.core.registry import Registry
+from repro.core.store import Recipe
+
+from benchmarks.common import Report, Timer
+
+CHUNK = 64          # tiny payloads: the cost under study is indexing
+K_CHANGED = 10
+N_VERSIONS = 8
+
+
+def _payload(rng) -> bytes:
+    return rng.bytes(CHUNK)
+
+
+def run() -> Report:
+    rep = Report("push_incremental")
+    rng = np.random.default_rng(0)
+    for n in (1_000, 3_000, 10_000, 30_000):
+        reg = Registry()
+        payloads = [_payload(rng) for _ in range(n)]
+        fps = [hashing.chunk_fingerprint(p) for p in payloads]
+        sizes = [len(p) for p in payloads]
+        client = CDMT.build(fps, DEFAULT_PARAMS)
+        reg.receive_push("img", "v0", Recipe("img:v0", list(fps), sizes),
+                         dict(zip(fps, payloads)), claimed_root=client.root)
+
+        cur = list(fps)
+        incr_calls = []
+        full_calls = []
+        created = []
+        push_ms = []
+        for v in range(1, N_VERSIONS + 1):
+            newchunks = {}
+            for i in rng.choice(n, size=K_CHANGED, replace=False):
+                p = _payload(rng)
+                fp = hashing.chunk_fingerprint(p)
+                cur[int(i)] = fp
+                newchunks[fp] = p
+            client = CDMT.build_incremental(client, cur)
+            recipe = Recipe(f"img:v{v}", list(cur), sizes)
+            with Timer() as t:
+                receipt = reg.receive_push("img", f"v{v}", recipe, newchunks,
+                                           claimed_root=client.root)
+            push_ms.append(t.s * 1e3)
+            incr_calls.append(receipt.hash_calls)
+            created.append(receipt.nodes_created)
+            st = BuildStats()
+            CDMT.build(cur, DEFAULT_PARAMS, stats=st)   # the old full path
+            full_calls.append(st.hash_calls)
+
+        rep.add(n_leaves=n, k_changed=K_CHANGED, versions=N_VERSIONS,
+                incr_hash_calls=float(np.mean(incr_calls)),
+                full_hash_calls=float(np.mean(full_calls)),
+                hash_ratio=float(np.mean(full_calls) / np.mean(incr_calls)),
+                nodes_created=float(np.mean(created)),
+                push_ms=float(np.mean(push_ms)))
+    return rep
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -10,7 +10,8 @@ from benchmarks import (bench_build_time, bench_cdmt_ablation,
                         bench_cdmt_vs_merkle, bench_checkpoint_delivery,
                         bench_comparison_ratio, bench_dedup_ratio,
                         bench_delivery_scale, bench_global_dedup,
-                        bench_kernels, bench_pushpull_io, roofline)
+                        bench_kernels, bench_push_incremental,
+                        bench_pushpull_io, roofline)
 
 ALL = {
     "fig6_dedup_ratio": bench_dedup_ratio.run,
@@ -22,6 +23,7 @@ ALL = {
     "delivery_scale": bench_delivery_scale.run,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
+    "push_incremental": bench_push_incremental.run,
     "kernels": bench_kernels.run,
     "roofline": roofline.run,
 }

@@ -28,6 +28,13 @@ def node_fingerprint(child_hashes: Iterable[bytes]) -> bytes:
     return h.digest()
 
 
+def checksum(data: bytes, size: int = 8) -> bytes:
+    """Short blake2b integrity checksum (journal/wire records).  Not an
+    identifier — dedup never keys on it — so a shorter digest is fine: it
+    only needs to catch torn writes and bit rot."""
+    return hashlib.blake2b(data, digest_size=size).digest()
+
+
 def fingerprint_many(chunks: Iterable[bytes]) -> List[bytes]:
     return [chunk_fingerprint(c) for c in chunks]
 

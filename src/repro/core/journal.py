@@ -1,0 +1,135 @@
+"""Append-only, checksummed journal — the registry's crash-safe state log.
+
+Record framing reuses the delivery wire format's checksummed records
+(:func:`repro.delivery.wire.encode_record`): ``magic | version | type |
+uvarint(len) | payload | blake2b-8``.  A reader stops at the first record
+that fails to decode — a torn tail from a crash mid-append — and
+:class:`Journal` truncates the file back to the last complete record before
+appending again, so one crash never poisons subsequent recoveries.
+
+Durability contract: with ``sync=True`` (the default) :meth:`Journal.append`
+returns only after ``fsync``, so a registry commit acknowledged to the client
+survives a crash of the registry process *and* of the host.
+
+Snapshots (:func:`write_snapshot`) are just compacted record files written
+via temp-file + ``fsync`` + atomic rename: recovery replays snapshot then
+journal, and because the registry's record application is idempotent, a crash
+between snapshot rename and journal truncation only causes harmless
+re-application.
+
+Layering note: like ``core.pushpull``, this module's wire-format use is the
+deliberate upward reference from core to the delivery layer; it is imported
+lazily (call time) so ``import repro.core`` never recurses into
+``repro.delivery``'s package init.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Tuple
+
+from .errors import JournalError
+
+__all__ = ["Journal", "JournalError", "scan_records", "write_snapshot"]
+
+
+def _wire():
+    from repro.delivery import wire   # lazy: see layering note above
+    return wire
+
+
+def scan_records(path: str) -> Tuple[List[Tuple[int, bytes]], int, int]:
+    """Read every complete record of ``path``.
+
+    Returns ``(records, good_end, file_size)`` where ``records`` is a list of
+    ``(type, payload)`` and ``good_end`` is the byte offset after the last
+    record that decoded cleanly — everything past it is a torn tail.
+    A missing file is an empty journal, not an error.
+    """
+    if not os.path.exists(path):
+        return [], 0, 0
+    with open(path, "rb") as f:
+        buf = f.read()
+    wire = _wire()
+    records: List[Tuple[int, bytes]] = []
+    off = 0
+    while off < len(buf):
+        try:
+            rtype, payload, noff = wire.decode_record(buf, off)
+        except wire.WireError:
+            break                       # torn/corrupt tail: stop here
+        records.append((rtype, payload))
+        off = noff
+    return records, off, len(buf)
+
+
+class Journal:
+    """Writable journal over one file: recover, replay, append, reset."""
+
+    def __init__(self, path: str, sync: bool = True):
+        self.path = path
+        self.sync_writes = sync
+        records, good_end, size = scan_records(path)
+        self.torn_bytes_discarded = size - good_end
+        if self.torn_bytes_discarded:
+            with open(path, "r+b") as f:
+                f.truncate(good_end)
+        self._pending: List[Tuple[int, bytes]] = records
+        self._f = open(path, "ab")
+
+    # ------------------------------------------------------------------ read
+
+    def replay(self) -> List[Tuple[int, bytes]]:
+        """The records recovered at open time (consumed on first call)."""
+        records, self._pending = self._pending, []
+        return records
+
+    # ----------------------------------------------------------------- write
+
+    def append(self, rtype: int, payload: bytes) -> None:
+        if self._f is None:
+            raise JournalError(f"journal {self.path} is closed")
+        self._f.write(_wire().encode_record(rtype, payload))
+        self._f.flush()
+        if self.sync_writes:
+            os.fsync(self._f.fileno())
+
+    def reset(self) -> None:
+        """Truncate to empty — call only after the state the journal covers
+        has been snapshotted durably elsewhere."""
+        if self._f is None:
+            raise JournalError(f"journal {self.path} is closed")
+        self._f.close()
+        self._f = open(self.path, "wb")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    # ------------------------------------------------------------ accounting
+
+    def size_bytes(self) -> int:
+        return os.path.getsize(self.path) if os.path.exists(self.path) else 0
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def write_snapshot(path: str, records: Iterable[Tuple[int, bytes]]) -> None:
+    """Atomically write a compacted record file: temp + fsync + rename +
+    directory fsync.  Readers either see the old snapshot or the complete
+    new one, never a partial write."""
+    wire = _wire()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        for rtype, payload in records:
+            f.write(wire.encode_record(rtype, payload))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    dfd = os.open(dirname, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)

@@ -3,24 +3,44 @@
 Hosts all versions of each artifact lineage plus **one CDMT index per
 lineage** (maintained with node-copying as new versions are pushed).  The
 registry never re-chunks on push — the client ships chunk fps + new chunks +
-the new CDMT leaf sequence; the registry rebuilds/extends the versioned index
-(cheap: Fig. 10 shows indexing ≪ hashing) and verifies the root matches the
+the new CDMT leaf sequence; the registry *incrementally* extends the
+versioned index against the parent version's tree (cheap: only subtrees
+whose leaf spans changed are re-hashed) and verifies the root matches the
 client's claim, which doubles as the authentication mechanism.
+
+Durability (``directory`` mode): registry state — version records, recipes,
+tags, metadata — is persisted in an append-only, checksummed journal
+(``registry.journal``, see :mod:`repro.core.journal`) with fsync-on-commit;
+chunk payloads live in the :class:`~repro.core.store.ChunkStore` log and are
+fsynced *before* the commit record is appended, so an acknowledged push
+never references non-durable chunks.  ``Registry.__init__`` recovers by
+replaying the snapshot (``registry.snap``, written by :meth:`compact`) and
+then the journal, truncating any torn tail; replay rebuilds each lineage's
+CDMT incrementally from the recorded recipes, so recovery hashing is
+proportional to total *change* size, not versions × image size.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from . import hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
+from .errors import DeliveryError, JournalError
+from .journal import Journal, scan_records, write_snapshot
 from .store import DedupStore, Recipe
 from .versioning import VersionedCDMT, VersionRecord
 
+# journal record types
+_J_COMMIT = 1
+_J_META = 2
+
 
 class PushRejected(ValueError):
-    """Push failed server-side verification (root mismatch / bad chunk)."""
+    """Push failed server-side verification (root mismatch / bad chunk /
+    tag conflict)."""
 
 
 @dataclasses.dataclass
@@ -32,18 +52,50 @@ class PushReceipt:
     bytes_received: int
     index_bytes: int
     root: bytes
+    nodes_created: int = 0      # CDMT nodes this push materialized
+    nodes_hashed: int = 0       # node ids fingerprinted (O(k·depth) incr.)
+    hash_calls: int = 0         # nodes_hashed + rolling-window cut tests
+    deduplicated: bool = False  # tag+root already present; no new version
 
 
 class Registry:
-    """A registry: global chunk store + per-lineage versioned CDMT."""
+    """A registry: global chunk store + per-lineage versioned CDMT.
+
+    With ``directory`` set the registry is durable: every committed push and
+    metadata write is journaled (fsynced by default) and ``__init__``
+    recovers the full index from disk.  Lineages are only durable through
+    this API (``receive_push`` / ``put_metadata``) — commits made directly
+    on a :class:`VersionedCDMT` bypass the journal.
+    """
 
     def __init__(self, directory: Optional[str] = None,
-                 cdmt_params: CDMTParams = DEFAULT_PARAMS):
+                 cdmt_params: CDMTParams = DEFAULT_PARAMS,
+                 sync: bool = True):
         self.store = DedupStore(directory)
         self.cdmt_params = cdmt_params
         self.lineages: Dict[str, VersionedCDMT] = {}
         self.recipes: Dict[Tuple[str, str], Recipe] = {}   # (lineage, tag)
         self.metadata: Dict[Tuple[str, str], bytes] = {}   # small blobs (manifests)
+        self._journal: Optional[Journal] = None
+        self._snap_path: Optional[str] = None
+        if directory is not None:
+            self._snap_path = os.path.join(directory, "registry.snap")
+            if os.path.exists(self._snap_path):
+                # snapshots are written atomically (temp + fsync + rename),
+                # so unlike the append-only journal they have no legitimate
+                # torn tail: any undecodable record is real corruption and
+                # must fail loudly, not silently drop the versions after it
+                records, good_end, size = scan_records(self._snap_path)
+                if good_end != size:
+                    raise JournalError(
+                        f"snapshot {self._snap_path} is corrupt at byte "
+                        f"{good_end} of {size}")
+                for rtype, payload in records:
+                    self._apply(rtype, payload)
+            self._journal = Journal(
+                os.path.join(directory, "registry.journal"), sync=sync)
+            for rtype, payload in self._journal.replay():
+                self._apply(rtype, payload)
 
     # -- server-side API (what the wire protocol calls) -----------------------
 
@@ -59,7 +111,15 @@ class Registry:
         return lin.get_version(lin.roots[-1].version)
 
     def index_for_tag(self, lineage: str, tag: str) -> CDMT:
-        return self.lineage(lineage).get_tag(tag)
+        """CDMT for ``lineage:tag``; :class:`DeliveryError` (a clean
+        protocol-level error, not a bare ``KeyError``) when unknown."""
+        lin = self.lineages.get(lineage)
+        if lin is None:
+            raise DeliveryError(f"unknown lineage {lineage!r}")
+        version = lin.version_of(tag)
+        if version is None:
+            raise DeliveryError(f"unknown tag {lineage}:{tag}")
+        return lin.get_version(version)
 
     def has_chunks(self, fps: Iterable[bytes]) -> List[bytes]:
         """Which of ``fps`` the registry is missing."""
@@ -83,17 +143,28 @@ class Registry:
           pushed now or already stored — so a committed version is always
           reconstructable, and every pushed chunk must be referenced by the
           recipe, so no unreachable data enters the store;
-        * with ``claimed_root`` given, the CDMT rebuilt from the recipe's
-          leaf sequence must hash to exactly that root.  The rebuild uses
-          ``claimed_params`` (the tree parameters the client built with —
-          carried in the push header on the wire path) so clients with
-          non-default ``CDMTParams`` verify correctly; the check binds the
-          stored recipe to the root the client vouched for.
+        * with ``claimed_root`` given, the CDMT built from the recipe's leaf
+          sequence must hash to exactly that root.  When the claim's params
+          match the registry's, this build is **incremental** against the
+          parent version's tree (O(changed subtrees), not O(n_leaves)) and
+          is the very tree the commit then installs — one build serves both
+          verification and maintenance, with no throwaway full rebuild.
+          With foreign ``claimed_params`` the claim is verified against a
+          throwaway build with those params (a differently-cut tree cannot
+          be donated to the lineage);
+        * re-pushing an existing tag with the same root is idempotent
+          (``deduplicated`` receipt, no new version); with a different root
+          it is rejected — a tag binds one root, forever.
 
-        All checks run *before* any state is mutated (the verification tree
-        uses a throwaway node store); a failed push leaves the registry
-        untouched and raises :class:`PushRejected`.
+        All checks run *before* any state is mutated (new CDMT nodes land in
+        a copy-on-write overlay); a failed push leaves the registry
+        untouched and raises :class:`PushRejected`.  On success, chunks are
+        fsynced and the commit is journaled before the receipt is returned.
         """
+        if len(recipe.fps) != len(recipe.sizes):
+            raise PushRejected(
+                f"push {lineage}:{tag}: recipe has {len(recipe.fps)} "
+                f"fingerprints but {len(recipe.sizes)} sizes")
         if not chunks_verified:
             for fp, data in chunks.items():
                 if hashing.chunk_fingerprint(data) != fp:
@@ -114,47 +185,256 @@ class Registry:
                 f"push {lineage}:{tag}: recipe references "
                 f"{len(unavailable)} chunk(s) neither pushed nor stored "
                 f"(first: {unavailable[0].hex()[:12]})")
-        rebuilt: Optional[CDMT] = None
-        if claimed_root is not None:
-            params = claimed_params or self.cdmt_params
-            rebuilt = CDMT.build(recipe.fps, params=params)
-            if rebuilt.root != claimed_root:
+
+        lin = self.lineages.get(lineage)
+        new_lineage = lin is None
+        if new_lineage:
+            lin = VersionedCDMT(params=self.cdmt_params)
+        if parent_version is not None and not 0 <= parent_version < len(lin.roots):
+            raise PushRejected(
+                f"push {lineage}:{tag}: unknown parent version "
+                f"{parent_version}")
+        params = claimed_params or self.cdmt_params
+        if claimed_root is not None and params != self.cdmt_params:
+            # foreign tree parameters: verify the claim against a throwaway
+            # build with those params; the lineage index below still uses
+            # the registry's own params (a differently-cut tree cannot be
+            # donated)
+            check = CDMT.build(recipe.fps, params=params)
+            if check.root != claimed_root:
                 raise PushRejected(
                     f"push {lineage}:{tag}: rebuilt CDMT root "
-                    f"{rebuilt.root.hex()[:12] if rebuilt.root else None} != "
+                    f"{check.root.hex()[:12] if check.root else None} != "
                     f"claimed {claimed_root.hex()[:12]}")
-            if params != self.cdmt_params:
-                rebuilt = None          # cannot donate a differently-cut tree
-        lin = self.lineage(lineage)
+            claimed_root = None        # claim consumed; registry-params build
+        tree, new_nodes, stats = lin.build_next(recipe.fps,
+                                                parent=parent_version)
+        if claimed_root is not None and tree.root != claimed_root:
+            raise PushRejected(
+                f"push {lineage}:{tag}: rebuilt CDMT root "
+                f"{tree.root.hex()[:12] if tree.root else None} != "
+                f"claimed {claimed_root.hex()[:12]}")
+        existing = lin.version_of(tag)
+        if existing is not None:
+            prev = lin.roots[existing]
+            if prev.root != tree.root:
+                raise PushRejected(
+                    f"push {lineage}:{tag}: tag is already bound to a "
+                    f"different root — push under a new tag")
+            return PushReceipt(lineage=lineage, tag=tag, version=prev.version,
+                               chunks_received=0, bytes_received=0,
+                               index_bytes=tree.index_size_bytes(),
+                               root=prev.root, hash_calls=stats.hash_calls,
+                               nodes_hashed=stats.nodes_hashed,
+                               deduplicated=True)
+
+        # -- verified: mutate (chunks → journal → recipes → index) ------------
+        # Write-ahead order: the commit record is journaled BEFORE any
+        # in-memory index state changes.  If the append fails (ENOSPC, closed
+        # journal) the push errors out with the index untouched, so a client
+        # retry re-runs verification and re-journals — never a success
+        # receipt for a version that would vanish on restart.  (Chunks land
+        # first: they are content-addressed, so an orphan from a failed push
+        # is idle data, not corruption.)
         nbytes = 0
         nchunks = 0
         for fp, data in chunks.items():
             if self.store.chunks.put(fp, data):
                 nchunks += 1
                 nbytes += len(data)
+        self.store.chunks.sync()       # chunks durable before the commit record
+        parent_resolved = (parent_version if parent_version is not None
+                           else lin.head_version())
+        pending = VersionRecord(version=len(lin.roots), tag=tag,
+                                root=tree.root, parent=parent_resolved,
+                                n_leaves=len(recipe.fps), new_nodes=0)
+        if self._journal is not None:
+            self._journal.append(_J_COMMIT,
+                                 _encode_commit(lineage, tag, pending, recipe))
         self.recipes[(lineage, tag)] = recipe
         self.store.recipes[f"{lineage}:{tag}"] = recipe
         rec = lin.commit(recipe.fps, tag=tag, parent=parent_version,
-                         tree=rebuilt)
-        idx = lin.get_version(rec.version)
+                         tree=tree, new_nodes=new_nodes)
+        assert rec.version == pending.version and rec.root == pending.root
+        if new_lineage:
+            self.lineages[lineage] = lin
         return PushReceipt(lineage=lineage, tag=tag, version=rec.version,
                            chunks_received=nchunks, bytes_received=nbytes,
-                           index_bytes=idx.index_size_bytes(), root=rec.root)
+                           index_bytes=tree.index_size_bytes(), root=rec.root,
+                           nodes_created=rec.new_nodes,
+                           nodes_hashed=stats.nodes_hashed,
+                           hash_calls=stats.hash_calls)
 
     def serve_chunks(self, fps: Sequence[bytes]) -> Dict[bytes, bytes]:
-        return {fp: self.store.chunks.get(fp) for fp in fps}
+        """Chunk payloads for ``fps``; an unknown fingerprint raises a clean
+        :class:`DeliveryError` instead of leaking a bare ``KeyError``
+        through the wire frontend."""
+        out: Dict[bytes, bytes] = {}
+        for fp in fps:
+            try:
+                out[fp] = self.store.chunks.get(fp)
+            except KeyError:
+                raise DeliveryError(
+                    f"registry cannot serve unknown chunk "
+                    f"{fp.hex()[:12]}") from None
+        return out
 
     def recipe_for(self, lineage: str, tag: str) -> Recipe:
-        return self.recipes[(lineage, tag)]
+        recipe = self.recipes.get((lineage, tag))
+        if recipe is None:
+            raise DeliveryError(f"no recipe for {lineage}:{tag}")
+        return recipe
 
     def tags(self, lineage: str) -> List[str]:
         lin = self.lineages.get(lineage)
-        return [r.tag for r in lin.roots] if lin else []
+        return lin.tags() if lin else []
 
     # -- small metadata blobs (checkpoint manifests etc.) ---------------------
 
     def put_metadata(self, lineage: str, tag: str, blob: bytes) -> None:
+        # write-ahead like receive_push: journal first, so a failed append
+        # never leaves in-memory state a later compact() would resurrect
+        if self._journal is not None:
+            self._journal.append(_J_META, _encode_meta(lineage, tag, blob))
         self.metadata[(lineage, tag)] = blob
 
     def get_metadata(self, lineage: str, tag: str) -> bytes:
-        return self.metadata[(lineage, tag)]
+        blob = self.metadata.get((lineage, tag))
+        if blob is None:
+            raise DeliveryError(f"no metadata for {lineage}:{tag}")
+        return blob
+
+    # -- durability ----------------------------------------------------------
+
+    def _apply(self, rtype: int, payload: bytes) -> None:
+        """Replay one journal/snapshot record.  Unknown record types are
+        skipped (forward compatibility); inconsistent records raise
+        :class:`JournalError`."""
+        if rtype == _J_COMMIT:
+            lineage, tag, version, parent, root, recipe = \
+                _decode_commit(payload)
+            lin = self.lineage(lineage)
+            try:
+                rec = lin.commit(recipe.fps, tag=tag, parent=parent)
+            except ValueError as e:
+                raise JournalError(f"replay {lineage}:{tag}: {e}") from None
+            if rec.version != version:
+                raise JournalError(
+                    f"replay {lineage}:{tag}: assigned version {rec.version} "
+                    f"!= journaled {version}")
+            if rec.root != root:
+                raise JournalError(
+                    f"replay {lineage}:{tag}: rebuilt root "
+                    f"{rec.root.hex()[:12] if rec.root else None} != "
+                    f"journaled {root.hex()[:12] if root else None}")
+            self.recipes[(lineage, tag)] = recipe
+            self.store.recipes[f"{lineage}:{tag}"] = recipe
+        elif rtype == _J_META:
+            lineage, tag, blob = _decode_meta(payload)
+            self.metadata[(lineage, tag)] = blob
+
+    def compact(self) -> None:
+        """Write the current state as a snapshot and truncate the journal.
+
+        Crash-safe in every window: the snapshot lands by atomic rename, and
+        if the process dies between rename and journal truncation, recovery
+        replays snapshot *and* journal — commit replay is idempotent (same
+        tag, same root), so the overlap is harmless.
+        """
+        if self._journal is None:
+            return
+        records: List[Tuple[int, bytes]] = []
+        for lineage, lin in self.lineages.items():
+            for rec in lin.version_records():
+                recipe = self.recipes.get((lineage, rec.tag))
+                if recipe is not None:
+                    records.append(
+                        (_J_COMMIT, _encode_commit(lineage, rec.tag, rec,
+                                                   recipe)))
+        for (lineage, tag), blob in self.metadata.items():
+            records.append((_J_META, _encode_meta(lineage, tag, blob)))
+        write_snapshot(self._snap_path, records)
+        self._journal.reset()
+
+    def journal_size_bytes(self) -> int:
+        return self._journal.size_bytes() if self._journal is not None else 0
+
+    def close(self) -> None:
+        if self._journal is not None:
+            self._journal.close()
+        self.store.close()
+
+
+# ---------------------------------------------------- journal record payloads
+
+def _encode_commit(lineage: str, tag: str, rec: VersionRecord,
+                   recipe: Recipe) -> bytes:
+    from repro.delivery import wire     # lazy: see journal layering note
+    out = bytearray()
+    for s in (lineage, tag):
+        b = s.encode("utf-8")
+        out += wire.encode_uvarint(len(b))
+        out += b
+    out += wire.encode_uvarint(rec.version)
+    if rec.parent is None:
+        out += wire.encode_uvarint(0)
+    else:
+        out += wire.encode_uvarint(1)
+        out += wire.encode_uvarint(rec.parent)
+    if rec.root is None:
+        out += wire.encode_uvarint(0)
+    else:
+        out += wire.encode_uvarint(1)
+        out += rec.root
+    out += wire.encode_recipe(recipe)   # trailing self-verifying RECIPE frame
+    return bytes(out)
+
+
+def _decode_commit(payload: bytes
+                   ) -> Tuple[str, str, int, Optional[int], Optional[bytes],
+                              Recipe]:
+    from repro.delivery import wire
+    off = 0
+    strs: List[str] = []
+    for _ in range(2):
+        n, off = wire.decode_uvarint(payload, off)
+        if off + n > len(payload):
+            raise JournalError("truncated commit record string")
+        strs.append(payload[off:off + n].decode("utf-8"))
+        off += n
+    version, off = wire.decode_uvarint(payload, off)
+    has_parent, off = wire.decode_uvarint(payload, off)
+    parent: Optional[int] = None
+    if has_parent:
+        parent, off = wire.decode_uvarint(payload, off)
+    has_root, off = wire.decode_uvarint(payload, off)
+    root: Optional[bytes] = None
+    if has_root:
+        root = payload[off:off + hashing.DIGEST_SIZE]
+        if len(root) != hashing.DIGEST_SIZE:
+            raise JournalError("truncated commit record root")
+        off += hashing.DIGEST_SIZE
+    recipe = wire.decode_recipe(payload[off:])
+    return strs[0], strs[1], version, parent, root, recipe
+
+
+def _encode_meta(lineage: str, tag: str, blob: bytes) -> bytes:
+    from repro.delivery import wire
+    out = bytearray()
+    for b in (lineage.encode("utf-8"), tag.encode("utf-8"), blob):
+        out += wire.encode_uvarint(len(b))
+        out += b
+    return bytes(out)
+
+
+def _decode_meta(payload: bytes) -> Tuple[str, str, bytes]:
+    from repro.delivery import wire
+    off = 0
+    parts: List[bytes] = []
+    for _ in range(3):
+        n, off = wire.decode_uvarint(payload, off)
+        if off + n > len(payload):
+            raise JournalError("truncated metadata record")
+        parts.append(payload[off:off + n])
+        off += n
+    return parts[0].decode("utf-8"), parts[1].decode("utf-8"), parts[2]

@@ -7,6 +7,19 @@
 
 Backed either by memory (tests/benchmarks) or a directory (examples /
 checkpointing).  All writes are append-only; chunks are immutable.
+
+Crash safety (directory mode): ``chunks.log`` is written before its
+``chunks.idx`` entry, so recovery (:meth:`ChunkStore._load`) can always
+repair a torn write — a partial index record is truncated, an index entry
+pointing past the end of the log is dropped (with everything after it), and
+an orphan log tail with no index entry is truncated.  ``sync()`` fsyncs both
+files and then atomically updates a ``chunks.clean`` marker recording the
+synced sizes; on recovery, entries within the marker are trusted, while
+entries written *after* the last sync are verified against their payload's
+blake2b (the OS may persist an index entry and the log's length without the
+log's data blocks — a flush is not an fsync), with the first mismatch
+treated as the torn tail.  The registry calls ``sync()`` before journaling a
+commit so an acknowledged push never references non-durable chunks.
 """
 
 from __future__ import annotations
@@ -20,6 +33,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import cdc, hashing
+from .errors import DeliveryError
 
 
 @dataclasses.dataclass
@@ -42,39 +56,113 @@ class Recipe:
 
     @classmethod
     def from_json(cls, s: str) -> "Recipe":
+        """Parse + validate: a malformed recipe must fail here with a clear
+        ``ValueError``, not later as an opaque KeyError/size mismatch."""
         d = json.loads(s)
-        return cls(name=d["name"], fps=[bytes.fromhex(f) for f in d["fps"]],
-                   sizes=d["sizes"])
+        name = d["name"]
+        fps = [bytes.fromhex(f) for f in d["fps"]]
+        sizes = [int(x) for x in d["sizes"]]
+        if len(fps) != len(sizes):
+            raise ValueError(
+                f"recipe {name!r}: {len(fps)} fingerprints but "
+                f"{len(sizes)} sizes")
+        for f in fps:
+            if len(f) != hashing.DIGEST_SIZE:
+                raise ValueError(
+                    f"recipe {name!r}: fingerprint length {len(f)} != "
+                    f"digest size {hashing.DIGEST_SIZE}")
+        if any(x < 0 for x in sizes):
+            raise ValueError(f"recipe {name!r}: negative chunk size")
+        return cls(name=name, fps=fps, sizes=sizes)
 
 
 class ChunkStore:
     """Log-structured unique-chunk store with a fingerprint→location index."""
 
+    _IDX_ENTRY = hashing.DIGEST_SIZE + 16       # fp + <QQ>(offset, size)
+
     def __init__(self, directory: Optional[str] = None):
         self.directory = directory
         self._mem: Dict[bytes, bytes] = {}
         self._index: Dict[bytes, Tuple[int, int]] = {}   # fp -> (offset, size)
-        self._log_path = None
+        self._log_path: Optional[str] = None
+        self._idx_path: Optional[str] = None
+        self._clean_path: Optional[str] = None
         self._log_size = 0
+        self._idx_size = 0
+        self._log_f = None
+        self._idx_f = None
+        self._read_fd: Optional[int] = None
+        self.recovered_torn_bytes = 0           # crash debris dropped at open
         if directory is not None:
             os.makedirs(directory, exist_ok=True)
             self._log_path = os.path.join(directory, "chunks.log")
             self._idx_path = os.path.join(directory, "chunks.idx")
+            self._clean_path = os.path.join(directory, "chunks.clean")
             self._load()
+            # persistent handles: append once, not reopen-per-put; reads use
+            # pread on a dedicated fd (positionless ⇒ thread-safe)
+            self._log_f = open(self._log_path, "ab")
+            self._idx_f = open(self._idx_path, "ab")
+            self._read_fd = os.open(self._log_path, os.O_RDONLY)
 
     # -- persistence ---------------------------------------------------------
 
+    def _read_marker(self) -> Tuple[int, int]:
+        """(log bytes, idx bytes) known durable from the last ``sync()``."""
+        try:
+            with open(self._clean_path, "rb") as f:
+                raw = f.read(16)
+            if len(raw) == 16:
+                return struct.unpack("<QQ", raw)
+        except OSError:
+            pass
+        return 0, 0
+
     def _load(self) -> None:
-        if self._log_path and os.path.exists(self._idx_path):
+        """Rebuild the in-memory index, repairing any torn tail.  Entries
+        past the ``chunks.clean`` marker (written after the last fsync) are
+        verified against their payload hash: an fsync-less crash can persist
+        the index entry and the log length without the log's data blocks."""
+        log_size = (os.path.getsize(self._log_path)
+                    if os.path.exists(self._log_path) else 0)
+        data = b""
+        if os.path.exists(self._idx_path):
             with open(self._idx_path, "rb") as f:
                 data = f.read()
-            off = 0
-            while off < len(data):
+        trusted_log, trusted_idx = self._read_marker()
+        log_f = open(self._log_path, "rb") if log_size else None
+        good = 0
+        end = 0
+        off = 0
+        try:
+            while off + self._IDX_ENTRY <= len(data):
                 fp = data[off:off + hashing.DIGEST_SIZE]
-                o, s = struct.unpack_from("<QQ", data, off + hashing.DIGEST_SIZE)
+                o, s = struct.unpack_from("<QQ", data,
+                                          off + hashing.DIGEST_SIZE)
+                if o + s > log_size:
+                    break   # entry references bytes the log never durably got
+                if off + self._IDX_ENTRY > trusted_idx or o + s > trusted_log:
+                    log_f.seek(o)
+                    if hashing.chunk_fingerprint(log_f.read(s)) != fp:
+                        break                   # unsynced data never landed
                 self._index[fp] = (o, s)
-                off += hashing.DIGEST_SIZE + 16
-            self._log_size = os.path.getsize(self._log_path) if os.path.exists(self._log_path) else 0
+                end = max(end, o + s)
+                off += self._IDX_ENTRY
+                good = off
+        finally:
+            if log_f is not None:
+                log_f.close()
+        if len(data) > good:                    # partial/invalid idx records
+            self.recovered_torn_bytes += len(data) - good
+            with open(self._idx_path, "r+b") as f:
+                f.truncate(good)
+        if log_size > end:                      # orphan chunk bytes, no entry
+            self.recovered_torn_bytes += log_size - end
+            with open(self._log_path, "r+b") as f:
+                f.truncate(end)
+        self._log_size = end
+        self._idx_size = good
 
     # -- API -----------------------------------------------------------------
 
@@ -82,16 +170,23 @@ class ChunkStore:
         return fp in self._index or fp in self._mem
 
     def put(self, fp: bytes, data: bytes) -> bool:
-        """Store chunk if absent.  Returns True if newly stored."""
+        """Store chunk if absent.  Returns True if newly stored.  Log bytes
+        are flushed before the index entry is written, preserving the
+        log-before-index recovery invariant."""
         if self.has(fp):
             return False
-        if self._log_path is not None:
-            with open(self._log_path, "ab") as f:
-                f.write(data)
-            with open(self._idx_path, "ab") as f:
-                f.write(fp + struct.pack("<QQ", self._log_size, len(data)))
+        if self.directory is not None:
+            if self._log_f is None:
+                raise RuntimeError(
+                    f"ChunkStore {self.directory} is closed — refusing to "
+                    f"degrade to the in-memory backend")
+            self._log_f.write(data)
+            self._log_f.flush()
+            self._idx_f.write(fp + struct.pack("<QQ", self._log_size, len(data)))
+            self._idx_f.flush()
             self._index[fp] = (self._log_size, len(data))
             self._log_size += len(data)
+            self._idx_size += self._IDX_ENTRY
         else:
             self._mem[fp] = data
             self._index[fp] = (0, len(data))
@@ -100,12 +195,38 @@ class ChunkStore:
     def get(self, fp: bytes) -> bytes:
         if fp in self._mem:
             return self._mem[fp]
-        if self._log_path is not None and fp in self._index:
+        if self.directory is not None and fp in self._index:
+            if self._read_fd is None:
+                raise RuntimeError(
+                    f"ChunkStore {self.directory} is closed")
             off, size = self._index[fp]
-            with open(self._log_path, "rb") as f:
-                f.seek(off)
-                return f.read(size)
+            return os.pread(self._read_fd, size, off)
         raise KeyError(fp.hex())
+
+    def sync(self) -> None:
+        """fsync log then index, then atomically advance the clean marker —
+        after this returns, every acknowledged ``put`` survives a host crash
+        and is trusted without re-verification on the next open.  No-op for
+        the memory backend."""
+        if self._log_f is not None:
+            self._log_f.flush()
+            os.fsync(self._log_f.fileno())
+            self._idx_f.flush()
+            os.fsync(self._idx_f.fileno())
+            tmp = self._clean_path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(struct.pack("<QQ", self._log_size, self._idx_size))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._clean_path)
+
+    def close(self) -> None:
+        if self._log_f is not None:
+            self.sync()
+            self._log_f.close()
+            self._idx_f.close()
+            os.close(self._read_fd)
+            self._log_f = self._idx_f = self._read_fd = None
 
     def chunk_size(self, fp: bytes) -> int:
         return self._index[fp][1]
@@ -154,12 +275,42 @@ class DedupStore:
 
     def ingest_chunks(self, name: str, fps: Sequence[bytes],
                       chunks: Dict[bytes, bytes],
-                      sizes: Sequence[int]) -> Recipe:
-        """Store pre-chunked data (pull path: only missing chunks provided)."""
+                      sizes: Sequence[int],
+                      verify: bool = True) -> Recipe:
+        """Store pre-chunked data (pull path: only missing chunks provided).
+
+        Before any mutation, coverage is checked — every fp must already be
+        stored or provided in ``chunks`` — and with ``verify`` (default)
+        each provided payload is hashed against its fingerprint.  A bad pull
+        therefore fails *here* with a clear :class:`DeliveryError` and
+        nothing half-committed, instead of surfacing later as an opaque
+        ``KeyError`` in :meth:`restore`.  Callers whose transport already
+        verified payloads (wire ``decode_chunk_batch`` does) pass
+        ``verify=False`` to skip the second hash.
+        """
+        fps = list(fps)
+        sizes = list(sizes)
+        if len(fps) != len(sizes):
+            raise DeliveryError(
+                f"ingest {name}: {len(fps)} fingerprints but "
+                f"{len(sizes)} sizes")
+        missing = [fp for fp in fps
+                   if fp not in chunks and not self.chunks.has(fp)]
+        if missing:
+            raise DeliveryError(
+                f"ingest {name}: {len(missing)} chunk(s) neither provided "
+                f"nor stored (first: {missing[0].hex()[:12]})")
+        if verify:
+            for fp in set(fps):
+                data = chunks.get(fp)
+                if data is not None and hashing.chunk_fingerprint(data) != fp:
+                    raise DeliveryError(
+                        f"ingest {name}: chunk {fp.hex()[:12]} payload does "
+                        f"not hash to its fingerprint")
         for fp in fps:
             if fp in chunks:
                 self.chunks.put(fp, chunks[fp])
-        recipe = Recipe(name=name, fps=list(fps), sizes=list(sizes))
+        recipe = Recipe(name=name, fps=fps, sizes=sizes)
         self.recipes[name] = recipe
         return recipe
 
@@ -187,3 +338,6 @@ class DedupStore:
 
     def missing(self, fps: Iterable[bytes]) -> List[bytes]:
         return [fp for fp in fps if not self.chunks.has(fp)]
+
+    def close(self) -> None:
+        self.chunks.close()

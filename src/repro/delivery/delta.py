@@ -24,16 +24,13 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Iterator, List, Optional, Sequence
 
 from repro.core.cdmt import CDMT, iter_missing_leaves
+from repro.core.errors import DeliveryError
 from repro.core.pushpull import Client, WireStats
 
 from . import wire
 from .server import RegistryServer
 
-
-class DeliveryError(RuntimeError):
-    """The delivery protocol could not complete (e.g. chunks the index
-    promised never arrived) — raised before any partial artifact is
-    committed to the local store."""
+__all__ = ["DeliveryError", "DeliveryStats", "DeltaSession", "iter_missing"]
 
 
 @dataclasses.dataclass
@@ -124,8 +121,10 @@ class DeltaSession:
                 f"pull {lineage}:{tag}: registry omitted "
                 f"{len(undelivered)} requested chunk(s) "
                 f"(first: {undelivered[0].hex()[:12]})")
+        # verify=False: every payload in `received` was already fingerprint-
+        # checked by decode_chunk_batch as it came off the wire
         self.client.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps,
-                                        received, recipe.sizes)
+                                        received, recipe.sizes, verify=False)
         self.client.indexes[lineage] = server_idx
         return stats
 

@@ -13,7 +13,16 @@ Wraps a ``repro.core.registry.Registry`` behind the wire format:
     the working set once;
   * chunk responses are **batched**: a WANT list is answered with one or more
     CHUNK_BATCH frames of at most ``max_batch_chunks`` chunks, so a session
-    can pipeline decode/ingest against later batches.
+    can pipeline decode/ingest against later batches;
+  * error paths are protocol-level: unknown lineages/tags surface as
+    :class:`repro.core.errors.DeliveryError`, rejected pushes as
+    :class:`repro.core.registry.PushRejected` — never a bare ``KeyError``.
+    (Unknown fingerprints in a WANT are still silently omitted; the session
+    layer decides whether absence is an error.)
+
+When the wrapped registry is directory-backed, an accepted ``handle_push``
+is durable before the receipt returns (chunk fsync + journaled commit — see
+:mod:`repro.core.registry`).
 """
 
 from __future__ import annotations
@@ -73,7 +82,9 @@ class RegistryServer:
     # ------------------------------------------------------------ index/recipe
 
     def get_index(self, lineage: str, tag: str) -> bytes:
-        """Serialized INDEX frame for ``lineage:tag``."""
+        """Serialized INDEX frame for ``lineage:tag``.  An unknown lineage or
+        tag raises the protocol-level :class:`repro.core.errors.DeliveryError`
+        (never a bare ``KeyError``), so wire clients see a clean error."""
         with self._registry_lock:
             idx = self.registry.index_for_tag(lineage, tag)
             frame = wire.encode_index(idx)
@@ -94,6 +105,7 @@ class RegistryServer:
         return frame
 
     def get_recipe(self, lineage: str, tag: str) -> bytes:
+        """Serialized RECIPE frame; :class:`DeliveryError` when unknown."""
         with self._registry_lock:
             frame = wire.encode_recipe(self.registry.recipe_for(lineage, tag))
         with self._stats_lock:

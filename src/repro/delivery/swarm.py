@@ -184,8 +184,10 @@ def swarm_pull(node: SwarmNode, server: RegistryServer, tracker: SwarmTracker,
             f"swarm pull {lineage}:{tag}: {len(undelivered)} chunk(s) "
             f"served by neither peers nor registry "
             f"(first: {undelivered[0].hex()[:12]})")
+    # verify=False: peer and registry payloads were fingerprint-checked by
+    # decode_chunk_batch as they arrived
     client.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps, received,
-                               recipe.sizes)
+                               recipe.sizes, verify=False)
     client.indexes[lineage] = server_idx
     # freshly provisioned ⇒ this node can now serve the version
     tracker.register(lineage, tag, node)

@@ -372,6 +372,48 @@ def decode_push_header(buf: bytes) -> PushHeader:
                       root=root, parent_version=parent, params=params)
 
 
+# ----------------------------------------------------------------- records
+#
+# Checksummed records: the same varint framing as frames, plus a trailing
+# blake2b checksum over the whole record body.  A frame is self-verifying
+# only when its payload is (INDEX recomputes node ids); a *record* is
+# self-verifying for arbitrary payloads, which is what an append-only log
+# needs to detect torn tails after a crash.  Used by the registry journal
+# (:mod:`repro.core.journal`).
+
+RECORD_MAGIC = b"CL"
+RECORD_CHECK_SIZE = 8
+
+
+def encode_record(rtype: int, payload: bytes) -> bytes:
+    """``magic | version | type | uvarint(len) | payload | blake2b-8``."""
+    if not 0 <= rtype <= 255:
+        raise WireError(f"record type {rtype} out of range")
+    body = (RECORD_MAGIC + bytes((VERSION, rtype))
+            + encode_uvarint(len(payload)) + payload)
+    return body + hashing.checksum(body, RECORD_CHECK_SIZE)
+
+
+def decode_record(buf: bytes, off: int = 0) -> Tuple[int, bytes, int]:
+    """Decode one checksummed record at ``off``; returns ``(type, payload,
+    new_offset)``.  Raises :class:`WireError` on truncation or checksum
+    mismatch — for an append-only log both mean the same thing: the tail
+    after ``off`` is torn and must be discarded."""
+    hdr, noff = _take(buf, off, 4, "record header")
+    if hdr[:2] != RECORD_MAGIC:
+        raise WireError(f"bad record magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported record version {hdr[2]}")
+    rtype = hdr[3]
+    size, noff = decode_uvarint(buf, noff)
+    payload, noff = _take(buf, noff, size, "record payload")
+    check, noff = _take(buf, noff, RECORD_CHECK_SIZE, "record checksum")
+    if hashing.checksum(buf[off:noff - RECORD_CHECK_SIZE],
+                        RECORD_CHECK_SIZE) != check:
+        raise WireError("record checksum mismatch")
+    return rtype, payload, noff
+
+
 # ------------------------------------------------------------------ sizing
 
 def uvarint_len(n: int) -> int:

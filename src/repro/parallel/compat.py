@@ -43,3 +43,90 @@ def axis_size(axis_name: str):
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Partial-auto collectives.
+#
+# ``LEGACY_PARTIAL_AUTO``: True on old jax (no ``jax.shard_map``), whose XLA
+# SPMD partitioner is the fragile one described below — callers use it to
+# pick emulation paths; on modern jax everything takes the native route.
+#
+# Old-jax *partial-auto* shard_map (manual over a subset of mesh axes, the
+# rest left to GSPMD) is where the XLA SPMD partitioner falls over:
+#
+#   * ``jax.lax.axis_index`` lowers to a ``partition-id`` HLO →
+#     "PartitionId instruction is not supported for SPMD partitioning";
+#   * ``ppermute`` / ``all_gather`` in the manual subgroup hard-crash the
+#     partitioner (``Check failed: sharding.IsManualSubgroup()``).
+#
+# Only ``psum`` partitions reliably there.  The two helpers below give the
+# pipeline supported equivalents:
+#
+#   * the axis index is *data-derived*: pass ``axis_index_input(n)`` as an
+#     extra shard_map operand with ``in_specs=P(axis)`` — each device's
+#     (1,)-slice of the iota IS its index, no collective involved;
+#   * the ring handoff (``ppermute`` shift-by-one) is emulated with a
+#     psum-of-one-hot gather when real ppermute would crash.
+
+LEGACY_PARTIAL_AUTO = not hasattr(jax, "shard_map")
+
+
+def unrolled_scan(body, init, xs, length=None):
+    """``jax.lax.scan`` on new jax; a fully Python-unrolled loop on old jax.
+
+    The old partitioner cannot even transpose a *plain* ``lax.scan`` inside
+    a partial-auto region (the backward while-loop trips the same manual-
+    subgroup check), so on that path the loop is unrolled at trace time —
+    fine for pipeline schedules, whose trip counts (ticks, layers-per-stage)
+    are small and static.  Only the scan features the pipeline uses are
+    supported: ``xs`` a stacked tree or ``None``, per-step outputs ignored.
+    """
+    if not LEGACY_PARTIAL_AUTO:
+        return jax.lax.scan(body, init, xs, length=length)
+    if xs is None:
+        n = length
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, _ = body(carry, x_i)
+    return carry, None
+
+
+def axis_index_input(n: int):
+    """Host-side iota to pass through shard_map with ``in_specs=P(axis)``;
+    inside the body, ``operand[0]`` is the device's index along ``axis``.
+    The data-derived equivalent of ``jax.lax.axis_index`` that works in
+    partial-auto regions on every jax version."""
+    import jax.numpy as jnp
+    return jnp.arange(n, dtype=jnp.int32)
+
+
+def shift_up(x, axis_name: str, axis_idx):
+    """``ppermute(x, axis, [(i, i+1)])`` — device ``i`` receives ``x`` from
+    device ``i-1``; device 0 receives zeros.
+
+    New jax: real ``ppermute``.  Old jax (partial-auto): emulated as
+    ``psum`` of one-hot-masked contributions — every device receives the
+    full (n, *x.shape) gather and selects slot ``i-1`` by a one-hot
+    contraction — because psum is the only collective the old SPMD
+    partitioner accepts in a partial-auto region, and the one-hot
+    multiply-sum (unlike a dynamic index, whose *gradient* is the
+    DynamicUpdateSlice that crashes that partitioner) stays elementwise in
+    both directions of AD.  Device 0's mask (index -1) is all-zero, which
+    yields the ppermute zero-fill for free.  Costs n× the ppermute
+    bandwidth; acceptable as a compatibility path (the modern API takes the
+    cheap route).
+    """
+    import jax.numpy as jnp
+    n = axis_size(axis_name)
+    if not LEGACY_PARTIAL_AUTO:
+        perm = [(i, i + 1) for i in range(n - 1)]
+        return jax.lax.ppermute(x, axis_name, perm)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    own = (axis_idx == iota).astype(x.dtype).reshape((n,) + (1,) * x.ndim)
+    gathered = jax.lax.psum(own * x[None], axis_name)     # (n, *x.shape)
+    prev = (axis_idx - 1 == iota).astype(x.dtype).reshape((n,) + (1,) * x.ndim)
+    return (prev * gathered).sum(axis=0)

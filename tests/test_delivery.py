@@ -382,6 +382,51 @@ class TestDeltaSession:
             assert sa.chunk_bytes <= 1.02 * sb.chunk_bytes + 64
 
 
+# ---------------------------------------------------------- server error paths
+
+class TestServerErrorPaths:
+    def test_unknown_lineage_and_tag_surface_as_delivery_error(self):
+        """The wire frontend must hand clients a protocol-level error, not a
+        bare KeyError, for unknown lineages/tags."""
+        reg, cl = Registry(), Client(cdc_params=PARAMS)
+        cl.commit("app", "v0", _rand(30_000, seed=30))
+        srv = RegistryServer(reg)
+        DeltaSession(cl, srv).push("app", "v0")
+        fresh = Client(cdc_params=PARAMS)
+        with pytest.raises(DeliveryError):
+            DeltaSession(fresh, srv).pull("ghost-lineage", "v0")
+        with pytest.raises(DeliveryError):
+            DeltaSession(fresh, srv).pull("app", "ghost-tag")
+        assert "ghost-lineage:v0" not in fresh.store.recipes
+
+    def test_wire_record_roundtrip_and_corruption(self):
+        rec = wire.encode_record(3, b"journal payload")
+        rtype, payload, off = wire.decode_record(rec)
+        assert (rtype, payload, off) == (3, b"journal payload", len(rec))
+        for cut in (1, 5, len(rec) - 1):
+            with pytest.raises(wire.WireError):
+                wire.decode_record(rec[:cut])
+        flipped = rec[:-1] + bytes([rec[-1] ^ 0xFF])
+        with pytest.raises(wire.WireError):
+            wire.decode_record(flipped)
+
+    def test_wire_tag_repush_semantics(self):
+        reg, cl = Registry(), Client(cdc_params=PARAMS)
+        srv = RegistryServer(reg)
+        sess = DeltaSession(cl, srv)
+        data = _rand(40_000, seed=31)
+        cl.commit("app", "v0", data)
+        sess.push("app", "v0")
+        # same tag, same content: idempotent (no duplicate version)
+        sess.push("app", "v0")
+        assert reg.tags("app") == ["v0"]
+        # same tag, different content: rejected at the registry
+        cl.commit("app", "v0", _rand(40_000, seed=32))
+        with pytest.raises(PushRejected):
+            sess.push("app", "v0")
+        assert reg.tags("app") == ["v0"]
+
+
 # ----------------------------------------------------------- push verification
 
 class TestPushVerification:

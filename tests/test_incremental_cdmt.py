@@ -1,0 +1,246 @@
+"""Incremental CDMT maintenance: build_incremental must be bit-identical to
+a full Algorithm-1 build while hashing only O(changed subtrees), the
+verified push path must reuse it end-to-end, and tag bindings must be
+immutable (same-root re-push idempotent, different-root rejected)."""
+
+import random
+
+import pytest
+
+from repro.core import hashing
+from repro.core.cdmt import (BuildStats, CDMT, CDMTParams, OverlayNodeStore)
+from repro.core.registry import PushRejected, Registry
+from repro.core.store import Recipe
+from repro.core.versioning import VersionedCDMT
+
+P = CDMTParams(window=4, rule_bits=2, max_fanout=16)
+
+
+def _fps(rng, n):
+    return [hashing.chunk_fingerprint(str(rng.random()).encode())
+            for _ in range(n)]
+
+
+def _assert_identical(a: CDMT, b: CDMT):
+    assert a.root == b.root
+    assert a.levels == b.levels
+    assert set(a.nodes) == set(b.nodes)
+
+
+class TestEquivalence:
+    """build_incremental(parent, leaves) == build(leaves), always."""
+
+    def _edit(self, rng, base, op):
+        edited = list(base)
+        if op == "replace":
+            for _ in range(rng.randint(1, 5)):
+                edited[rng.randrange(len(edited))] = _fps(rng, 1)[0]
+        elif op == "insert":
+            i = rng.randint(0, len(edited))
+            edited[i:i] = _fps(rng, rng.randint(1, 8))
+        elif op == "delete" and len(edited) > 1:
+            i = rng.randrange(len(edited))
+            del edited[i:i + rng.randint(1, min(8, len(edited) - i))]
+        elif op == "prepend":
+            edited = _fps(rng, rng.randint(1, 8)) + edited
+        elif op == "append":
+            edited = edited + _fps(rng, rng.randint(1, 8))
+        elif op == "truncate":
+            edited = edited[:rng.randint(1, len(edited))]
+        elif op == "scatter":
+            for i in rng.sample(range(len(edited)), min(10, len(edited))):
+                edited[i] = _fps(rng, 1)[0]
+        elif op == "swap-all":
+            edited = _fps(rng, len(edited))
+        elif op == "dup":
+            edited = edited + edited[:rng.randint(1, len(edited))]
+        return edited
+
+    @pytest.mark.parametrize("op", ["replace", "insert", "delete", "prepend",
+                                    "append", "truncate", "scatter",
+                                    "swap-all", "dup", "same"])
+    def test_randomized_edits_match_full_build(self, op):
+        rng = random.Random(hash(op) & 0xFFFF)
+        for trial in range(25):
+            n = rng.randint(1, 300)
+            base = _fps(rng, n)
+            parent = CDMT.build(base, params=P)
+            edited = base if op == "same" else self._edit(rng, base, op)
+            full = CDMT.build(edited, params=P)
+            incr = CDMT.build_incremental(parent, edited)
+            _assert_identical(incr, full)
+
+    def test_default_params_and_shared_store_chain(self):
+        """20 chained versions through one node store (the lineage pattern)."""
+        rng = random.Random(7)
+        store = {}
+        cur = _fps(rng, 2000)
+        prev = CDMT.build(cur, params=P, node_store=store)
+        for _ in range(20):
+            for i in rng.sample(range(len(cur)), 5):
+                cur[i] = _fps(rng, 1)[0]
+            overlay = OverlayNodeStore(store)
+            tree = CDMT.build_incremental(prev, cur, node_store=overlay)
+            _assert_identical(tree, CDMT.build(cur, params=P))
+            store.update(overlay.overlay)
+            prev = tree
+
+    def test_fallbacks(self):
+        rng = random.Random(3)
+        base = _fps(rng, 50)
+        parent = CDMT.build(base, params=P)
+        # empty new leaves -> empty tree
+        assert CDMT.build_incremental(parent, []).root is None
+        # empty parent -> full build
+        t = CDMT.build_incremental(CDMT(params=P), base, params=P)
+        _assert_identical(t, parent)
+        # differing params -> full build under the requested params
+        q = CDMTParams(window=8, rule_bits=1)
+        t = CDMT.build_incremental(parent, base, params=q)
+        _assert_identical(t, CDMT.build(base, params=q))
+
+
+class TestIncrementalCost:
+    def test_hash_calls_scale_with_change_not_size(self):
+        """Acceptance: k=10 of n=10k leaves -> ≥5× fewer blake2b calls than
+        a full rebuild, and O(k · depth · fanout) nodes created."""
+        rng = random.Random(0)
+        store = {}
+        base = _fps(rng, 10_000)
+        parent = CDMT.build(base, params=CDMTParams(), node_store=store)
+        edited = list(base)
+        for i in rng.sample(range(len(base)), 10):
+            edited[i] = _fps(rng, 1)[0]
+        st_full, st_incr = BuildStats(), BuildStats()
+        full = CDMT.build(edited, params=CDMTParams(), stats=st_full)
+        overlay = OverlayNodeStore(store)
+        incr = CDMT.build_incremental(parent, edited, node_store=overlay,
+                                      stats=st_incr)
+        _assert_identical(incr, full)
+        assert st_incr.hash_calls * 5 <= st_full.hash_calls, (
+            st_incr.hash_calls, st_full.hash_calls)
+        # 10 changed leaves + their ancestor spans: far fewer than n
+        assert st_incr.nodes_created <= 10 * incr.height() * 64
+        assert st_incr.nodes_created < 0.05 * len(store)
+
+    def test_overlay_leaves_base_untouched(self):
+        rng = random.Random(1)
+        store = {}
+        base = _fps(rng, 1000)
+        parent = CDMT.build(base, params=P, node_store=store)
+        before = len(store)
+        edited = list(base)
+        edited[500] = _fps(rng, 1)[0]
+        overlay = OverlayNodeStore(store)
+        CDMT.build_incremental(parent, edited, node_store=overlay)
+        assert len(store) == before
+        assert 0 < len(overlay.overlay) < 50
+
+
+class TestVersionedCommit:
+    def test_commit_uses_incremental_build(self):
+        rng = random.Random(2)
+        v = VersionedCDMT(P)
+        fps = _fps(rng, 5000)
+        v.commit(fps, tag="v0")
+        edited = list(fps)
+        edited[2500] = _fps(rng, 1)[0]
+        tree, overlay, stats = v.build_next(edited)
+        assert tree.root == CDMT.build(edited, params=P).root
+        assert stats.hash_calls < 0.2 * len(fps)     # no full-tree re-hash
+        rec = v.commit(edited, tag="v1", tree=tree, new_nodes=overlay)
+        assert rec.root == tree.root
+        assert rec.new_nodes == len(overlay)
+        assert v.get_version(rec.version).leaf_fps() == edited
+
+    def test_build_next_does_not_mutate(self):
+        rng = random.Random(4)
+        v = VersionedCDMT(P)
+        v.commit(_fps(rng, 500), tag="v0")
+        n_before = v.total_nodes()
+        v.build_next(_fps(rng, 500))
+        assert v.total_nodes() == n_before
+        assert len(v.version_records()) == 1
+
+    def test_tag_repush_idempotent_and_rejected(self):
+        rng = random.Random(5)
+        v = VersionedCDMT(P)
+        fps = _fps(rng, 200)
+        rec = v.commit(fps, tag="v0")
+        again = v.commit(fps, tag="v0")          # same root: idempotent
+        assert again is rec
+        assert len(v.version_records()) == 1
+        assert v.tags() == ["v0"]                # no duplicate tags
+        with pytest.raises(ValueError):          # different root: rejected
+            v.commit(_fps(rng, 200), tag="v0")
+        assert len(v.version_records()) == 1
+
+
+class TestRegistryIncrementalPush:
+    def _payloads(self, rng, n):
+        chunks = {}
+        fps = []
+        for _ in range(n):
+            data = str(rng.random()).encode() * 3
+            fp = hashing.chunk_fingerprint(data)
+            chunks[fp] = data
+            fps.append(fp)
+        return fps, chunks
+
+    def test_verified_push_is_incremental_no_full_rebuild(self):
+        """receive_push of a k-leaf change verifies the claimed root via the
+        incremental path: O(k·depth) nodes created, hash calls ≪ n."""
+        rng = random.Random(6)
+        reg = Registry()
+        n, k = 10_000, 10
+        fps, chunks = self._payloads(rng, n)
+        sizes = [len(chunks[fp]) for fp in fps]
+        client = CDMT.build(fps)                 # client-side index
+        r0 = reg.receive_push("img", "v0", Recipe("img:v0", list(fps), sizes),
+                              chunks, claimed_root=client.root)
+        assert r0.version == 0
+        cur = list(fps)
+        idxs = rng.sample(range(n), k)
+        newchunks = {}
+        for i in idxs:
+            data = str(rng.random()).encode() * 3
+            fp = hashing.chunk_fingerprint(data)
+            cur[i] = fp
+            newchunks[fp] = data
+        new_sizes = [len(chunks.get(fp) or newchunks[fp]) for fp in cur]
+        client = CDMT.build_incremental(client, cur)
+        r1 = reg.receive_push("img", "v1", Recipe("img:v1", cur, new_sizes),
+                              newchunks, claimed_root=client.root)
+        assert r1.root == client.root
+        assert r1.hash_calls * 5 <= r0.hash_calls      # flat in n, not O(n)
+        assert r1.nodes_created <= k * 8 * 64          # O(k · depth · fanout)
+
+    def test_tag_repush_semantics_at_registry(self):
+        rng = random.Random(8)
+        reg = Registry()
+        fps, chunks = self._payloads(rng, 100)
+        sizes = [len(chunks[fp]) for fp in fps]
+        recipe = Recipe("a:v0", list(fps), sizes)
+        r0 = reg.receive_push("a", "v0", recipe, chunks)
+        # same tag, same content: idempotent dedup, no new version
+        r1 = reg.receive_push("a", "v0", recipe, chunks)
+        assert r1.deduplicated and r1.version == r0.version
+        assert r1.chunks_received == 0
+        assert reg.tags("a") == ["v0"]
+        # same tag, different content: rejected, state unchanged
+        fps2, chunks2 = self._payloads(rng, 100)
+        with pytest.raises(PushRejected):
+            reg.receive_push("a", "v0",
+                             Recipe("a:v0", fps2,
+                                    [len(chunks2[f]) for f in fps2]), chunks2)
+        assert reg.tags("a") == ["v0"]
+        assert len(reg.lineage("a").version_records()) == 1
+
+    def test_unknown_parent_version_rejected(self):
+        rng = random.Random(9)
+        reg = Registry()
+        fps, chunks = self._payloads(rng, 10)
+        recipe = Recipe("a:v0", fps, [len(chunks[f]) for f in fps])
+        with pytest.raises(PushRejected):
+            reg.receive_push("a", "v0", recipe, chunks, parent_version=3)
+        assert reg.tags("a") == []

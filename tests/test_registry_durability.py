@@ -1,0 +1,350 @@
+"""Durable registry: journal + snapshot recovery, torn-write repair, chunk
+store crash safety, and metadata persistence.
+
+The acceptance bar: a registry populated with ≥3 versions, reconstructed
+from its directory alone, serves identical roots, recipes, tags, and
+byte-identical pulls; truncating the journal or chunk files mid-record
+still recovers to the last complete commit.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import cdc, hashing
+from repro.core.errors import DeliveryError, JournalError
+from repro.core.journal import Journal, write_snapshot
+from repro.core.pushpull import Client
+from repro.core.registry import Registry
+from repro.core.store import ChunkStore
+
+PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+
+
+def _rand(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 256, size=n,
+                                                dtype=np.uint8).tobytes()
+
+
+def _versions(n_versions=3, size=60_000, seed=0):
+    rng = np.random.default_rng(seed)
+    data = bytearray(_rand(size, seed))
+    out = [bytes(data)]
+    for _ in range(n_versions - 1):
+        pos = rng.integers(0, len(data) - 200)
+        data[pos:pos + 64] = rng.bytes(64)
+        ins = rng.integers(0, len(data))
+        data[ins:ins] = rng.bytes(rng.integers(1, 128))
+        out.append(bytes(data))
+    return out
+
+
+def _populate(reg, versions, lineage="app"):
+    cl = Client(cdc_params=PARAMS)
+    for i, v in enumerate(versions):
+        cl.commit(lineage, f"v{i}", v)
+        cl.push(reg, lineage, f"v{i}")
+
+
+def _state_of(reg, lineage="app"):
+    lin = reg.lineages[lineage]
+    return (reg.tags(lineage),
+            [(r.version, r.tag, r.root, r.parent, r.n_leaves)
+             for r in lin.version_records()],
+            {t: reg.recipe_for(lineage, t).fps for t in reg.tags(lineage)})
+
+
+class TestRecovery:
+    def test_reopen_serves_identical_state_and_pulls(self, tmp_path):
+        versions = _versions(4, seed=1)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        reg.put_metadata("app", "v0", b"manifest-blob")
+        want = _state_of(reg)
+        reg.close()
+
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert _state_of(reg2) == want
+        assert reg2.get_metadata("app", "v0") == b"manifest-blob"
+        # byte-identical restore for every version through a fresh client
+        for i, v in enumerate(versions):
+            cl = Client(cdc_params=PARAMS)
+            cl.pull(reg2, "app", f"v{i}")
+            assert cl.materialize("app", f"v{i}") == v
+        reg2.close()
+
+    def test_fresh_and_empty_directories(self, tmp_path):
+        reg = Registry(str(tmp_path / "empty"))
+        reg.close()
+        reg2 = Registry(str(tmp_path / "empty"))
+        assert reg2.lineages == {}
+        reg2.close()
+
+    def test_recovered_registry_accepts_new_pushes(self, tmp_path):
+        versions = _versions(4, seed=2)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions[:2])
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        cl = Client(cdc_params=PARAMS)
+        cl.pull(reg2, "app", "v1")
+        cl.commit("app", "v2", versions[2])
+        cl.push(reg2, "app", "v2")
+        reg2.close()
+        reg3 = Registry(str(tmp_path / "reg"))
+        assert reg3.tags("app") == ["v0", "v1", "v2"]
+        reg3.close()
+
+
+class TestTornWrites:
+    def test_torn_journal_tail_recovers_to_last_commit(self, tmp_path):
+        versions = _versions(3, seed=3)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        reg.close()
+        jpath = tmp_path / "reg" / "registry.journal"
+        size = os.path.getsize(jpath)
+        with open(jpath, "r+b") as f:       # chop into the last record
+            f.truncate(size - 7)
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.tags("app") == ["v0", "v1"]     # last complete commits
+        cl = Client(cdc_params=PARAMS)
+        cl.pull(reg2, "app", "v1")
+        assert cl.materialize("app", "v1") == versions[1]
+        # the torn tail was truncated: the journal is appendable again
+        cl.commit("app", "v2b", versions[2])
+        cl.push(reg2, "app", "v2b")
+        reg2.close()
+        reg3 = Registry(str(tmp_path / "reg"))
+        assert reg3.tags("app") == ["v0", "v1", "v2b"]
+        reg3.close()
+
+    def test_corrupt_journal_byte_stops_at_last_good_record(self, tmp_path):
+        versions = _versions(3, seed=4)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        reg.close()
+        jpath = tmp_path / "reg" / "registry.journal"
+        blob = bytearray(open(jpath, "rb").read())
+        blob[len(blob) - 20] ^= 0xFF        # bit rot inside the last record
+        open(jpath, "wb").write(bytes(blob))
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.tags("app") == ["v0", "v1"]
+        reg2.close()
+
+    def test_torn_chunk_files_recover(self, tmp_path):
+        versions = _versions(3, seed=5)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        reg.close()
+        # crash mid-put: orphan log bytes with no index entry, and a partial
+        # index record
+        with open(tmp_path / "reg" / "chunks.log", "ab") as f:
+            f.write(b"\xde\xad\xbe\xef" * 10)
+        with open(tmp_path / "reg" / "chunks.idx", "ab") as f:
+            f.write(b"\x01" * 20)           # < one 32-byte entry
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.store.chunks.recovered_torn_bytes == 40 + 20
+        for i, v in enumerate(versions):
+            cl = Client(cdc_params=PARAMS)
+            cl.pull(reg2, "app", f"v{i}")
+            assert cl.materialize("app", f"v{i}") == v
+        reg2.close()
+
+    def test_unsynced_log_data_that_never_landed_is_dropped(self, tmp_path):
+        """An fsync-less crash can persist the index entry and the log's
+        *length* without the log's data blocks.  Entries past the clean
+        marker must be payload-verified on recovery, not trusted."""
+        st = ChunkStore(str(tmp_path / "cs"))
+        fp1 = hashing.chunk_fingerprint(b"hello")
+        st.put(fp1, b"hello")
+        st.sync()                               # fp1 is durable + trusted
+        fp2 = hashing.chunk_fingerprint(b"world")
+        st.put(fp2, b"world")                   # flushed, never fsynced
+        st._log_f.close(); st._idx_f.close(); os.close(st._read_fd)
+        st._log_f = st._idx_f = st._read_fd = None   # simulate hard crash
+        # the crash: log length survived but the data blocks did not
+        with open(tmp_path / "cs" / "chunks.log", "r+b") as f:
+            f.seek(5)
+            f.write(b"\x00" * 5)
+        st2 = ChunkStore(str(tmp_path / "cs"))
+        assert st2.get(fp1) == b"hello"         # trusted (within marker)
+        assert not st2.has(fp2)                 # garbage payload: dropped
+        assert st2.put(fp2, b"world")           # and re-uploadable
+        assert st2.get(fp2) == b"world"
+        st2.close()
+
+    def test_closed_store_refuses_reads_and_writes(self, tmp_path):
+        st = ChunkStore(str(tmp_path / "cs"))
+        fp = hashing.chunk_fingerprint(b"x")
+        st.put(fp, b"x")
+        st.close()
+        with pytest.raises(RuntimeError):
+            st.put(b"\x07" * 16, b"y")          # must not fall back to memory
+        with pytest.raises(RuntimeError):
+            st.get(fp)                          # on-disk but store is closed
+        st2 = ChunkStore(str(tmp_path / "cs"))
+        assert st2.get(fp) == b"x"
+        st2.close()
+
+    def test_chunk_index_entry_past_log_end_dropped(self, tmp_path):
+        st = ChunkStore(str(tmp_path / "cs"))
+        st.put(b"\x01" * 16, b"hello")
+        st.put(b"\x02" * 16, b"world")
+        st.close()
+        # log lost its tail (e.g. truncated by a crash before fsync)
+        with open(tmp_path / "cs" / "chunks.log", "r+b") as f:
+            f.truncate(5)
+        st2 = ChunkStore(str(tmp_path / "cs"))
+        assert st2.has(b"\x01" * 16)
+        assert not st2.has(b"\x02" * 16)    # entry referenced missing bytes
+        assert st2.get(b"\x01" * 16) == b"hello"
+        # and the store still accepts appends at the repaired offset
+        assert st2.put(b"\x03" * 16, b"again")
+        assert st2.get(b"\x03" * 16) == b"again"
+        st2.close()
+
+
+class TestSnapshotCompaction:
+    def test_compact_then_more_pushes_then_reopen(self, tmp_path):
+        versions = _versions(4, seed=6)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions[:2])
+        reg.put_metadata("app", "v0", b"m0")
+        pre_compact = reg.journal_size_bytes()
+        reg.compact()
+        assert reg.journal_size_bytes() == 0
+        assert pre_compact > 0
+        cl = Client(cdc_params=PARAMS)
+        cl.pull(reg, "app", "v1")
+        cl.commit("app", "v2", versions[2])
+        cl.push(reg, "app", "v2")
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.tags("app") == ["v0", "v1", "v2"]
+        assert reg2.get_metadata("app", "v0") == b"m0"
+        for i in range(3):
+            c = Client(cdc_params=PARAMS)
+            c.pull(reg2, "app", f"v{i}")
+            assert c.materialize("app", f"v{i}") == versions[i]
+        reg2.close()
+
+    def test_corrupt_snapshot_fails_loudly(self, tmp_path):
+        """A snapshot is written atomically, so a record that fails to
+        decode is real corruption — recovery must raise, not silently drop
+        every version after the bad byte."""
+        versions = _versions(3, seed=9)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        reg.compact()
+        reg.close()
+        spath = tmp_path / "reg" / "registry.snap"
+        blob = bytearray(open(spath, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        open(spath, "wb").write(bytes(blob))
+        with pytest.raises(JournalError):
+            Registry(str(tmp_path / "reg"))
+
+    def test_crash_between_snapshot_and_truncate_is_idempotent(self, tmp_path):
+        """Simulate dying after the snapshot rename but before the journal
+        truncation: recovery replays both; commit replay must dedup."""
+        versions = _versions(2, seed=7)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions)
+        stale_journal = open(tmp_path / "reg" / "registry.journal", "rb").read()
+        reg.compact()
+        reg.close()
+        with open(tmp_path / "reg" / "registry.journal", "wb") as f:
+            f.write(stale_journal)          # pretend the truncate never hit
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.tags("app") == ["v0", "v1"]      # no duplicates
+        assert len(reg2.lineages["app"].version_records()) == 2
+        reg2.close()
+
+
+class TestWriteAheadOrdering:
+    def test_failed_journal_append_leaves_index_untouched(self, tmp_path,
+                                                          monkeypatch):
+        """The commit record is journaled BEFORE in-memory state changes: a
+        failed append must error the push without committing, and a retry
+        must succeed AND be journaled (no deduplicated-but-lost version)."""
+        versions = _versions(2, seed=8)
+        reg = Registry(str(tmp_path / "reg"))
+        _populate(reg, versions[:1])
+        cl = Client(cdc_params=PARAMS)
+        cl.pull(reg, "app", "v0")
+        cl.commit("app", "v1", versions[1])
+
+        real_append = Journal.append
+
+        def failing_append(self, rtype, payload):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(Journal, "append", failing_append)
+        with pytest.raises(OSError):
+            cl.push(reg, "app", "v1")
+        assert reg.tags("app") == ["v0"]        # index untouched
+        monkeypatch.setattr(Journal, "append", real_append)
+        cl.push(reg, "app", "v1")               # retry: full push, journaled
+        assert reg.tags("app") == ["v0", "v1"]
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.tags("app") == ["v0", "v1"]  # v1 survived the restart
+        c = Client(cdc_params=PARAMS)
+        c.pull(reg2, "app", "v1")
+        assert c.materialize("app", "v1") == versions[1]
+        reg2.close()
+
+
+class TestJournalUnit:
+    def test_append_replay_roundtrip(self, tmp_path):
+        j = Journal(str(tmp_path / "j"))
+        j.append(1, b"alpha")
+        j.append(2, b"")
+        j.append(7, b"x" * 1000)
+        j.close()
+        j2 = Journal(str(tmp_path / "j"))
+        assert j2.replay() == [(1, b"alpha"), (2, b""), (7, b"x" * 1000)]
+        assert j2.replay() == []            # consumed
+        assert j2.torn_bytes_discarded == 0
+        j2.close()
+
+    def test_torn_tail_truncated_once(self, tmp_path):
+        j = Journal(str(tmp_path / "j"))
+        j.append(1, b"alpha")
+        j.append(2, b"beta")
+        j.close()
+        with open(tmp_path / "j", "ab") as f:
+            f.write(b"CL\x01\x03\x20partial")          # half a record
+        j2 = Journal(str(tmp_path / "j"))
+        assert j2.replay() == [(1, b"alpha"), (2, b"beta")]
+        assert j2.torn_bytes_discarded > 0
+        j2.append(3, b"gamma")
+        j2.close()
+        j3 = Journal(str(tmp_path / "j"))
+        assert [r[0] for r in j3.replay()] == [1, 2, 3]
+        assert j3.torn_bytes_discarded == 0
+        j3.close()
+
+    def test_write_snapshot_atomic_replaces(self, tmp_path):
+        p = str(tmp_path / "snap")
+        write_snapshot(p, [(1, b"a")])
+        write_snapshot(p, [(2, b"b"), (3, b"c")])
+        j = Journal(p)
+        assert j.replay() == [(2, b"b"), (3, b"c")]
+        j.close()
+        assert not os.path.exists(p + ".tmp")
+
+
+class TestMetadataAndErrors:
+    def test_metadata_durable_and_overwritable(self, tmp_path):
+        reg = Registry(str(tmp_path / "reg"))
+        reg.put_metadata("l", "t", b"one")
+        reg.put_metadata("l", "t", b"two")
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert reg2.get_metadata("l", "t") == b"two"
+        with pytest.raises(DeliveryError):
+            reg2.get_metadata("l", "missing")
+        reg2.close()

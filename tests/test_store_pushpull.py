@@ -1,9 +1,12 @@
 """Dedup store, registry, and the chunk-granular push/pull protocol."""
 
+import json
+
 import numpy as np
 import pytest
 
 from repro.core import cdc, hashing
+from repro.core.errors import DeliveryError
 from repro.core.pushpull import Client, merkle_pull_chunk_bytes, naive_pull_bytes
 from repro.core.registry import Registry
 from repro.core.store import DedupStore, Recipe
@@ -56,6 +59,93 @@ class TestDedupStore:
         st2 = DedupStore(str(tmp_path / "store"), cdc_params=PARAMS)
         st2.recipes["a"] = Recipe.from_json(recipe.to_json())
         assert st2.restore("a") == data
+
+
+class TestIngestVerification:
+    def _chunks(self, n=4, seed=20):
+        rng = np.random.default_rng(seed)
+        payloads = [rng.bytes(64) for _ in range(n)]
+        fps = [hashing.chunk_fingerprint(p) for p in payloads]
+        return fps, dict(zip(fps, payloads)), [64] * n
+
+    def test_bad_payload_rejected_before_any_mutation(self):
+        st = DedupStore(cdc_params=PARAMS)
+        fps, chunks, sizes = self._chunks()
+        chunks[fps[1]] = chunks[fps[1]][:-1] + b"\x00"     # tampered
+        with pytest.raises(DeliveryError):
+            st.ingest_chunks("a", fps, chunks, sizes)
+        assert "a" not in st.recipes            # nothing half-committed
+        assert st.chunks.n_chunks() == 0
+
+    def test_missing_chunk_rejected_with_clear_error(self):
+        """Previously a bad pull only surfaced later as an opaque KeyError
+        in restore(); now ingest itself names the missing fingerprint."""
+        st = DedupStore(cdc_params=PARAMS)
+        fps, chunks, sizes = self._chunks()
+        del chunks[fps[2]]
+        with pytest.raises(DeliveryError, match=fps[2].hex()[:12]):
+            st.ingest_chunks("a", fps, chunks, sizes)
+        assert "a" not in st.recipes
+
+    def test_size_mismatch_rejected(self):
+        st = DedupStore(cdc_params=PARAMS)
+        fps, chunks, sizes = self._chunks()
+        with pytest.raises(DeliveryError):
+            st.ingest_chunks("a", fps, chunks, sizes[:-1])
+
+    def test_already_stored_chunks_need_not_be_provided(self):
+        st = DedupStore(cdc_params=PARAMS)
+        fps, chunks, sizes = self._chunks()
+        st.chunks.put(fps[0], chunks[fps[0]])
+        partial = {fp: chunks[fp] for fp in fps[1:]}
+        st.ingest_chunks("a", fps, partial, sizes)
+        assert st.restore("a") == b"".join(chunks[fp] for fp in fps)
+
+
+class TestServeErrors:
+    def test_serve_chunks_unknown_fp_is_clean_error(self):
+        reg = Registry()
+        ghost = hashing.chunk_fingerprint(b"never pushed")
+        with pytest.raises(DeliveryError, match=ghost.hex()[:12]):
+            reg.serve_chunks([ghost])
+
+    def test_unknown_lineage_and_tag_are_clean_errors(self):
+        reg, cl = Registry(), Client(cdc_params=PARAMS)
+        cl.commit("app", "v0", _rand(30_000, seed=21))
+        cl.push(reg, "app", "v0")
+        with pytest.raises(DeliveryError):
+            reg.index_for_tag("nope", "v0")
+        with pytest.raises(DeliveryError):
+            reg.index_for_tag("app", "nope")
+        with pytest.raises(DeliveryError):
+            reg.recipe_for("app", "nope")
+        # the failed lookups must not have created phantom lineages
+        assert set(reg.lineages) == {"app"}
+
+
+class TestRecipeValidation:
+    def test_roundtrip_ok(self):
+        r = Recipe("a", [hashing.chunk_fingerprint(b"x")], [1])
+        r2 = Recipe.from_json(r.to_json())
+        assert r2.fps == r.fps and r2.sizes == r.sizes
+
+    def test_length_mismatch_rejected(self):
+        r = Recipe("a", [hashing.chunk_fingerprint(b"x")], [1])
+        d = json.loads(r.to_json())
+        d["sizes"] = [1, 2]
+        with pytest.raises(ValueError):
+            Recipe.from_json(json.dumps(d))
+
+    def test_bad_digest_size_rejected(self):
+        d = {"name": "a", "fps": ["abcd"], "sizes": [1]}
+        with pytest.raises(ValueError):
+            Recipe.from_json(json.dumps(d))
+
+    def test_negative_size_rejected(self):
+        d = {"name": "a", "fps": [hashing.chunk_fingerprint(b"x").hex()],
+             "sizes": [-5]}
+        with pytest.raises(ValueError):
+            Recipe.from_json(json.dumps(d))
 
 
 class TestPushPull:
