@@ -34,8 +34,9 @@ from repro.core import cdc
 from repro.core.cdmt import CDMTParams
 from repro.core.pushpull import Client
 from repro.core.registry import Registry
-from repro.delivery import (DeltaSession, RegistryServer, SwarmNode,
-                            SwarmTracker, swarm_pull)
+from repro.delivery import (DeltaSession, ImageClient, LocalTransport,
+                            RegistryServer, SwarmNode, SwarmTracker,
+                            SwarmTransport, WireTransport, swarm_pull)
 
 from benchmarks.common import Report, Timer
 from benchmarks.corpus import corpus
@@ -145,6 +146,68 @@ def _swarm(app: str, versions, n: int, warm_tag: str, new_tag: str):
     }
 
 
+def _unified_clients(kind: str, srv: RegistryServer, n: int):
+    """N cold ImageClients over transport ``kind`` — the one code path the
+    legacy modes above also route through (via their shims)."""
+    tracker = SwarmTracker()
+    clients = []
+    for i in range(n):
+        if kind == "local":
+            transport = LocalTransport(srv.registry)
+        elif kind == "wire":
+            transport = WireTransport(srv)
+        else:
+            node = SwarmNode(f"n{i}", cdc_params=CDC_PARAMS,
+                             cdmt_params=CDMT_PARAMS)
+            transport = SwarmTransport(node, tracker, srv)
+            clients.append(ImageClient(
+                transport, store=node.client.store,
+                indexes=node.client.indexes,
+                tag_trees=node.client.tag_trees,
+                cdc_params=CDC_PARAMS, cdmt_params=CDMT_PARAMS))
+            continue
+        clients.append(ImageClient(transport, cdc_params=CDC_PARAMS,
+                                   cdmt_params=CDMT_PARAMS))
+    return clients
+
+
+def _unified(app: str, versions, n: int, warm_tag: str, new_tag: str,
+             kind: str):
+    """Rolling upgrade driven purely through ``ImageClient`` + ``Transport``
+    — identical Algorithm-2 logic on every backend, so rows are directly
+    comparable across the in-process, framed, and peer-first paths."""
+    srv = _loaded_server(app, versions)
+    clients = _unified_clients(kind, srv, n)
+    for cl in clients:
+        cl.pull(app, warm_tag)                # provision (not measured)
+    base = srv.snapshot()
+    base_cache = srv.cache.stats
+    reports: List = [None] * n
+
+    def worker(i):
+        reports[i] = clients[i].pull(app, new_tag)
+
+    wall = _rolling_waves(n, worker)
+
+    s = srv.snapshot()
+    cache = srv.cache.stats
+    hits = cache.hits - base_cache.hits
+    misses = cache.misses - base_cache.misses
+    peer_b = sum(r.peer_chunk_bytes for r in reports)
+    reg_b = sum(r.registry_chunk_bytes for r in reports)
+    if kind == "local":                       # in-process: frontend untouched
+        reg_egress = sum(r.total_wire_bytes for r in reports) / 2**20
+    else:
+        reg_egress = (s.egress_bytes - base.egress_bytes) / 2**20
+    return {
+        "registry_egress_mb": reg_egress,
+        "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+        "coalesced": s.coalesced_reads - base.coalesced_reads,
+        "peer_offload": peer_b / (peer_b + reg_b) if peer_b + reg_b else 0.0,
+        "wall_s": wall,
+    }
+
+
 def run(scale: float = 1.0) -> Report:
     rep = Report("delivery_scale")
     c = corpus(scale)
@@ -161,5 +224,25 @@ def run(scale: float = 1.0) -> Report:
     return rep
 
 
+def run_unified(scale: float = 1.0) -> Report:
+    """The three transports benched through the single ``ImageClient`` code
+    path, same rolling-upgrade schedule and metrics as ``delivery_scale``."""
+    rep = Report("delivery_unified")
+    c = corpus(scale)
+    for app in APPS:
+        versions = c[app]
+        warm_tag = versions[max(0, len(versions) - 4)].tag
+        new_tag = versions[-1].tag
+        naive_mb = versions[-1].size / 2**20
+        for n in N_CLIENTS:
+            for kind in ("local", "wire", "swarm"):
+                row = _unified(app, versions, n, warm_tag, new_tag, kind)
+                rep.add(app=app, mode=f"unified-{kind}", n_clients=n,
+                        naive_egress_mb=naive_mb * n, **row)
+    return rep
+
+
 if __name__ == "__main__":
-    run(float(sys.argv[1]) if len(sys.argv) > 1 else 1.0).print_csv()
+    scale = float(sys.argv[1]) if len(sys.argv) > 1 else 1.0
+    run(scale).print_csv()
+    run_unified(scale).print_csv()

@@ -21,6 +21,7 @@ ALL = {
     "fig10_build_time": bench_build_time.run,
     "table2_pushpull_io": bench_pushpull_io.run,
     "delivery_scale": bench_delivery_scale.run,
+    "delivery_unified": bench_delivery_scale.run_unified,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
     "push_incremental": bench_push_incremental.run,

@@ -1,5 +1,6 @@
-"""End-to-end tour of the delivery stack: wire push, warm upgrade pull
-through the concurrent frontend, and a peer-swarm rollout.
+"""End-to-end tour of the delivery stack through the unified client API:
+one ``ImageClient``, three transports — wire push, planned warm upgrade
+through the concurrent frontend, and a peer-swarm rollout with failover.
 
 Run:  PYTHONPATH=src python examples/delivery_demo.py
 """
@@ -8,9 +9,8 @@ import numpy as np
 
 from repro.core import cdc
 from repro.core.registry import Registry
-from repro.delivery import (DeltaSession, RegistryServer, SwarmNode,
-                            SwarmTracker, swarm_pull)
-from repro.core.pushpull import Client
+from repro.delivery import (ImageClient, RegistryServer, SwarmNode,
+                            SwarmTracker, SwarmTransport, WireTransport)
 
 CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
 
@@ -31,44 +31,66 @@ def make_versions(n=6, size=400_000, seed=0):
     return versions
 
 
+def swarm_client(name, tracker, server, **kw):
+    """An ImageClient whose transport fetches peers-first and serves back."""
+    node = SwarmNode(name, cdc_params=CDC_PARAMS)
+    transport = SwarmTransport(node, tracker, server, **kw)
+    return ImageClient(transport, store=node.client.store,
+                       indexes=node.client.indexes,
+                       tag_trees=node.client.tag_trees,
+                       cdc_params=CDC_PARAMS), node
+
+
 def main():
     versions = make_versions()
     registry = Registry()
     server = RegistryServer(registry)
+    tag = f"v{len(versions) - 1}"
 
     # -- publisher pushes every release over the wire ------------------------
-    publisher = Client(cdc_params=CDC_PARAMS)
-    pub_sess = DeltaSession(publisher, server)
+    publisher = ImageClient(WireTransport(server), cdc_params=CDC_PARAMS)
     for i, v in enumerate(versions):
         publisher.commit("app", f"v{i}", v)
-        st = pub_sess.push("app", f"v{i}")
+        st = publisher.push("app", f"v{i}")
         print(f"push v{i}: {st.chunks_moved}/{st.chunks_total} chunks, "
               f"{st.total_wire_bytes/1024:.1f} KiB on the wire "
               f"({st.savings_vs_raw:.0%} saved vs raw)")
 
-    # -- a warm client upgrades through the frontend -------------------------
-    node = Client(cdc_params=CDC_PARAMS)
-    sess = DeltaSession(node, server, batch_chunks=32, pipeline_depth=4)
-    sess.pull("app", "v0")
-    st = sess.pull("app", f"v{len(versions)-1}")
-    assert node.materialize("app", f"v{len(versions)-1}") == versions[-1]
-    print(f"\nwarm upgrade v0→v{len(versions)-1}: "
-          f"{st.total_wire_bytes/1024:.1f} KiB moved vs "
+    # -- a warm client plans, inspects, then executes its upgrade ------------
+    node = ImageClient(WireTransport(server), cdc_params=CDC_PARAMS,
+                       batch_chunks=32, pipeline_depth=4)
+    node.pull("app", "v0")
+    plan = node.plan_pull("app", tag)
+    print(f"\nupgrade plan v0→{tag}: fetch {plan.chunks_to_fetch}/"
+          f"{plan.chunks_total} chunks "
+          f"(~{plan.expected_wire_bytes/1024:.1f} KiB, "
+          f"{plan.comparisons} comparisons)")
+    st = node.execute(plan)
+    assert node.materialize("app", tag) == versions[-1]
+    print(f"executed: {st.total_wire_bytes/1024:.1f} KiB moved vs "
           f"{st.raw_bytes/1024:.1f} KiB naive "
           f"({st.savings_vs_raw:.0%} saved, {st.rounds} pipelined rounds)")
 
     # -- swarm rollout: wave 1 drains the registry, wave 2 rides peers -------
     tracker = SwarmTracker()
-    tag = f"v{len(versions)-1}"
-    first = SwarmNode("first", cdc_params=CDC_PARAMS)
-    swarm_pull(first, server, tracker, "app", tag)
+    first, first_node = swarm_client("first", tracker, server)
+    first.pull("app", tag)
     before = server.snapshot().egress_bytes
-    late = SwarmNode("late", cdc_params=CDC_PARAMS)
-    st2 = swarm_pull(late, server, tracker, "app", tag)
+    late, _ = swarm_client("late", tracker, server)
+    st2 = late.pull("app", tag)
     extra = server.snapshot().egress_bytes - before
-    assert late.client.materialize("app", tag) == versions[-1]
+    assert late.materialize("app", tag) == versions[-1]
     print(f"\nswarm follower: {st2.peer_offload_fraction:.0%} of chunk bytes "
           f"from peers; registry egress for it was only {extra/1024:.1f} KiB")
+
+    # -- the provider dies mid-rollout: the next puller fails over -----------
+    first_node.kill()
+    unlucky, _ = swarm_client("unlucky", tracker, server)
+    st3 = unlucky.pull("app", tag)
+    assert unlucky.materialize("app", tag) == versions[-1]
+    print(f"dead-peer failover: {st3.failovers} failed peer round(s) "
+          f"absorbed, pull completed from "
+          f"{', '.join(sorted(s for s, l in st3.sources.items() if l.chunks))}")
 
     s = server.snapshot()
     print(f"\nregistry frontend totals: {s.egress_bytes/1024:.1f} KiB out, "

@@ -1,8 +1,9 @@
 """Quickstart: the paper's pipeline end-to-end in ~60 lines.
 
 Builds two versions of an artifact, CDC-chunks them, builds CDMT indexes,
-pushes/pulls through a registry, and prints the byte accounting that is the
-paper's point: only changed chunks move.
+pushes/pulls through a registry with the unified ``ImageClient`` API, and
+prints the byte accounting that is the paper's point: only changed chunks
+move.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,8 +15,8 @@ import numpy as np
 
 from repro.core import cdc, hashing
 from repro.core.cdmt import CDMT, compare
-from repro.core.pushpull import Client
 from repro.core.registry import Registry
+from repro.delivery import ImageClient, LocalTransport
 
 
 def main():
@@ -40,20 +41,25 @@ def main():
     print(f"Alg.2: {len(missing)} changed chunks found in "
           f"{comparisons} comparisons (vs {len(chunks2)} flat lookups)")
 
-    # --- 3. push/pull through a registry ------------------------------------
+    # --- 3. push/pull through a registry (unified client API) --------------
     registry = Registry()
-    dev = Client()
+    dev = ImageClient(LocalTransport(registry))
     dev.commit("app", "v1", v1)
-    s1 = dev.push(registry, "app", "v1")
+    s1 = dev.push("app", "v1")
     dev.commit("app", "v2", v2)
-    s2 = dev.push(registry, "app", "v2")
+    s2 = dev.push("app", "v2")
     print(f"push v1 (new image):   {s1.total_wire_bytes/2**20:.2f} MiB")
     print(f"push v2 (incremental): {s2.total_wire_bytes/2**20:.3f} MiB "
           f"({s2.savings_vs_raw:.1%} saved, {s2.chunks_moved} chunks moved)")
 
-    prod = Client()
-    p1 = prod.pull(registry, "app", "v1")
-    p2 = prod.pull(registry, "app", "v2")
+    prod = ImageClient(LocalTransport(registry))
+    p1 = prod.pull("app", "v1")
+    # a pull can be inspected before a chunk moves: plan, then execute
+    plan = prod.plan_pull("app", "v2")
+    print(f"plan v1→v2:            {plan.chunks_to_fetch}/{plan.chunks_total} "
+          f"chunks to fetch, ~{plan.expected_wire_bytes/2**20:.3f} MiB "
+          f"expected on the wire")
+    p2 = prod.execute(plan)
     assert prod.materialize("app", "v2") == v2
     print(f"pull v1 (fresh host):  {p1.total_wire_bytes/2**20:.2f} MiB")
     print(f"pull v2 (upgrade):     {p2.total_wire_bytes/2**20:.3f} MiB "

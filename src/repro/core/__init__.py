@@ -10,7 +10,7 @@ from .cdc import CDCParams, chunk_boundaries, chunk_bytes
 from .cdmt import CDMT, CDMTParams, compare, diff_chunks
 from .merkle import MerkleTree
 from .pushpull import Client, WireStats
-from .registry import Registry
+from .registry import Registry, SweepReport
 from .store import DedupStore, Recipe
 from .versioning import VersionedCDMT
 
@@ -18,5 +18,6 @@ __all__ = [
     "cdc", "cdmt", "hashing", "merkle", "pushpull", "registry", "store",
     "versioning", "CDCParams", "chunk_boundaries", "chunk_bytes", "CDMT",
     "CDMTParams", "compare", "diff_chunks", "MerkleTree", "Client",
-    "WireStats", "Registry", "DedupStore", "Recipe", "VersionedCDMT",
+    "WireStats", "Registry", "SweepReport", "DedupStore", "Recipe",
+    "VersionedCDMT",
 ]

@@ -4,27 +4,28 @@ The client holds a ``DedupStore`` + its own CDMT per lineage; the registry is
 ``repro.core.registry.Registry``.  Both operations exchange the KB-sized CDMT
 index first, run Algorithm 2 locally, and move only the missing chunks.
 
-Every call returns a ``WireStats`` so benchmarks (Table II / the ≥40% network
-saving claim) and the checkpoint layer can account exact bytes moved.
-
-Byte accounting routes through :mod:`repro.delivery.wire`: ``index_bytes`` /
-``recipe_bytes`` / ``chunk_bytes`` are the lengths of the *actually
-serialized* frames (round-trippable), not structural estimates.
+As of the unified delivery API, :class:`Client` is a thin compatibility shim:
+all compare/transfer/accounting logic lives in
+:class:`repro.delivery.client.ImageClient`, which this class drives through a
+:class:`repro.delivery.transport.LocalTransport` bound to the target
+registry.  ``WireStats`` remains the base accounting dataclass; the values
+returned by :meth:`Client.push`/:meth:`Client.pull` are
+:class:`repro.delivery.plan.TransferReport` instances (a ``WireStats``
+subclass adding per-source legs), so existing callers keep working.
 
 Layering note: ``repro.delivery`` depends on this module at import time
-(``delta``/``swarm`` wrap :class:`Client`), so the wire-format sizing used
-here is imported lazily inside ``push``/``pull`` — this is the one
-deliberate upward reference from core to the delivery layer, kept to the
-sizing helpers only.
+(``plan``/``delta`` import :class:`WireStats`/:class:`Client`), so the
+delivery imports here happen lazily inside methods — the one deliberate
+upward reference from core to the delivery layer.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from . import cdc, hashing
-from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS, compare
+from . import cdc
+from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
 from .registry import Registry
 from .store import DedupStore, Recipe
 
@@ -52,33 +53,39 @@ class WireStats:
 
 
 class Client:
-    """A client node: local dedup store + local CDMT per lineage."""
+    """A client node: local dedup store + local CDMT per lineage.
+
+    Compatibility shim over :class:`repro.delivery.client.ImageClient` —
+    each ``push``/``pull`` binds the shared local state to a
+    ``LocalTransport`` for the given registry and delegates.
+    """
 
     def __init__(self, cdc_params: cdc.CDCParams = cdc.DEFAULT_PARAMS,
                  cdmt_params: CDMTParams = DEFAULT_PARAMS,
                  directory: Optional[str] = None):
-        self.store = DedupStore(directory, cdc_params)
+        from repro.delivery.client import ImageClient   # lazy: layering note
+        self._ic = ImageClient(None, cdc_params=cdc_params,
+                               cdmt_params=cdmt_params, directory=directory)
+        self.store: DedupStore = self._ic.store
         self.cdmt_params = cdmt_params
-        self.indexes: Dict[str, CDMT] = {}        # lineage -> local CDMT
+        self.indexes: Dict[str, CDMT] = self._ic.indexes  # lineage -> CDMT
+        self.tag_trees: Dict[str, CDMT] = self._ic.tag_trees
         self.log: List[WireStats] = []
+
+    def _bound(self, registry: Registry):
+        from repro.delivery.transport import LocalTransport  # lazy: layering
+        return self._ic.bind(LocalTransport(registry))
 
     # ---------------------------------------------------------------- commit
 
     def commit(self, lineage: str, tag: str, data: bytes) -> Recipe:
         """Chunk + locally store a new artifact version, build local CDMT."""
-        recipe = self.store.ingest(f"{lineage}:{tag}", data)
-        self.indexes[lineage] = CDMT.build(recipe.fps, params=self.cdmt_params)
-        return recipe
+        return self._ic.commit(lineage, tag, data)
 
     def index_for_tag(self, lineage: str, tag: str) -> CDMT:
-        """The CDMT for a committed tag.  The cached per-lineage index is the
-        *head's* tree; pushing an older tag rebuilds its tree from the
-        recipe (leaf sequence fully determines it)."""
-        recipe = self.store.recipes[f"{lineage}:{tag}"]
-        local_idx = self.indexes.get(lineage)
-        if local_idx is not None and local_idx.leaf_fps() == list(recipe.fps):
-            return local_idx
-        return CDMT.build(recipe.fps, params=self.cdmt_params)
+        """The CDMT for a committed tag — served from the per-tag tree cache
+        (built incrementally against the head on a cold non-head tag)."""
+        return self._ic.index_for_tag(lineage, tag)
 
     # ------------------------------------------------------------------ push
 
@@ -90,31 +97,8 @@ class Client:
         Committed  → fetch registry's latest CDMT, Alg. 2 diff, ship only
                      changed chunks + the new index (paper push case 2).
         """
-        from repro.delivery import wire
-
-        recipe = self.store.recipes[f"{lineage}:{tag}"]
-        local_idx = self.index_for_tag(lineage, tag)
-        stats = WireStats(op="push", lineage=lineage, tag=tag,
-                          chunks_total=len(recipe.fps),
-                          raw_bytes=recipe.total_size)
-
-        remote_idx = registry.latest_index(lineage)
-        if remote_idx is not None:
-            stats.index_bytes += wire.index_wire_bytes(remote_idx)   # download
-        missing, comps = compare(remote_idx, local_idx)
-        stats.comparisons = comps
-
-        payload = {fp: self.store.chunks.get(fp) for fp in missing}
-        stats.chunks_moved = len(payload)
-        # nothing to ship ⇒ no CHUNK_BATCH frame crosses the wire at all
-        stats.chunk_bytes = wire.chunk_batch_wire_bytes(payload) if payload else 0
-        stats.recipe_bytes = wire.recipe_wire_bytes(recipe)
-        stats.index_bytes += wire.index_wire_bytes(local_idx)        # upload
-
-        registry.receive_push(lineage, tag, recipe, payload,
-                              parent_version=parent_version,
-                              claimed_root=local_idx.root,
-                              claimed_params=self.cdmt_params)
+        stats = self._bound(registry).push(lineage, tag,
+                                           parent_version=parent_version)
         self.log.append(stats)
         return stats
 
@@ -123,30 +107,7 @@ class Client:
     def pull(self, registry: Registry, lineage: str, tag: str) -> WireStats:
         """Pull a version: download its CDMT, Alg. 2 against local CDMT,
         fetch only missing chunks, reconstruct via the recipe."""
-        from repro.delivery import wire
-
-        server_idx = registry.index_for_tag(lineage, tag)
-        recipe = registry.recipe_for(lineage, tag)
-        stats = WireStats(op="pull", lineage=lineage, tag=tag,
-                          chunks_total=len(recipe.fps),
-                          raw_bytes=recipe.total_size,
-                          index_bytes=wire.index_wire_bytes(server_idx),
-                          recipe_bytes=wire.recipe_wire_bytes(recipe))
-
-        local_idx = self.indexes.get(lineage)
-        missing, comps = compare(local_idx, server_idx)
-        stats.comparisons = comps
-        # Even chunks outside the lineage index may exist locally (global dedup
-        # across lineages) — the store check is free and chunk-granular.
-        to_fetch = [fp for fp in missing if not self.store.chunks.has(fp)]
-        payload = registry.serve_chunks(to_fetch)
-        stats.chunks_moved = len(payload)
-        # nothing to fetch ⇒ no CHUNK_BATCH frame crosses the wire at all
-        stats.chunk_bytes = wire.chunk_batch_wire_bytes(payload) if payload else 0
-
-        self.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps, payload,
-                                 recipe.sizes)
-        self.indexes[lineage] = server_idx
+        stats = self._bound(registry).pull(lineage, tag)
         self.log.append(stats)
         return stats
 

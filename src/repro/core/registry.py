@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, \
+    Tuple
 
 from . import hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
@@ -56,6 +57,19 @@ class PushReceipt:
     nodes_hashed: int = 0       # node ids fingerprinted (O(k·depth) incr.)
     hash_calls: int = 0         # nodes_hashed + rolling-window cut tests
     deduplicated: bool = False  # tag+root already present; no new version
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """What :meth:`Registry.sweep` found (and, with ``drop``, reclaimed)."""
+    live_chunks: int
+    live_bytes: int
+    unreferenced_chunks: int
+    unreferenced_bytes: int
+    retained_versions: int
+    dropped_versions: int = 0
+    dropped_chunks: int = 0
+    reclaimed_bytes: int = 0
 
 
 class Registry:
@@ -303,6 +317,96 @@ class Registry:
         if blob is None:
             raise DeliveryError(f"no metadata for {lineage}:{tag}")
         return blob
+
+    # -- garbage collection --------------------------------------------------
+
+    def sweep(self, retain_tags: Optional[Mapping[str, Iterable[str]]] = None,
+              drop: bool = False) -> SweepReport:
+        """Mark-and-sweep over recipes: report — and with ``drop=True``
+        reclaim — chunks no retained version references.
+
+        ``retain_tags`` maps lineage → the tags to pin; lineages absent from
+        the mapping retain **all** their tags, and ``None`` (the default)
+        retains everything — the sweep then reports only true orphans
+        (chunks referenced by no recipe at all).  Unknown pins raise
+        ``ValueError``: a typo in a retention policy must not silently
+        widen the sweep.
+
+        With ``drop=True`` the un-pinned versions are forgotten first (each
+        affected lineage's versioned CDMT is rebuilt from the retained
+        recipes — version numbers are reassigned densely; tags remain the
+        stable names), then the journal is compacted so a restart replays
+        only retained state, and only *then* is the chunk log compacted.
+        That ordering is what makes the sweep journal-safe: a crash between
+        journal and chunk compaction leaves garbage chunks (harmless,
+        re-sweepable), never a journaled version whose chunks are gone.
+        """
+        pins: Optional[Dict[str, Set[str]]] = None
+        if retain_tags is not None:
+            # normalize up front: a one-shot iterator as a value must not be
+            # consumed by validation and then read as empty by the sweep —
+            # that would silently drop the pinned versions themselves
+            pins = {lin: set(tags) for lin, tags in retain_tags.items()}
+            for lin, tags in pins.items():
+                if lin not in self.lineages:
+                    raise ValueError(f"sweep: unknown lineage {lin!r}")
+                for t in tags:
+                    if (lin, t) not in self.recipes:
+                        raise ValueError(f"sweep: unknown pin {lin}:{t}")
+        retained: Set[Tuple[str, str]] = set()
+        dropped_pairs: List[Tuple[str, str]] = []
+        for lineage, tag in self.recipes:
+            if pins is None or lineage not in pins or tag in pins[lineage]:
+                retained.add((lineage, tag))
+            else:
+                dropped_pairs.append((lineage, tag))
+
+        live: Set[bytes] = set()
+        for pair in retained:
+            live.update(self.recipes[pair].fps)
+        chunks = self.store.chunks
+        dead = [fp for fp in chunks.fingerprints() if fp not in live]
+        dead_bytes = sum(chunks.chunk_size(fp) for fp in dead)
+        report = SweepReport(
+            live_chunks=chunks.n_chunks() - len(dead),
+            live_bytes=chunks.stored_bytes() - dead_bytes,
+            unreferenced_chunks=len(dead),
+            unreferenced_bytes=dead_bytes,
+            retained_versions=len(retained),
+            dropped_versions=len(dropped_pairs))
+        if not drop:
+            return report
+
+        # 1) forget un-pinned versions: rebuild each affected lineage from
+        #    its retained recipes (in original version order)
+        by_lineage: Dict[str, List[str]] = {}
+        for lineage, tag in dropped_pairs:
+            by_lineage.setdefault(lineage, []).append(tag)
+        for lineage in by_lineage:
+            old = self.lineages[lineage]
+            keep = [rec for rec in old.version_records()
+                    if (lineage, rec.tag) in retained]
+            if keep:
+                fresh = VersionedCDMT(params=self.cdmt_params)
+                for rec in keep:
+                    fresh.commit(self.recipes[(lineage, rec.tag)].fps,
+                                 tag=rec.tag)
+                self.lineages[lineage] = fresh
+            else:
+                del self.lineages[lineage]
+        for lineage, tag in dropped_pairs:
+            del self.recipes[(lineage, tag)]
+            self.store.recipes.pop(f"{lineage}:{tag}", None)
+            self.metadata.pop((lineage, tag), None)
+        # 2) journal safety: persist the retained-only state BEFORE any
+        #    chunk payload disappears
+        if self._journal is not None:
+            self.compact()
+        # 3) reclaim the chunk log
+        dropped_chunks, reclaimed = chunks.compact(live)
+        report.dropped_chunks = dropped_chunks
+        report.reclaimed_bytes = reclaimed
+        return report
 
     # -- durability ----------------------------------------------------------
 

@@ -88,6 +88,7 @@ class ChunkStore:
         self._log_path: Optional[str] = None
         self._idx_path: Optional[str] = None
         self._clean_path: Optional[str] = None
+        self._flag_path: Optional[str] = None
         self._log_size = 0
         self._idx_size = 0
         self._log_f = None
@@ -99,6 +100,8 @@ class ChunkStore:
             self._log_path = os.path.join(directory, "chunks.log")
             self._idx_path = os.path.join(directory, "chunks.idx")
             self._clean_path = os.path.join(directory, "chunks.clean")
+            self._flag_path = os.path.join(directory, "chunks.compacting")
+            self._finish_compaction()
             self._load()
             # persistent handles: append once, not reopen-per-put; reads use
             # pread on a dedicated fd (positionless ⇒ thread-safe)
@@ -107,6 +110,30 @@ class ChunkStore:
             self._read_fd = os.open(self._log_path, os.O_RDONLY)
 
     # -- persistence ---------------------------------------------------------
+
+    def _finish_compaction(self) -> None:
+        """Recover from a crash during :meth:`compact`.
+
+        Compaction writes fully-fsynced ``.new`` log/idx files, then commits
+        by creating ``chunks.compacting`` (the durable intent), then swaps
+        each ``.new`` file into place.  Recovery is therefore idempotent:
+        without the flag, leftover ``.new`` files are an uncommitted
+        compaction and are discarded; with the flag, any ``.new`` file still
+        present is swapped in, the (stale) clean marker is dropped so
+        ``_load`` re-verifies payloads, and the flag is removed."""
+        new_log = self._log_path + ".new"
+        new_idx = self._idx_path + ".new"
+        if not os.path.exists(self._flag_path):
+            for path in (new_log, new_idx):
+                if os.path.exists(path):
+                    os.unlink(path)
+            return
+        for src, dst in ((new_log, self._log_path), (new_idx, self._idx_path)):
+            if os.path.exists(src):
+                os.replace(src, dst)
+        if os.path.exists(self._clean_path):
+            os.unlink(self._clean_path)    # sized for the pre-compaction files
+        os.unlink(self._flag_path)
 
     def _read_marker(self) -> Tuple[int, int]:
         """(log bytes, idx bytes) known durable from the last ``sync()``."""
@@ -213,12 +240,78 @@ class ChunkStore:
             os.fsync(self._log_f.fileno())
             self._idx_f.flush()
             os.fsync(self._idx_f.fileno())
-            tmp = self._clean_path + ".tmp"
-            with open(tmp, "wb") as f:
-                f.write(struct.pack("<QQ", self._log_size, self._idx_size))
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, self._clean_path)
+            self._write_marker()
+
+    def _write_marker(self) -> None:
+        tmp = self._clean_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(struct.pack("<QQ", self._log_size, self._idx_size))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._clean_path)
+
+    def compact(self, live: Iterable[bytes]) -> Tuple[int, int]:
+        """Drop every chunk not in ``live`` and compact the log.
+
+        Returns ``(dropped_chunks, reclaimed_bytes)``.  Crash-safe on the
+        directory backend: live chunks are streamed into fsynced ``.new``
+        log/idx files, the swap is committed by the durable
+        ``chunks.compacting`` intent flag, and each rename is individually
+        idempotent — :meth:`_finish_compaction` completes (or discards) a
+        half-done compaction on the next open, so no crash window can mix
+        old index entries with new log offsets.
+        """
+        live = set(live)
+        dead = [fp for fp in self._index if fp not in live]
+        if not dead:
+            return 0, 0
+        reclaimed = sum(self._index[fp][1] for fp in dead)
+        if self.directory is None:
+            for fp in dead:
+                self._mem.pop(fp, None)
+                del self._index[fp]
+            return len(dead), reclaimed
+        if self._log_f is None:
+            raise RuntimeError(
+                f"ChunkStore {self.directory} is closed — cannot compact")
+        self._log_f.flush()                # stream from a settled log
+        new_log_path = self._log_path + ".new"
+        new_idx_path = self._idx_path + ".new"
+        new_index: Dict[bytes, Tuple[int, int]] = {}
+        off = 0
+        with open(new_log_path, "wb") as lf, open(new_idx_path, "wb") as xf:
+            # keep current log order (offset-ascending) for locality
+            for fp, (o, s) in sorted(self._index.items(),
+                                     key=lambda kv: kv[1][0]):
+                if fp not in live:
+                    continue
+                lf.write(os.pread(self._read_fd, s, o))
+                xf.write(fp + struct.pack("<QQ", off, s))
+                new_index[fp] = (off, s)
+                off += s
+            lf.flush()
+            os.fsync(lf.fileno())
+            xf.flush()
+            os.fsync(xf.fileno())
+        # durable intent: from here on, recovery completes the swap
+        with open(self._flag_path, "wb") as f:
+            f.write(b"compact")
+            f.flush()
+            os.fsync(f.fileno())
+        self._log_f.close()
+        self._idx_f.close()
+        os.close(self._read_fd)
+        os.replace(new_log_path, self._log_path)
+        os.replace(new_idx_path, self._idx_path)
+        self._index = new_index
+        self._log_size = off
+        self._idx_size = len(new_index) * self._IDX_ENTRY
+        self._write_marker()               # sized for the compacted files
+        os.unlink(self._flag_path)
+        self._log_f = open(self._log_path, "ab")
+        self._idx_f = open(self._idx_path, "ab")
+        self._read_fd = os.open(self._log_path, os.O_RDONLY)
+        return len(dead), reclaimed
 
     def close(self) -> None:
         if self._log_f is not None:
@@ -239,6 +332,12 @@ class ChunkStore:
 
     def fingerprints(self) -> Iterable[bytes]:
         return self._index.keys()
+
+    def index_entries(self) -> List[Tuple[bytes, int, int]]:
+        """``(fp, offset, size)`` for every stored chunk — offset ordering
+        reflects append order, which restart warm-up uses as a recency
+        proxy.  Offsets are 0 on the memory backend."""
+        return [(fp, off, size) for fp, (off, size) in self._index.items()]
 
 
 class DedupStore:

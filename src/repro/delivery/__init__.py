@@ -3,35 +3,56 @@
 The core (``repro.core``) proves the paper's *algorithms*; this package turns
 them into a delivery *system* whose byte counts are real:
 
-  * :mod:`repro.delivery.wire`   — varint-framed binary wire format for CDMT
-    indexes, recipes, chunk batches, and want-lists (round-trip, self-verifying);
-  * :mod:`repro.delivery.cache`  — tiered chunk cache (in-memory LRU over the
-    disk/log ``ChunkStore``) with hit/miss/eviction accounting;
-  * :mod:`repro.delivery.server` — concurrent registry frontend: many pullers,
-    request coalescing, batched chunk responses, exact egress/ingress meters;
-  * :mod:`repro.delivery.delta`  — session protocol pipelining Algorithm 2
-    compare with chunk transfer (compare keeps walking while batches fetch);
-  * :mod:`repro.delivery.swarm`  — EdgePier-style peer mode: provisioned
+  * :mod:`repro.delivery.wire`      — varint-framed binary wire format for
+    CDMT indexes, recipes, chunk batches, want-lists, and presence queries
+    (round-trip, self-verifying);
+  * :mod:`repro.delivery.cache`     — tiered chunk cache (in-memory LRU over
+    the disk/log ``ChunkStore``) with hit/miss/eviction/warm accounting;
+  * :mod:`repro.delivery.server`    — concurrent registry frontend: many
+    pullers, request coalescing, batched chunk responses, restart warm-up,
+    exact egress/ingress meters;
+  * :mod:`repro.delivery.transport` — the pluggable :class:`Transport`
+    protocol with in-process (``LocalTransport``), framed (``WireTransport``)
+    and peer-first (``SwarmTransport``) implementations;
+  * :mod:`repro.delivery.plan`      — inspectable :class:`PullPlan` and the
+    unified per-source :class:`TransferReport` accounting;
+  * :mod:`repro.delivery.client`    — :class:`ImageClient`, the single
+    client API (``plan_pull``/``execute``/``push``/``upgrade``) every legacy
+    entry point now routes through;
+  * :mod:`repro.delivery.delta`     — ``DeltaSession`` compatibility shim
+    (pipelined wire sessions);
+  * :mod:`repro.delivery.swarm`     — EdgePier-style peer mode: provisioned
     clients serve chunks to later pullers before the registry is consulted.
 """
 
 from .cache import CacheStats, TieredChunkCache
+from .client import ImageClient
 from .delta import DeliveryError, DeliveryStats, DeltaSession
+from .plan import PullPlan, SourceLeg, TransferReport
 from .server import RegistryServer, ServerStats
 from .swarm import SwarmNode, SwarmStats, SwarmTracker, swarm_pull
+from .transport import (FetchResult, LocalTransport, PushOutcome,
+                        SwarmTransport, Transport, WireTransport)
 from .wire import (FrameType, WireError, decode_chunk_batch, decode_frame,
-                   decode_index, decode_recipe, decode_want, encode_chunk_batch,
-                   encode_frame, encode_index, encode_recipe, encode_want)
+                   decode_has, decode_index, decode_missing, decode_recipe,
+                   decode_want, encode_chunk_batch, encode_frame, encode_has,
+                   encode_index, encode_missing, encode_recipe, encode_want)
 
 __all__ = [
     "CacheStats", "TieredChunkCache",
+    "ImageClient",
     "DeliveryError", "DeliveryStats", "DeltaSession",
+    "PullPlan", "SourceLeg", "TransferReport",
     "RegistryServer", "ServerStats",
     "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
+    "Transport", "LocalTransport", "WireTransport", "SwarmTransport",
+    "FetchResult", "PushOutcome",
     "FrameType", "WireError",
     "encode_frame", "decode_frame",
     "encode_index", "decode_index",
     "encode_recipe", "decode_recipe",
     "encode_chunk_batch", "decode_chunk_batch",
     "encode_want", "decode_want",
+    "encode_has", "decode_has",
+    "encode_missing", "decode_missing",
 ]

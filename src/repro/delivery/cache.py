@@ -30,6 +30,8 @@ class CacheStats:
     puts: int = 0
     resident_bytes: int = 0
     capacity_bytes: int = 0
+    warmed: int = 0                # entries pre-loaded via warm()
+    warm_hits: int = 0             # hits served by a pre-warmed entry
 
     @property
     def hit_rate(self) -> float:
@@ -59,6 +61,9 @@ class TieredChunkCache:
         self._misses = 0
         self._evictions = 0
         self._puts = 0
+        self._warm: set = set()    # fps admitted via warm(), still resident
+        self._warmed = 0
+        self._warm_hits = 0
 
     # ---------------------------------------------------------------- reads
 
@@ -68,6 +73,8 @@ class TieredChunkCache:
             if data is not None:
                 self._lru.move_to_end(fp)
                 self._hits += 1
+                if fp in self._warm:
+                    self._warm_hits += 1
                 return data
             self._misses += 1
         data = self.backing.get(fp)        # may raise KeyError: truly absent
@@ -88,8 +95,27 @@ class TieredChunkCache:
         new = self.backing.put(fp, data)
         with self._lock:
             self._puts += 1
+            self._warm.discard(fp)         # freshly written, no longer "warm"
             self._admit(fp, data)
         return new
+
+    def warm(self, fp: bytes, data: bytes) -> bool:
+        """Pre-load an already-stored chunk into the memory tier (restart
+        warm-up from a recovered chunk index).  No write-through, no
+        eviction of existing residents: returns False — without admitting —
+        once admission would displace anything, so warming fills only the
+        cache's free budget."""
+        with self._lock:
+            if fp in self._lru:
+                return True                # already resident
+            if (len(data) > self.capacity_bytes
+                    or self._resident + len(data) > self.capacity_bytes):
+                return False
+            self._lru[fp] = data
+            self._resident += len(data)
+            self._warm.add(fp)
+            self._warmed += 1
+        return True
 
     def _admit(self, fp: bytes, data: bytes) -> None:
         # caller holds the lock
@@ -101,8 +127,9 @@ class TieredChunkCache:
         self._lru[fp] = data
         self._resident += len(data)
         while self._resident > self.capacity_bytes:
-            _, victim = self._lru.popitem(last=False)
+            victim_fp, victim = self._lru.popitem(last=False)
             self._resident -= len(victim)
+            self._warm.discard(victim_fp)
             self._evictions += 1
 
     # ----------------------------------------------------------- accounting
@@ -113,7 +140,9 @@ class TieredChunkCache:
             return CacheStats(hits=self._hits, misses=self._misses,
                               evictions=self._evictions, puts=self._puts,
                               resident_bytes=self._resident,
-                              capacity_bytes=self.capacity_bytes)
+                              capacity_bytes=self.capacity_bytes,
+                              warmed=self._warmed,
+                              warm_hits=self._warm_hits)
 
     def resident_fps(self) -> List[bytes]:
         with self._lock:

@@ -1,58 +1,37 @@
-"""Delta session — pipelines Algorithm 2 compare with chunk transfer.
+"""Delta session — compatibility shim over the unified client.
 
-A naive pull is strictly sequential: download the whole index, finish the
-whole BFS compare, send one giant want-list, wait for one giant response.
-The session protocol overlaps the phases instead:
+``DeltaSession`` predates :class:`repro.delivery.client.ImageClient`; it now
+simply binds the wrapped client's local state to a
+:class:`~repro.delivery.transport.WireTransport` and delegates, so the
+pipelined pull (bounded in-flight WANT batches on a transfer pool) and the
+framed push live in exactly one place.  ``DeliveryStats`` is an alias of the
+unified :class:`~repro.delivery.plan.TransferReport` — same byte categories,
+same ``savings_vs_raw``, plus per-source legs.
 
-  1. the INDEX frame is downloaded and decoded (KB-sized — paper Sec. IV);
-  2. the compare BFS (:func:`iter_missing`) *streams* missing leaves;
-  3. every ``batch_chunks`` leaves, a WANT frame is dispatched to the server
-     on a transfer thread pool while the BFS keeps walking — with
-     ``pipeline_depth`` requests in flight, chunk bytes move concurrently
-     with comparison work (and with the other batches);
-  4. arriving CHUNK_BATCH frames are decoded (fingerprint-verified) and
-     ingested as they land.
-
-All byte counters are actual serialized frame lengths.
+New code should use ``ImageClient(WireTransport(server))`` directly (and get
+``plan_pull``/``execute``/``upgrade`` too).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Iterator, Optional
 
 from repro.core.cdmt import CDMT, iter_missing_leaves
 from repro.core.errors import DeliveryError
-from repro.core.pushpull import Client, WireStats
+from repro.core.pushpull import Client
 
-from . import wire
+from .client import ImageClient
+from .plan import TransferReport
 from .server import RegistryServer
+from .transport import WireTransport
 
 __all__ = ["DeliveryError", "DeliveryStats", "DeltaSession", "iter_missing"]
 
-
-@dataclasses.dataclass
-class DeliveryStats(WireStats):
-    """Actual-wire-bytes accounting for one delivery session.
-
-    Extends the core :class:`WireStats` (same byte categories, same
-    ``savings_vs_raw``) with the session protocol's extra traffic: WANT
-    frames and round-trip count.  ``total_wire_bytes`` therefore includes
-    ``want_bytes``.
-    """
-    want_bytes: int = 0            # WANT frames uploaded
-    rounds: int = 0                # WANT round-trips issued
-
-    @property
-    def total_wire_bytes(self) -> int:
-        return (self.index_bytes + self.recipe_bytes + self.want_bytes
-                + self.chunk_bytes)
+DeliveryStats = TransferReport      # deprecation alias (pre-unification name)
 
 
 def iter_missing(client: Optional[CDMT], server: CDMT,
-                 stats: Optional[DeliveryStats] = None) -> Iterator[bytes]:
+                 stats: Optional[TransferReport] = None) -> Iterator[bytes]:
     """Streaming Algorithm 2 (see :func:`repro.core.cdmt.iter_missing_leaves`
     — the single BFS implementation), wiring comparisons into ``stats``."""
     on_compare = None
@@ -71,113 +50,20 @@ class DeltaSession:
         self.server = server
         self.batch_chunks = batch_chunks
         self.pipeline_depth = max(1, pipeline_depth)
+        self._ic = ImageClient(
+            WireTransport(server, batch_chunks=batch_chunks),
+            store=client.store, indexes=client.indexes,
+            tag_trees=client.tag_trees,
+            cdc_params=client.store.cdc_params,
+            cdmt_params=client.cdmt_params,
+            batch_chunks=batch_chunks, pipeline_depth=pipeline_depth)
 
-    # ------------------------------------------------------------------ pull
-
-    def pull(self, lineage: str, tag: str) -> DeliveryStats:
+    def pull(self, lineage: str, tag: str) -> TransferReport:
         """Pipelined pull of ``lineage:tag``; returns exact wire accounting."""
-        idx_frame = self.server.get_index(lineage, tag)
-        server_idx = wire.decode_index(idx_frame)
-        recipe_frame = self.server.get_recipe(lineage, tag)
-        recipe = wire.decode_recipe(recipe_frame)
-        stats = DeliveryStats(op="pull", lineage=lineage, tag=tag,
-                              index_bytes=len(idx_frame),
-                              recipe_bytes=len(recipe_frame),
-                              chunks_total=len(recipe.fps),
-                              raw_bytes=recipe.total_size)
-
-        local_idx = self.client.indexes.get(lineage)
-        received: Dict[bytes, bytes] = {}
-        requested: List[bytes] = []
-
-        def fetch(fps: List[bytes]):
-            want = wire.encode_want(fps)
-            frames = self.server.handle_want(want)
-            return want, frames
-
-        with ThreadPoolExecutor(max_workers=self.pipeline_depth) as pool:
-            pending = deque()
-            batch: List[bytes] = []
-            for fp in iter_missing(local_idx, server_idx, stats):
-                # global dedup: a chunk may live locally under another lineage
-                if self.client.store.chunks.has(fp):
-                    continue
-                requested.append(fp)
-                batch.append(fp)
-                if len(batch) >= self.batch_chunks:
-                    pending.append(pool.submit(fetch, batch))
-                    batch = []
-                    # bounded pipeline: drain the oldest once depth is reached
-                    while len(pending) > self.pipeline_depth:
-                        self._drain(pending.popleft(), received, stats)
-            if batch:
-                pending.append(pool.submit(fetch, batch))
-            while pending:
-                self._drain(pending.popleft(), received, stats)
-
-        undelivered = [fp for fp in requested if fp not in received]
-        if undelivered:
-            raise DeliveryError(
-                f"pull {lineage}:{tag}: registry omitted "
-                f"{len(undelivered)} requested chunk(s) "
-                f"(first: {undelivered[0].hex()[:12]})")
-        # verify=False: every payload in `received` was already fingerprint-
-        # checked by decode_chunk_batch as it came off the wire
-        self.client.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps,
-                                        received, recipe.sizes, verify=False)
-        self.client.indexes[lineage] = server_idx
-        return stats
-
-    def _drain(self, fut, received: Dict[bytes, bytes],
-               stats: DeliveryStats) -> None:
-        want, frames = fut.result()
-        stats.rounds += 1
-        stats.want_bytes += len(want)
-        for f in frames:
-            stats.chunk_bytes += len(f)
-            chunks = wire.decode_chunk_batch(f)
-            stats.chunks_moved += len(chunks)
-            received.update(chunks)
-
-    # ------------------------------------------------------------------ push
+        return self._ic.pull(lineage, tag)
 
     def push(self, lineage: str, tag: str,
-             parent_version: Optional[int] = None) -> DeliveryStats:
+             parent_version: Optional[int] = None) -> TransferReport:
         """Wire push: Alg. 2 against the registry head, ship only missing
         chunks, framed + verified server-side (root match)."""
-        recipe = self.client.store.recipes[f"{lineage}:{tag}"]
-        local_idx = self.client.index_for_tag(lineage, tag)
-        stats = DeliveryStats(op="push", lineage=lineage, tag=tag,
-                              chunks_total=len(recipe.fps),
-                              raw_bytes=recipe.total_size)
-
-        remote_frame = self.server.get_latest_index(lineage)
-        remote_idx = None
-        if remote_frame is not None:
-            stats.index_bytes += len(remote_frame)
-            remote_idx = wire.decode_index(remote_frame)
-
-        missing = list(iter_missing(remote_idx, local_idx, stats))
-        payload = {fp: self.client.store.chunks.get(fp) for fp in missing}
-
-        hdr = wire.encode_push_header(wire.PushHeader(
-            lineage=lineage, tag=tag, root=local_idx.root,
-            parent_version=parent_version,
-            params=self.client.cdmt_params))
-        recipe_frame = wire.encode_recipe(recipe)
-        chunk_frames: List[bytes] = []
-        fps = list(payload)
-        for start in range(0, len(fps), self.batch_chunks):
-            part = {fp: payload[fp] for fp in fps[start:start + self.batch_chunks]}
-            chunk_frames.append(wire.encode_chunk_batch(part))
-
-        self.server.handle_push(hdr, recipe_frame, chunk_frames)
-        # upload accounting: exactly the frames that crossed the wire — the
-        # registry rebuilds the index from the recipe, so no INDEX frame is
-        # uploaded (the claimed root rides in the header)
-        stats.index_bytes += len(hdr)
-        stats.recipe_bytes = len(recipe_frame)
-        stats.chunk_bytes = sum(len(f) for f in chunk_frames)
-        stats.chunks_moved = len(payload)
-        stats.rounds = len(chunk_frames)
-        return stats
+        return self._ic.push(lineage, tag, parent_version=parent_version)

@@ -45,11 +45,14 @@ class ServerStats:
     index_requests: int = 0
     recipe_requests: int = 0
     want_requests: int = 0
+    has_requests: int = 0          # HAS presence queries answered
     chunks_served: int = 0
     chunk_bytes_served: int = 0
     store_reads: int = 0           # chunk reads that reached cache/store
     coalesced_reads: int = 0       # piggy-backed on an identical in-flight read
     pushes: int = 0
+    warmed_chunks: int = 0         # cache entries pre-loaded at startup
+    warm_hits: int = 0             # cache hits served by a warmed entry
 
     def snapshot(self) -> "ServerStats":
         return dataclasses.replace(self)
@@ -69,7 +72,8 @@ class RegistryServer:
 
     def __init__(self, registry: Registry,
                  cache_bytes: int = DEFAULT_CAPACITY,
-                 max_batch_chunks: int = 64):
+                 max_batch_chunks: int = 64,
+                 warm_start: bool = True):
         self.registry = registry
         self.cache = TieredChunkCache(registry.store.chunks, cache_bytes)
         self.max_batch_chunks = max_batch_chunks
@@ -78,6 +82,24 @@ class RegistryServer:
         self._registry_lock = threading.RLock()   # Registry itself is not MT-safe
         self._inflight: Dict[bytes, _InFlight] = {}
         self._inflight_lock = threading.Lock()
+        if warm_start and registry.store.chunks.directory is not None:
+            self.stats.warmed_chunks = self._warm_from_store()
+
+    def _warm_from_store(self) -> int:
+        """Pre-load the memory tier from the recovered chunk index so a
+        restarted registry serves its first wave from RAM instead of cold
+        (ROADMAP: "registry restart under load").  Most recently appended
+        chunks first — the heads of each lineage are what pullers hit —
+        until the cache's capacity budget is full."""
+        store = self.registry.store.chunks
+        entries = sorted(store.index_entries(),
+                         key=lambda e: e[1], reverse=True)  # offset desc
+        warmed = 0
+        for fp, _off, _size in entries:
+            if not self.cache.warm(fp, store.get(fp)):
+                break
+            warmed += 1
+        return warmed
 
     # ------------------------------------------------------------ index/recipe
 
@@ -145,6 +167,20 @@ class RegistryServer:
                 self.stats.egress_bytes += len(frame)
             frames.append(frame)
         return frames
+
+    def handle_has(self, has_frame: bytes) -> bytes:
+        """Answer a HAS presence query with a MISSING frame — the fps the
+        registry does *not* hold.  A pusher then ships exactly these,
+        getting cross-lineage server-side dedup for free."""
+        fps = wire.decode_has(has_frame)
+        with self._registry_lock:
+            missing = self.registry.has_chunks(fps)
+        resp = wire.encode_missing(missing)
+        with self._stats_lock:
+            self.stats.has_requests += 1
+            self.stats.ingress_bytes += len(has_frame)
+            self.stats.egress_bytes += len(resp)
+        return resp
 
     def _read_chunk(self, fp: bytes) -> Optional[bytes]:
         """Cache/store read with request coalescing."""
@@ -219,7 +255,9 @@ class RegistryServer:
     # ------------------------------------------------------------- accounting
 
     def snapshot(self) -> ServerStats:
+        warm_hits = self.cache.stats.warm_hits
         with self._stats_lock:
+            self.stats.warm_hits = warm_hits
             return self.stats.snapshot()
 
     def cache_hit_rate(self) -> float:

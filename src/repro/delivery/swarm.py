@@ -8,6 +8,14 @@ peer holds).  Every peer exchange uses the same WANT/CHUNK_BATCH wire frames
 as the registry path, so peer traffic and registry egress are measured in the
 same units and the offload fraction is exact.
 
+The pull logic itself lives in the unified client:
+:func:`swarm_pull` binds the node's local state to a
+:class:`~repro.delivery.transport.SwarmTransport` (peer providers over a
+registry fallback, with per-source accounting and dead-peer failover) and
+delegates to :meth:`repro.delivery.client.ImageClient.pull`.  ``SwarmStats``
+is an alias of the unified :class:`~repro.delivery.plan.TransferReport`,
+whose ``peer_*`` counters are derived from the per-source legs.
+
 The index and recipe still come from the registry: they are KB-sized and
 carry the authentication root, so the registry stays the source of truth
 while payload bandwidth spreads over the swarm (chunk batches are
@@ -16,33 +24,23 @@ fingerprint-verified on decode, so a peer cannot forge content).
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import threading
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import cdc
 from repro.core.cdmt import CDMTParams, DEFAULT_PARAMS
+from repro.core.errors import DeliveryError
 from repro.core.pushpull import Client
 
 from . import wire
 from .cache import DEFAULT_CAPACITY, TieredChunkCache
-from .delta import DeliveryError, DeliveryStats, iter_missing
+from .client import ImageClient
+from .plan import TransferReport
 from .server import RegistryServer
+from .transport import SwarmTransport
 
-
-@dataclasses.dataclass
-class SwarmStats(DeliveryStats):
-    """Delivery accounting split by source."""
-    peer_chunk_bytes: int = 0      # CHUNK_BATCH bytes served by peers
-    registry_chunk_bytes: int = 0  # CHUNK_BATCH bytes served by the registry
-    chunks_from_peers: int = 0
-    peer_rounds: int = 0
-
-    @property
-    def peer_offload_fraction(self) -> float:
-        total = self.peer_chunk_bytes + self.registry_chunk_bytes
-        return self.peer_chunk_bytes / total if total else 0.0
+SwarmStats = TransferReport         # deprecation alias (pre-unification name)
 
 
 class SwarmNode:
@@ -55,16 +53,28 @@ class SwarmNode:
         self.name = name
         self.client = Client(cdc_params=cdc_params, cdmt_params=cdmt_params)
         self.cache = TieredChunkCache(self.client.store.chunks, cache_bytes)
+        self.alive = True
         self.served_bytes = 0
         self.served_chunks = 0
         self._lock = threading.Lock()
+
+    def kill(self) -> None:
+        """Take the node offline: subsequent ``serve_want`` calls raise, so
+        pullers fail over to the next provider / the registry."""
+        self.alive = False
+
+    def revive(self) -> None:
+        self.alive = True
 
     # ------------------------------------------------------------ peer server
 
     def serve_want(self, want_frame: bytes) -> bytes:
         """Answer a WANT with the subset of chunks this node holds (one
         CHUNK_BATCH frame; absent fps are omitted, the requester falls back
-        to other peers / the registry for them)."""
+        to other peers / the registry for them).  A dead node raises
+        :class:`DeliveryError` — the wire analogue of a connection refusal."""
+        if not self.alive:
+            raise DeliveryError(f"peer {self.name} is unreachable")
         fps = wire.decode_want(want_frame)
         batch: Dict[bytes, bytes] = {}
         for fp in fps:
@@ -84,7 +94,10 @@ class SwarmTracker:
     provisioning v7 is a *complete* source for v7's chunks, while peers on
     other tags of the same lineage still hold the shared prefix — so lookups
     return exact-tag holders first, then same-lineage holders as a second
-    tier.
+    tier.  Registrations of dead nodes linger (a lookup cannot prove
+    liveness), but each tier orders currently-live nodes first so corpses
+    never crowd live providers out of the ``limit`` slots; a returned
+    provider that still fails is absorbed by the transport as a failover.
     """
 
     def __init__(self):
@@ -103,7 +116,8 @@ class SwarmTracker:
                   limit: int = 4) -> List[SwarmNode]:
         """Up to ``limit`` providers — exact-tag holders first, same-lineage
         holders after, each tier rotated round-robin so concurrent pullers
-        spread load across the swarm."""
+        spread load across the swarm, and live nodes ahead of dead ones
+        within each tier."""
         with self._lock:
             exact = [n for n in self._providers.get((lineage, tag), ())
                      if n is not exclude]
@@ -118,77 +132,24 @@ class SwarmTracker:
         for tier in (exact, rest):
             if tier:
                 start = rot % len(tier)
-                out.extend(tier[start:] + tier[:start])
+                rotated = tier[start:] + tier[:start]
+                out.extend(sorted(rotated, key=lambda n: not n.alive))
         return out[:limit]
 
 
 def swarm_pull(node: SwarmNode, server: RegistryServer, tracker: SwarmTracker,
                lineage: str, tag: str, batch_chunks: int = 64,
-               max_peers: int = 4) -> SwarmStats:
+               max_peers: int = 4) -> TransferReport:
     """Pull ``lineage:tag``: index + recipe from the registry, chunk payloads
     peers-first, registry for the remainder.  Registers ``node`` as a
-    provider on success."""
-    client = node.client
-    idx_frame = server.get_index(lineage, tag)
-    server_idx = wire.decode_index(idx_frame)
-    recipe_frame = server.get_recipe(lineage, tag)
-    recipe = wire.decode_recipe(recipe_frame)
-    stats = SwarmStats(op="swarm_pull", lineage=lineage, tag=tag,
-                       index_bytes=len(idx_frame),
-                       recipe_bytes=len(recipe_frame),
-                       chunks_total=len(recipe.fps),
-                       raw_bytes=recipe.total_size)
-
-    local_idx = client.indexes.get(lineage)
-    to_fetch = [fp for fp in iter_missing(local_idx, server_idx, stats)
-                if not client.store.chunks.has(fp)]
-    received: Dict[bytes, bytes] = {}
-    peers = tracker.providers(lineage, tag, exclude=node, limit=max_peers)
-
-    for start in range(0, len(to_fetch), batch_chunks):
-        wanted = [fp for fp in to_fetch[start:start + batch_chunks]
-                  if fp not in received]
-        # 1) swarm first: ask each peer for what is still missing
-        for peer in peers:
-            if not wanted:
-                break
-            want = wire.encode_want(wanted)
-            stats.want_bytes += len(want)
-            frame = peer.serve_want(want)
-            stats.peer_rounds += 1
-            got = wire.decode_chunk_batch(frame)
-            # the frame crossed the wire either way — empty replies count too
-            stats.peer_chunk_bytes += len(frame)
-            stats.chunk_bytes += len(frame)
-            if got:
-                stats.chunks_from_peers += len(got)
-                stats.chunks_moved += len(got)
-                received.update(got)
-                wanted = [fp for fp in wanted if fp not in got]
-        # 2) registry fallback for the remainder
-        if wanted:
-            want = wire.encode_want(wanted)
-            stats.want_bytes += len(want)
-            frames = server.handle_want(want)
-            stats.rounds += 1
-            for f in frames:
-                got = wire.decode_chunk_batch(f)
-                stats.registry_chunk_bytes += len(f)
-                stats.chunk_bytes += len(f)
-                stats.chunks_moved += len(got)
-                received.update(got)
-
-    undelivered = [fp for fp in to_fetch if fp not in received]
-    if undelivered:
-        raise DeliveryError(
-            f"swarm pull {lineage}:{tag}: {len(undelivered)} chunk(s) "
-            f"served by neither peers nor registry "
-            f"(first: {undelivered[0].hex()[:12]})")
-    # verify=False: peer and registry payloads were fingerprint-checked by
-    # decode_chunk_batch as they arrived
-    client.store.ingest_chunks(f"{lineage}:{tag}", recipe.fps, received,
-                               recipe.sizes, verify=False)
-    client.indexes[lineage] = server_idx
-    # freshly provisioned ⇒ this node can now serve the version
-    tracker.register(lineage, tag, node)
-    return stats
+    provider on success.  Compatibility wrapper over
+    ``ImageClient(SwarmTransport(...)).pull``."""
+    transport = SwarmTransport(node, tracker, server, max_peers=max_peers,
+                               batch_chunks=batch_chunks)
+    ic = ImageClient(transport,
+                     store=node.client.store, indexes=node.client.indexes,
+                     tag_trees=node.client.tag_trees,
+                     cdc_params=node.client.store.cdc_params,
+                     cdmt_params=node.client.cdmt_params,
+                     batch_chunks=batch_chunks, pipeline_depth=1)
+    return ic.pull(lineage, tag)

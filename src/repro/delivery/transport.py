@@ -1,0 +1,341 @@
+"""Pluggable transports — one client API over every delivery backend.
+
+A :class:`Transport` answers the five questions the paper's client protocol
+needs (and nothing else): *give me the index*, *give me the recipe*, *fetch
+these chunks*, *take this push*, *which of these do you already have*.
+:class:`repro.delivery.client.ImageClient` runs identical Algorithm-2 logic
+against any implementation:
+
+  * :class:`LocalTransport` — wraps a :class:`~repro.core.registry.Registry`
+    in-process.  No frames are materialized; byte accounting uses the exact
+    arithmetic sizing helpers in :mod:`repro.delivery.wire`, so reported
+    bytes equal what the wire path would serialize.
+  * :class:`WireTransport` — wraps a
+    :class:`~repro.delivery.server.RegistryServer`.  Every exchange is a
+    real encoded frame; payloads are fingerprint-verified on decode.
+  * :class:`SwarmTransport` — composes peer providers (resolved per batch
+    from a :class:`~repro.delivery.swarm.SwarmTracker`) over a registry
+    fallback.  A dead peer is absorbed as a failover: the batch moves to the
+    next provider and finally the registry, with each source's traffic and
+    failures recorded on its own :class:`~repro.delivery.plan.SourceLeg`.
+
+Control-plane methods (``has_chunks``, ``tags``) are KB-sized; data-plane
+chunk traffic flows only through ``fetch_chunks``/``push``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple,\
+    runtime_checkable
+
+from repro.core.cdmt import CDMT, CDMTParams
+from repro.core.errors import DeliveryError
+from repro.core.registry import PushReceipt, Registry
+from repro.core.store import Recipe
+
+from . import wire
+from .plan import SourceLeg
+from .server import RegistryServer
+
+REGISTRY_SOURCE = "registry"
+
+
+@dataclasses.dataclass
+class FetchResult:
+    """Chunks obtained for one batch, with per-source accounting."""
+    chunks: Dict[bytes, bytes]
+    legs: List[SourceLeg]
+
+
+@dataclasses.dataclass
+class PushOutcome:
+    """What one push cost on the wire, per byte category."""
+    receipt: PushReceipt
+    header_bytes: int              # PUSH_HDR (wire) / index upload (local)
+    recipe_bytes: int
+    chunk_bytes: int
+    rounds: int
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """The client-facing delivery protocol (duck-typed)."""
+
+    name: str
+    verifies_payloads: bool        # True: fetched payloads already hashed
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        """``(index, wire_bytes)``; :class:`DeliveryError` when unknown."""
+        ...
+
+    def get_latest_index(self, lineage: str
+                         ) -> Tuple[Optional[CDMT], int]:
+        """Lineage head index (None for a new lineage) + wire bytes."""
+        ...
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        ...
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        """Fetch one batch of chunk payloads.  Absent fps are omitted from
+        the result (the caller decides whether absence is an error)."""
+        ...
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], *,
+             parent_version: Optional[int] = None,
+             claimed_root: Optional[bytes] = None,
+             claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        ...
+
+    def has_chunks(self, fps: Sequence[bytes]
+                   ) -> Tuple[List[bytes], int]:
+        """``(missing_on_remote, control_wire_bytes)`` — lets a push ship
+        only chunks the backend truly lacks (cross-lineage dedup)."""
+        ...
+
+    def tags(self, lineage: str) -> List[str]:
+        ...
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        """Hook invoked after a successful pull fully ingests."""
+        ...
+
+
+# ----------------------------------------------------------------- in-process
+
+class LocalTransport:
+    """In-process transport over a :class:`Registry`.
+
+    Byte accounting matches the wire path arithmetically (same sizing
+    formulas, no frames built), with two deliberate differences inherited
+    from the original in-process protocol: WANT frames cost nothing (the
+    fetch is a function call) and a push uploads the full index instead of a
+    PUSH_HDR (the in-process registry receives the tree object, it does not
+    rebuild one from the recipe).
+    """
+
+    name = "local"
+    verifies_payloads = False      # payloads come straight off local storage
+
+    def __init__(self, registry: Registry):
+        self.registry = registry
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        idx = self.registry.index_for_tag(lineage, tag)
+        return idx, wire.index_wire_bytes(idx)
+
+    def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        idx = self.registry.latest_index(lineage)
+        return idx, wire.index_wire_bytes(idx) if idx is not None else 0
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        recipe = self.registry.recipe_for(lineage, tag)
+        return recipe, wire.recipe_wire_bytes(recipe)
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        chunks = self.registry.serve_chunks(fps)
+        leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
+                        chunk_bytes=(wire.chunk_batch_wire_bytes(chunks)
+                                     if chunks else 0),
+                        rounds=1)
+        return FetchResult(chunks=chunks, legs=[leg])
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], *,
+             parent_version: Optional[int] = None,
+             claimed_root: Optional[bytes] = None,
+             claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        receipt = self.registry.receive_push(
+            lineage, tag, recipe, chunks, parent_version=parent_version,
+            claimed_root=claimed_root, claimed_params=claimed_params)
+        idx = self.registry.index_for_tag(lineage, tag)
+        return PushOutcome(
+            receipt=receipt,
+            header_bytes=wire.index_wire_bytes(idx),   # index upload
+            recipe_bytes=wire.recipe_wire_bytes(recipe),
+            chunk_bytes=wire.chunk_batch_wire_bytes(chunks) if chunks else 0,
+            rounds=1 if chunks else 0)
+
+    def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        return self.registry.has_chunks(fps), 0
+
+    def tags(self, lineage: str) -> List[str]:
+        return self.registry.tags(lineage)
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        pass
+
+
+# ----------------------------------------------------------------------- wire
+
+class WireTransport:
+    """Frame-level transport over a :class:`RegistryServer`.
+
+    Every byte reported crossed the server boundary as a serialized frame;
+    chunk payloads are blake2b-verified during ``decode_chunk_batch``.
+    """
+
+    name = "wire"
+    verifies_payloads = True
+
+    def __init__(self, server: RegistryServer, batch_chunks: int = 64):
+        self.server = server
+        self.batch_chunks = max(1, batch_chunks)   # push CHUNK_BATCH framing
+        # the server splits each WANT into frames of at most this many
+        # chunks — pull plans use it to quote response framing exactly
+        self.response_batch_chunks = server.max_batch_chunks
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        frame = self.server.get_index(lineage, tag)
+        return wire.decode_index(frame), len(frame)
+
+    def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        frame = self.server.get_latest_index(lineage)
+        if frame is None:
+            return None, 0
+        return wire.decode_index(frame), len(frame)
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        frame = self.server.get_recipe(lineage, tag)
+        return wire.decode_recipe(frame), len(frame)
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        want = wire.encode_want(fps)
+        frames = self.server.handle_want(want)
+        chunks: Dict[bytes, bytes] = {}
+        nbytes = 0
+        for f in frames:
+            nbytes += len(f)
+            chunks.update(wire.decode_chunk_batch(f))
+        leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
+                        chunk_bytes=nbytes, want_bytes=len(want), rounds=1)
+        return FetchResult(chunks=chunks, legs=[leg])
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], *,
+             parent_version: Optional[int] = None,
+             claimed_root: Optional[bytes] = None,
+             claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        hdr = wire.encode_push_header(wire.PushHeader(
+            lineage=lineage, tag=tag, root=claimed_root,
+            parent_version=parent_version, params=claimed_params))
+        recipe_frame = wire.encode_recipe(recipe)
+        chunk_frames: List[bytes] = []
+        fps = list(chunks)
+        for start in range(0, len(fps), self.batch_chunks):
+            part = {fp: chunks[fp]
+                    for fp in fps[start:start + self.batch_chunks]}
+            chunk_frames.append(wire.encode_chunk_batch(part))
+        receipt = self.server.handle_push(hdr, recipe_frame, chunk_frames)
+        # the registry rebuilds the index from the recipe, so no INDEX frame
+        # is uploaded — the claimed root rides in the header
+        return PushOutcome(receipt=receipt, header_bytes=len(hdr),
+                           recipe_bytes=len(recipe_frame),
+                           chunk_bytes=sum(len(f) for f in chunk_frames),
+                           rounds=len(chunk_frames))
+
+    def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        req = wire.encode_has(fps)
+        resp = self.server.handle_has(req)
+        return wire.decode_missing(resp), len(req) + len(resp)
+
+    def tags(self, lineage: str) -> List[str]:
+        # control-plane query (tag names only); served from the registry
+        # index, not the data plane
+        return self.server.registry.tags(lineage)
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------- swarm
+
+class SwarmTransport:
+    """Peer-first transport: swarm providers over a registry fallback.
+
+    Indexes, recipes, and pushes go to the registry (it stays the source of
+    truth; peers only serve chunk payloads).  ``fetch_chunks`` resolves the
+    current provider set from the tracker *per batch*, asks each provider
+    for whatever is still wanted, and sends only the remainder to the
+    registry — so a provider that dies mid-pull costs one failed round
+    (recorded as a failover on its leg) and the batch completes from the
+    next source.  After a successful pull the node registers as a provider.
+    """
+
+    name = "swarm"
+    verifies_payloads = True
+
+    def __init__(self, node, tracker, server: RegistryServer,
+                 max_peers: int = 4, batch_chunks: int = 64):
+        self.node = node
+        self.tracker = tracker
+        self.registry_transport = WireTransport(server,
+                                                batch_chunks=batch_chunks)
+        self.max_peers = max_peers
+
+    # registry-delegated control plane --------------------------------------
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        return self.registry_transport.get_index(lineage, tag)
+
+    def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        return self.registry_transport.get_latest_index(lineage)
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        return self.registry_transport.get_recipe(lineage, tag)
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], **kw) -> PushOutcome:
+        return self.registry_transport.push(lineage, tag, recipe, chunks,
+                                            **kw)
+
+    def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        return self.registry_transport.has_chunks(fps)
+
+    def tags(self, lineage: str) -> List[str]:
+        return self.registry_transport.tags(lineage)
+
+    # peer-first data plane --------------------------------------------------
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        chunks: Dict[bytes, bytes] = {}
+        legs: List[SourceLeg] = []
+        wanted = list(fps)
+        peers = self.tracker.providers(lineage, tag, exclude=self.node,
+                                       limit=self.max_peers)
+        for peer in peers:
+            if not wanted:
+                break
+            want = wire.encode_want(wanted)
+            leg = SourceLeg(source=f"peer:{peer.name}",
+                            want_bytes=len(want), rounds=1)
+            legs.append(leg)
+            try:
+                frame = peer.serve_want(want)
+            except DeliveryError:
+                # dead/unreachable peer: failover to the next provider
+                leg.failures += 1
+                continue
+            # the frame crossed the wire either way — empty replies count too
+            leg.chunk_bytes += len(frame)
+            got = wire.decode_chunk_batch(frame)
+            if got:
+                leg.chunks += len(got)
+                chunks.update(got)
+                wanted = [fp for fp in wanted if fp not in got]
+        if wanted:
+            # final fallback: the registry serves whatever no peer held
+            res = self.registry_transport.fetch_chunks(lineage, tag, wanted)
+            chunks.update(res.chunks)
+            legs.extend(res.legs)
+        return FetchResult(chunks=chunks, legs=legs)
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        # freshly provisioned ⇒ this node can now serve the version
+        self.tracker.register(lineage, tag, self.node)

@@ -15,6 +15,9 @@ frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
                    payload's blake2b against its fp (authenticated transfer).
   ``WANT``         a fingerprint request list (pull / peer fetch).
   ``PUSH_HDR``     push envelope: lineage, tag, claimed root, parent version.
+  ``HAS``          presence query: which of these fps does the server hold?
+  ``MISSING``      the reply — fps the server does NOT hold (a push then
+                   ships exactly these, enabling cross-lineage dedup).
 
 All decoders raise :class:`WireError` on truncation, bad magic, trailing
 garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
@@ -45,6 +48,8 @@ class FrameType(enum.IntEnum):
     CHUNK_BATCH = 3
     WANT = 4
     PUSH_HDR = 5
+    HAS = 6
+    MISSING = 7
 
 
 # ----------------------------------------------------------------- varints
@@ -279,29 +284,57 @@ def decode_chunk_batch(buf: bytes, verify: bool = True) -> Dict[bytes, bytes]:
     return out
 
 
-# -------------------------------------------------------------------- WANT
+# ------------------------------------------------- WANT / HAS / MISSING
+#
+# All three are fingerprint-list frames; they differ only in frame type
+# (WANT requests payloads, HAS queries presence, MISSING is HAS's reply).
 
-def encode_want(fps: Sequence[bytes]) -> bytes:
+def _encode_fp_list(ftype: FrameType, fps: Sequence[bytes]) -> bytes:
     out = bytearray()
     out += encode_uvarint(len(fps))
     for fp in fps:
         if len(fp) != hashing.DIGEST_SIZE:
             raise WireError(f"bad fingerprint length {len(fp)}")
         out += fp
-    return encode_frame(FrameType.WANT, bytes(out))
+    return encode_frame(ftype, bytes(out))
 
 
-def decode_want(buf: bytes) -> List[bytes]:
-    payload = _decode_single(buf, FrameType.WANT)
+def _decode_fp_list(buf: bytes, ftype: FrameType) -> List[bytes]:
+    payload = _decode_single(buf, ftype)
     off = 0
     n, off = decode_uvarint(payload, off)
     fps: List[bytes] = []
     for _ in range(n):
-        fp, off = _take(payload, off, hashing.DIGEST_SIZE, "want fp")
+        fp, off = _take(payload, off, hashing.DIGEST_SIZE,
+                        f"{ftype.name.lower()} fp")
         fps.append(fp)
     if off != len(payload):
-        raise WireError("trailing bytes in WANT payload")
+        raise WireError(f"trailing bytes in {ftype.name} payload")
     return fps
+
+
+def encode_want(fps: Sequence[bytes]) -> bytes:
+    return _encode_fp_list(FrameType.WANT, fps)
+
+
+def decode_want(buf: bytes) -> List[bytes]:
+    return _decode_fp_list(buf, FrameType.WANT)
+
+
+def encode_has(fps: Sequence[bytes]) -> bytes:
+    return _encode_fp_list(FrameType.HAS, fps)
+
+
+def decode_has(buf: bytes) -> List[bytes]:
+    return _decode_fp_list(buf, FrameType.HAS)
+
+
+def encode_missing(fps: Sequence[bytes]) -> bytes:
+    return _encode_fp_list(FrameType.MISSING, fps)
+
+
+def decode_missing(buf: bytes) -> List[bytes]:
+    return _decode_fp_list(buf, FrameType.MISSING)
 
 
 # ---------------------------------------------------------------- PUSH_HDR
@@ -451,3 +484,17 @@ def chunk_batch_wire_bytes(chunks: Mapping[bytes, bytes]) -> int:
         hashing.DIGEST_SIZE + uvarint_len(len(d)) + len(d)
         for d in chunks.values())
     return _frame_len(payload)
+
+
+def chunk_batches_wire_bytes(sizes: Sequence[int], batch_chunks: int) -> int:
+    """Exact CHUNK_BATCH bytes for payloads of ``sizes`` delivered in frames
+    of ``batch_chunks`` — from sizes alone, so a pull *plan* can quote its
+    expected wire cost before a single payload is read."""
+    batch_chunks = max(1, batch_chunks)
+    total = 0
+    for start in range(0, len(sizes), batch_chunks):
+        part = sizes[start:start + batch_chunks]
+        payload = uvarint_len(len(part)) + sum(
+            hashing.DIGEST_SIZE + uvarint_len(s) + s for s in part)
+        total += _frame_len(payload)
+    return total

@@ -1,0 +1,408 @@
+"""Transport conformance: one ``ImageClient``, three ``Transport``s.
+
+The same scenario must move the same chunks through every transport, with
+byte counts equal up to framing overhead; swarm pulls must survive provider
+death mid-pull (failover to the next source, then the registry); and the
+server's restart warm-up must serve a recovered registry's first wave from
+RAM.
+"""
+
+import pytest
+
+from repro.core import cdc, hashing
+from repro.core.cdmt import CDMTParams
+from repro.core.errors import DeliveryError
+from repro.core.registry import Registry
+from repro.delivery import (ImageClient, LocalTransport, PullPlan,
+                            RegistryServer, SwarmNode, SwarmTracker,
+                            SwarmTransport, TransferReport, WireTransport,
+                            swarm_pull, wire)
+
+PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+P = CDMTParams(window=4, rule_bits=2)
+TRANSPORTS = ["local", "wire", "swarm"]
+
+
+def _rand(n, seed=0):
+    import numpy as np
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def _versions(n_versions=5, size=150_000, seed=0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    data = bytearray(_rand(size, seed))
+    out = [bytes(data)]
+    for _ in range(n_versions - 1):
+        for _ in range(3):
+            pos = rng.integers(0, len(data) - 100)
+            data[pos:pos + 64] = rng.bytes(64)
+        ins = rng.integers(0, len(data))
+        data[ins:ins] = rng.bytes(rng.integers(1, 256))
+        out.append(bytes(data))
+    return out
+
+
+def _seed_registry(versions, lineage="app"):
+    reg = Registry(cdmt_params=P)
+    pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS, cdmt_params=P)
+    for i, v in enumerate(versions):
+        pub.commit(lineage, f"v{i}", v)
+        pub.push(lineage, f"v{i}")
+    return reg
+
+
+def _fresh_client(kind, reg, provisioned_tags=()):
+    """A cold ImageClient over transport ``kind``.  For swarm, one peer is
+    pre-provisioned per tag in ``provisioned_tags`` so providers exist."""
+    if kind == "local":
+        return ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                           cdmt_params=P)
+    srv = RegistryServer(reg)
+    if kind == "wire":
+        return ImageClient(WireTransport(srv), cdc_params=PARAMS,
+                           cdmt_params=P)
+    tracker = SwarmTracker()
+    for i, tag in enumerate(provisioned_tags):
+        peer = SwarmNode(f"seed{i}", cdc_params=PARAMS, cdmt_params=P)
+        swarm_pull(peer, srv, tracker, "app", tag)
+    node = SwarmNode("me", cdc_params=PARAMS, cdmt_params=P)
+    transport = SwarmTransport(node, tracker, srv)
+    return ImageClient(transport, store=node.client.store,
+                       indexes=node.client.indexes,
+                       tag_trees=node.client.tag_trees,
+                       cdc_params=PARAMS, cdmt_params=P)
+
+
+# ------------------------------------------------------------- conformance
+
+class TestConformance:
+    @pytest.fixture(scope="class")
+    def scenario(self):
+        """Cold pull of v0 then warm upgrade to the head, once per
+        transport, against identically-seeded registries."""
+        versions = _versions(6, seed=40)
+        head = f"v{len(versions) - 1}"
+        out = {}
+        for kind in TRANSPORTS:
+            reg = _seed_registry(versions)
+            cl = _fresh_client(kind, reg, provisioned_tags=("v0", head))
+            cold = cl.pull("app", "v0")
+            warm = cl.pull("app", head)
+            out[kind] = {
+                "cold": cold, "warm": warm,
+                "v0": cl.materialize("app", "v0"),
+                "head": cl.materialize("app", head),
+            }
+        return versions, out
+
+    def test_materialization_identical(self, scenario):
+        versions, out = scenario
+        for kind in TRANSPORTS:
+            assert out[kind]["v0"] == versions[0], kind
+            assert out[kind]["head"] == versions[-1], kind
+
+    def test_identical_chunks_moved(self, scenario):
+        _, out = scenario
+        for phase in ("cold", "warm"):
+            moved = {k: out[k][phase].chunks_moved for k in TRANSPORTS}
+            assert len(set(moved.values())) == 1, moved
+            totals = {k: out[k][phase].chunks_total for k in TRANSPORTS}
+            assert len(set(totals.values())) == 1, totals
+            comps = {k: out[k][phase].comparisons for k in TRANSPORTS}
+            assert len(set(comps.values())) == 1, comps
+
+    def test_index_and_recipe_bytes_exact_local_vs_wire(self, scenario):
+        """The local transport's arithmetic sizing must equal the wire
+        transport's real frame lengths byte-for-byte."""
+        _, out = scenario
+        for phase in ("cold", "warm"):
+            a, b = out["local"][phase], out["wire"][phase]
+            assert a.index_bytes == b.index_bytes
+            assert a.recipe_bytes == b.recipe_bytes
+            assert a.chunk_bytes == b.chunk_bytes
+
+    def test_chunk_bytes_within_framing_overhead(self, scenario):
+        _, out = scenario
+        for phase in ("cold", "warm"):
+            ref = out["local"][phase].chunk_bytes
+            for kind in TRANSPORTS:
+                got = out[kind][phase].chunk_bytes
+                assert abs(got - ref) <= 0.02 * ref + 512, (kind, phase)
+
+    def test_reports_carry_transport_and_sources(self, scenario):
+        _, out = scenario
+        for kind in TRANSPORTS:
+            rep = out[kind]["warm"]
+            assert isinstance(rep, TransferReport)
+            assert rep.transport == kind
+            assert sum(l.chunks for l in rep.sources.values()) \
+                == rep.chunks_moved
+            assert sum(l.chunk_bytes for l in rep.sources.values()) \
+                == rep.chunk_bytes
+
+    def test_swarm_pulled_mostly_from_peers(self, scenario):
+        _, out = scenario
+        warm = out["swarm"]["warm"]
+        assert warm.chunks_from_peers >= 0.5 * warm.chunks_moved
+        assert warm.peer_offload_fraction >= 0.5
+
+
+class TestPushConformance:
+    @pytest.mark.parametrize("kind", TRANSPORTS)
+    def test_push_lands_identically(self, kind):
+        versions = _versions(3, seed=41)
+        reg = Registry(cdmt_params=P)
+        if kind == "local":
+            transport = LocalTransport(reg)
+        elif kind == "wire":
+            transport = WireTransport(RegistryServer(reg))
+        else:
+            node = SwarmNode("pub", cdc_params=PARAMS, cdmt_params=P)
+            transport = SwarmTransport(node, SwarmTracker(),
+                                       RegistryServer(reg))
+        pub = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        reference = _seed_registry(versions)
+        for i, v in enumerate(versions):
+            pub.commit("app", f"v{i}", v)
+            st = pub.push("app", f"v{i}")
+            assert st.chunks_moved <= st.chunks_total
+        assert reg.tags("app") == reference.tags("app")
+        for tag in reg.tags("app"):
+            assert reg.index_for_tag("app", tag).root \
+                == reference.index_for_tag("app", tag).root
+
+    @pytest.mark.parametrize("kind", ["local", "wire"])
+    def test_has_chunks_gives_cross_lineage_push_dedup(self, kind):
+        """A push ships only chunks the backend truly lacks — shared chunks
+        already stored under another lineage stay home."""
+        base = _rand(100_000, seed=42)
+        reg = Registry(cdmt_params=P)
+        transport = (LocalTransport(reg) if kind == "local"
+                     else WireTransport(RegistryServer(reg)))
+        pub = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        pub.commit("a", "v0", base)
+        pub.push("a", "v0")
+        pub.commit("b", "v0", base + _rand(10_000, seed=43))
+        st = pub.push("b", "v0")
+        # lineage b is new (no index to diff against) yet most chunks are
+        # already stored under lineage a — the presence check finds them
+        assert st.chunks_moved < 0.5 * st.chunks_total
+        assert st.want_bytes >= 0
+        fresh = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        fresh.pull("b", "v0")
+        assert fresh.materialize("b", "v0") == pub.materialize("b", "v0")
+
+
+# ------------------------------------------------------------ plan/execute
+
+class TestPlanExecute:
+    def test_plan_is_inspectable_and_execute_matches(self):
+        versions = _versions(4, seed=44)
+        reg = _seed_registry(versions)
+        cl = _fresh_client("wire", reg)
+        cl.pull("app", "v0")
+        plan = cl.plan_pull("app", "v3")
+        assert isinstance(plan, PullPlan)
+        assert 0 < plan.chunks_to_fetch < plan.chunks_total
+        assert plan.comparisons > 0
+        assert plan.expected_chunk_bytes < plan.raw_bytes
+        # nothing moved yet: planning is free of data-plane traffic
+        assert "app:v3" not in cl.store.recipes
+        report = cl.execute(plan)
+        assert report.chunks_moved == plan.chunks_to_fetch
+        assert report.comparisons == plan.comparisons
+        # the plan's quote is exact (want/control frames excluded by design)
+        assert (report.index_bytes + report.recipe_bytes
+                + report.chunk_bytes) == plan.expected_wire_bytes
+        assert cl.materialize("app", "v3") == versions[3]
+
+    def test_plan_quote_exact_for_local_too(self):
+        versions = _versions(3, seed=45)
+        reg = _seed_registry(versions)
+        cl = _fresh_client("local", reg)
+        plan = cl.plan_pull("app", "v0")
+        report = cl.execute(plan)
+        assert (report.index_bytes + report.recipe_bytes
+                + report.chunk_bytes) == plan.expected_wire_bytes
+
+    def test_plan_quote_exact_when_server_splits_batches(self):
+        """A client request batch larger than the server's response batch
+        limit gets split into more frames — the plan must quote that."""
+        versions = _versions(3, seed=48)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg, max_batch_chunks=16)
+        cl = ImageClient(WireTransport(srv), cdc_params=PARAMS,
+                         cdmt_params=P, batch_chunks=256)
+        plan = cl.plan_pull("app", "v2")
+        assert plan.chunks_to_fetch > 16          # forces a server split
+        report = cl.execute(plan)
+        assert (report.index_bytes + report.recipe_bytes
+                + report.chunk_bytes) == plan.expected_wire_bytes
+
+    def test_plan_wrong_transport_rejected(self):
+        versions = _versions(2, seed=46)
+        reg = _seed_registry(versions)
+        plan = _fresh_client("local", reg).plan_pull("app", "v0")
+        with pytest.raises(DeliveryError):
+            _fresh_client("wire", reg).execute(plan)
+
+    def test_upgrade_pulls_head(self):
+        versions = _versions(4, seed=47)
+        reg = _seed_registry(versions)
+        cl = _fresh_client("wire", reg)
+        rep = cl.upgrade("app")
+        assert rep.tag == "v3"
+        assert cl.materialize("app", "v3") == versions[3]
+        with pytest.raises(DeliveryError):
+            cl.upgrade("ghost")
+
+
+# ---------------------------------------------------------------- failover
+
+class TestFailover:
+    def _swarm_env(self, n_versions=4, seed=50):
+        versions = _versions(n_versions, seed=seed)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        tracker = SwarmTracker()
+        head = f"v{n_versions - 1}"
+        peer = SwarmNode("p0", cdc_params=PARAMS, cdmt_params=P)
+        swarm_pull(peer, srv, tracker, "app", head)
+        return versions, srv, tracker, peer, head
+
+    def test_dead_peer_falls_over_to_registry(self):
+        versions, srv, tracker, peer, head = self._swarm_env()
+        peer.kill()
+        node = SwarmNode("n1", cdc_params=PARAMS, cdmt_params=P)
+        st = swarm_pull(node, srv, tracker, "app", head, batch_chunks=16)
+        assert node.client.materialize("app", head) == versions[-1]
+        assert st.failovers >= 1
+        assert st.chunks_from_peers == 0
+        assert st.peer_offload_fraction == 0.0
+        assert st.registry_chunk_bytes > 0
+        leg = st.sources[f"peer:{peer.name}"]
+        assert leg.failures >= 1 and leg.chunks == 0
+
+    def test_peer_dies_mid_pull(self):
+        """The provider answers the first batch, then goes dark — the pull
+        must complete against the registry with the death recorded as a
+        failover, not fail or hang."""
+        versions, srv, tracker, peer, head = self._swarm_env()
+        real_serve = peer.serve_want
+        served = []
+
+        def dying_serve(want_frame):
+            if served:
+                peer.kill()
+            served.append(1)
+            return real_serve(want_frame)
+
+        peer.serve_want = dying_serve
+        node = SwarmNode("n1", cdc_params=PARAMS, cdmt_params=P)
+        st = swarm_pull(node, srv, tracker, "app", head, batch_chunks=8)
+        assert node.client.materialize("app", head) == versions[-1]
+        assert st.chunks_from_peers > 0          # first batch came from it
+        assert st.failovers >= 1                 # later batches hit the corpse
+        assert st.registry_chunk_bytes > 0       # registry served the rest
+        assert st.chunks_moved == st.chunks_total
+
+    def test_live_provider_preferred_over_dead(self):
+        """The tracker orders live nodes ahead of dead ones in each tier, so
+        a lingering corpse neither crowds out the live provider nor costs a
+        failed round when the live one can serve everything."""
+        versions, srv, tracker, peer, head = self._swarm_env()
+        backup = SwarmNode("p1", cdc_params=PARAMS, cdmt_params=P)
+        swarm_pull(backup, srv, tracker, "app", head)
+        peer.kill()
+        node = SwarmNode("n2", cdc_params=PARAMS, cdmt_params=P)
+        st = swarm_pull(node, srv, tracker, "app", head, batch_chunks=16)
+        assert node.client.materialize("app", head) == versions[-1]
+        # the live provider served the bytes; the corpse was never consulted
+        assert st.failovers == 0
+        assert st.chunks_from_peers == st.chunks_moved
+        assert st.sources[f"peer:{backup.name}"].chunks > 0
+        assert f"peer:{peer.name}" not in st.sources
+
+
+# ------------------------------------------------------- HAS/MISSING frames
+
+class TestPresenceFrames:
+    def test_roundtrip(self):
+        fps = [hashing.chunk_fingerprint(bytes([i])) for i in range(9)]
+        assert wire.decode_has(wire.encode_has(fps)) == fps
+        assert wire.decode_missing(wire.encode_missing(fps)) == fps
+        with pytest.raises(wire.WireError):
+            wire.decode_has(wire.encode_missing(fps))   # type mismatch
+        with pytest.raises(wire.WireError):
+            wire.decode_has(wire.encode_has(fps)[:-1])  # truncation
+
+    def test_server_answers_presence(self):
+        versions = _versions(2, seed=51)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        known = next(iter(reg.store.chunks.fingerprints()))
+        ghost = hashing.chunk_fingerprint(b"never pushed")
+        resp = srv.handle_has(wire.encode_has([known, ghost]))
+        assert wire.decode_missing(resp) == [ghost]
+        assert srv.snapshot().has_requests == 1
+
+
+# ----------------------------------------------------------- restart warm-up
+
+class TestWarmStart:
+    def _durable_registry(self, tmp_path, versions):
+        reg = Registry(directory=str(tmp_path), cdmt_params=P)
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        for i, v in enumerate(versions):
+            pub.commit("app", f"v{i}", v)
+            pub.push("app", f"v{i}")
+        reg.close()
+        return Registry(directory=str(tmp_path), cdmt_params=P)
+
+    def test_recovered_registry_serves_from_warm_cache(self, tmp_path):
+        versions = _versions(3, seed=52)
+        reg = self._durable_registry(tmp_path, versions)
+        try:
+            srv = RegistryServer(reg)
+            s0 = srv.snapshot()
+            assert s0.warmed_chunks == reg.store.chunks.n_chunks()
+            cl = ImageClient(WireTransport(srv), cdc_params=PARAMS,
+                             cdmt_params=P)
+            cl.pull("app", "v2")
+            assert cl.materialize("app", "v2") == versions[2]
+            s = srv.snapshot()
+            assert s.warm_hits > 0
+            # the whole working set was pre-warmed: no cold store reads
+            assert srv.cache.stats.misses == 0
+        finally:
+            reg.close()
+
+    def test_warm_start_opt_out(self, tmp_path):
+        versions = _versions(2, seed=53)
+        reg = self._durable_registry(tmp_path, versions)
+        try:
+            srv = RegistryServer(reg, warm_start=False)
+            assert srv.snapshot().warmed_chunks == 0
+            assert srv.cache.stats.resident_bytes == 0
+        finally:
+            reg.close()
+
+    def test_warm_start_respects_capacity(self, tmp_path):
+        versions = _versions(3, seed=54)
+        reg = self._durable_registry(tmp_path, versions)
+        try:
+            srv = RegistryServer(reg, cache_bytes=20_000)
+            s = srv.snapshot()
+            assert 0 < s.warmed_chunks < reg.store.chunks.n_chunks()
+            assert srv.cache.stats.resident_bytes <= 20_000
+        finally:
+            reg.close()
+
+    def test_memory_registry_not_warmed(self):
+        versions = _versions(2, seed=55)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        assert srv.snapshot().warmed_chunks == 0
