@@ -35,7 +35,8 @@ from repro.core.cdmt import CDMTParams
 from repro.core.pushpull import Client
 from repro.core.registry import Registry
 from repro.delivery import (DeltaSession, ImageClient, LocalTransport,
-                            RegistryServer, SwarmNode, SwarmTracker,
+                            RegistryServer, SocketRegistryServer,
+                            SocketTransport, SwarmNode, SwarmTracker,
                             SwarmTransport, WireTransport, swarm_pull)
 
 from benchmarks.common import Report, Timer
@@ -146,7 +147,8 @@ def _swarm(app: str, versions, n: int, warm_tag: str, new_tag: str):
     }
 
 
-def _unified_clients(kind: str, srv: RegistryServer, n: int):
+def _unified_clients(kind: str, srv: RegistryServer, n: int,
+                     sock_srv=None):
     """N cold ImageClients over transport ``kind`` — the one code path the
     legacy modes above also route through (via their shims)."""
     tracker = SwarmTracker()
@@ -156,6 +158,8 @@ def _unified_clients(kind: str, srv: RegistryServer, n: int):
             transport = LocalTransport(srv.registry)
         elif kind == "wire":
             transport = WireTransport(srv)
+        elif kind == "socket":
+            transport = SocketTransport(sock_srv.address)
         else:
             node = SwarmNode(f"n{i}", cdc_params=CDC_PARAMS,
                              cdmt_params=CDMT_PARAMS)
@@ -175,37 +179,53 @@ def _unified(app: str, versions, n: int, warm_tag: str, new_tag: str,
              kind: str):
     """Rolling upgrade driven purely through ``ImageClient`` + ``Transport``
     — identical Algorithm-2 logic on every backend, so rows are directly
-    comparable across the in-process, framed, and peer-first paths."""
+    comparable across the in-process, framed, socket, and peer-first paths.
+    For ``kind="socket"`` every client talks real TCP to one threaded
+    acceptor, and ``registry_egress_mb`` is *socket* bytes (frames plus
+    envelope overhead — the number that would actually leave a NIC)."""
     srv = _loaded_server(app, versions)
-    clients = _unified_clients(kind, srv, n)
-    for cl in clients:
-        cl.pull(app, warm_tag)                # provision (not measured)
-    base = srv.snapshot()
-    base_cache = srv.cache.stats
-    reports: List = [None] * n
+    sock_srv = SocketRegistryServer(srv) if kind == "socket" else None
+    clients: List[ImageClient] = []
+    try:
+        clients = _unified_clients(kind, srv, n, sock_srv=sock_srv)
+        for cl in clients:
+            cl.pull(app, warm_tag)            # provision (not measured)
+        base = srv.snapshot()
+        base_sock = sock_srv.snapshot() if sock_srv else None
+        base_cache = srv.cache.stats
+        reports: List = [None] * n
 
-    def worker(i):
-        reports[i] = clients[i].pull(app, new_tag)
+        def worker(i):
+            reports[i] = clients[i].pull(app, new_tag)
 
-    wall = _rolling_waves(n, worker)
+        wall = _rolling_waves(n, worker)
 
-    s = srv.snapshot()
-    cache = srv.cache.stats
-    hits = cache.hits - base_cache.hits
-    misses = cache.misses - base_cache.misses
-    peer_b = sum(r.peer_chunk_bytes for r in reports)
-    reg_b = sum(r.registry_chunk_bytes for r in reports)
-    if kind == "local":                       # in-process: frontend untouched
-        reg_egress = sum(r.total_wire_bytes for r in reports) / 2**20
-    else:
-        reg_egress = (s.egress_bytes - base.egress_bytes) / 2**20
-    return {
-        "registry_egress_mb": reg_egress,
-        "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
-        "coalesced": s.coalesced_reads - base.coalesced_reads,
-        "peer_offload": peer_b / (peer_b + reg_b) if peer_b + reg_b else 0.0,
-        "wall_s": wall,
-    }
+        s = srv.snapshot()
+        cache = srv.cache.stats
+        hits = cache.hits - base_cache.hits
+        misses = cache.misses - base_cache.misses
+        peer_b = sum(r.peer_chunk_bytes for r in reports)
+        reg_b = sum(r.registry_chunk_bytes for r in reports)
+        if kind == "local":                   # in-process: frontend untouched
+            reg_egress = sum(r.total_wire_bytes for r in reports) / 2**20
+        elif kind == "socket":                # bytes that crossed the socket
+            reg_egress = (sock_srv.snapshot().egress_bytes
+                          - base_sock.egress_bytes) / 2**20
+        else:
+            reg_egress = (s.egress_bytes - base.egress_bytes) / 2**20
+        return {
+            "registry_egress_mb": reg_egress,
+            "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "coalesced": s.coalesced_reads - base.coalesced_reads,
+            "peer_offload": (peer_b / (peer_b + reg_b)
+                             if peer_b + reg_b else 0.0),
+            "wall_s": wall,
+        }
+    finally:
+        if sock_srv is not None:
+            for cl in clients:
+                cl.transport.close()
+            sock_srv.stop()
 
 
 def run(scale: float = 1.0) -> Report:
@@ -225,8 +245,10 @@ def run(scale: float = 1.0) -> Report:
 
 
 def run_unified(scale: float = 1.0) -> Report:
-    """The three transports benched through the single ``ImageClient`` code
-    path, same rolling-upgrade schedule and metrics as ``delivery_scale``."""
+    """The four transports benched through the single ``ImageClient`` code
+    path, same rolling-upgrade schedule and metrics as ``delivery_scale``.
+    The ``unified-socket`` rows are the paper's numbers measured the way
+    Sec. VI means them: bytes that actually left a TCP socket."""
     rep = Report("delivery_unified")
     c = corpus(scale)
     for app in APPS:
@@ -235,10 +257,29 @@ def run_unified(scale: float = 1.0) -> Report:
         new_tag = versions[-1].tag
         naive_mb = versions[-1].size / 2**20
         for n in N_CLIENTS:
-            for kind in ("local", "wire", "swarm"):
+            for kind in ("local", "wire", "socket", "swarm"):
                 row = _unified(app, versions, n, warm_tag, new_tag, kind)
                 rep.add(app=app, mode=f"unified-{kind}", n_clients=n,
                         naive_egress_mb=naive_mb * n, **row)
+    return rep
+
+
+def run_socket(scale: float = 1.0) -> Report:
+    """Focused wire-vs-socket comparison (the CI smoke): one app, the same
+    rolling upgrade over the in-process framed path and over real TCP —
+    the delta between the two rows is pure envelope + kernel-socket cost."""
+    rep = Report("delivery_socket")
+    c = corpus(scale)
+    app = "node"
+    versions = c[app]
+    warm_tag = versions[max(0, len(versions) - 4)].tag
+    new_tag = versions[-1].tag
+    naive_mb = versions[-1].size / 2**20
+    for n in N_CLIENTS[:2]:
+        for kind in ("wire", "socket"):
+            row = _unified(app, versions, n, warm_tag, new_tag, kind)
+            rep.add(app=app, mode=kind, n_clients=n,
+                    naive_egress_mb=naive_mb * n, **row)
     return rep
 
 
@@ -246,3 +287,4 @@ if __name__ == "__main__":
     scale = float(sys.argv[1]) if len(sys.argv) > 1 else 1.0
     run(scale).print_csv()
     run_unified(scale).print_csv()
+    run_socket(scale).print_csv()

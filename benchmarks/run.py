@@ -22,6 +22,7 @@ ALL = {
     "table2_pushpull_io": bench_pushpull_io.run,
     "delivery_scale": bench_delivery_scale.run,
     "delivery_unified": bench_delivery_scale.run_unified,
+    "delivery_socket": bench_delivery_scale.run_socket,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
     "push_incremental": bench_push_incremental.run,

@@ -1,6 +1,8 @@
 """End-to-end tour of the delivery stack through the unified client API:
-one ``ImageClient``, three transports — wire push, planned warm upgrade
-through the concurrent frontend, and a peer-swarm rollout with failover.
+one ``ImageClient``, four transports — wire push, planned warm upgrade
+through the concurrent frontend, the same upgrade over a real TCP socket
+(bytes quoted to the byte, envelope included), and a peer-swarm rollout
+with failover.
 
 Run:  PYTHONPATH=src python examples/delivery_demo.py
 """
@@ -9,7 +11,8 @@ import numpy as np
 
 from repro.core import cdc
 from repro.core.registry import Registry
-from repro.delivery import (ImageClient, RegistryServer, SwarmNode,
+from repro.delivery import (ImageClient, RegistryServer,
+                            SocketRegistryServer, SocketTransport, SwarmNode,
                             SwarmTracker, SwarmTransport, WireTransport)
 
 CDC_PARAMS = cdc.CDCParams(mask_bits=11, min_size=256, max_size=16384)
@@ -70,6 +73,24 @@ def main():
     print(f"executed: {st.total_wire_bytes/1024:.1f} KiB moved vs "
           f"{st.raw_bytes/1024:.1f} KiB naive "
           f"({st.savings_vs_raw:.0%} saved, {st.rounds} pipelined rounds)")
+
+    # -- the same upgrade over a real TCP socket -----------------------------
+    with SocketRegistryServer(server) as sock_server:
+        with SocketTransport(sock_server.address) as transport:
+            remote = ImageClient(transport, cdc_params=CDC_PARAMS,
+                                 batch_chunks=32, pipeline_depth=4)
+            remote.pull("app", "v0")
+            plan = remote.plan_pull("app", tag)
+            st_s = remote.execute(plan)
+            assert remote.materialize("app", tag) == versions[-1]
+            # the plan quoted the socket bytes exactly, envelope included
+            assert (st_s.index_bytes + st_s.recipe_bytes
+                    + st_s.chunk_bytes) == plan.expected_wire_bytes
+        ss = sock_server.snapshot()
+        print(f"\nsocket upgrade v0→{tag}: quoted "
+              f"{plan.expected_wire_bytes/1024:.1f} KiB, moved exactly that "
+              f"over TCP ({ss.requests} requests on {ss.connections} "
+              f"connection(s), {ss.egress_bytes/1024:.1f} KiB socket egress)")
 
     # -- swarm rollout: wave 1 drains the registry, wave 2 rides peers -------
     tracker = SwarmTracker()

@@ -19,6 +19,10 @@ them into a delivery *system* whose byte counts are real:
   * :mod:`repro.delivery.client`    — :class:`ImageClient`, the single
     client API (``plan_pull``/``execute``/``push``/``upgrade``) every legacy
     entry point now routes through;
+  * :mod:`repro.delivery.net`       — real TCP: ``SocketRegistryServer``
+    (threaded acceptor, enveloped requests, streamed WANT responses, ERROR
+    frames) and ``SocketTransport`` (pooled connections, byte-exact socket
+    accounting) — the row where reported bytes actually crossed a wire;
   * :mod:`repro.delivery.delta`     — ``DeltaSession`` compatibility shim
     (pipelined wire sessions);
   * :mod:`repro.delivery.swarm`     — EdgePier-style peer mode: provisioned
@@ -28,15 +32,22 @@ them into a delivery *system* whose byte counts are real:
 from .cache import CacheStats, TieredChunkCache
 from .client import ImageClient
 from .delta import DeliveryError, DeliveryStats, DeltaSession
+from .net import (SocketRegistryServer, SocketServerStats, SocketTransport,
+                  serve_registry)
 from .plan import PullPlan, SourceLeg, TransferReport
 from .server import RegistryServer, ServerStats
 from .swarm import SwarmNode, SwarmStats, SwarmTracker, swarm_pull
 from .transport import (FetchResult, LocalTransport, PushOutcome,
                         SwarmTransport, Transport, WireTransport)
-from .wire import (FrameType, WireError, decode_chunk_batch, decode_frame,
-                   decode_has, decode_index, decode_missing, decode_recipe,
-                   decode_want, encode_chunk_batch, encode_frame, encode_has,
-                   encode_index, encode_missing, encode_recipe, encode_want)
+from .wire import (ErrorCode, FrameType, Op, WireError, decode_chunk_batch,
+                   decode_error, decode_frame, decode_has, decode_index,
+                   decode_info, decode_missing, decode_receipt, decode_recipe,
+                   decode_request, decode_response, decode_tag_list,
+                   decode_tags_request, decode_want, encode_chunk_batch,
+                   encode_error, encode_frame, encode_has, encode_index,
+                   encode_info, encode_missing, encode_receipt, encode_recipe,
+                   encode_request, encode_response, encode_tag_list,
+                   encode_tags_request, encode_want)
 
 __all__ = [
     "CacheStats", "TieredChunkCache",
@@ -44,10 +55,12 @@ __all__ = [
     "DeliveryError", "DeliveryStats", "DeltaSession",
     "PullPlan", "SourceLeg", "TransferReport",
     "RegistryServer", "ServerStats",
+    "SocketRegistryServer", "SocketServerStats", "SocketTransport",
+    "serve_registry",
     "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
     "Transport", "LocalTransport", "WireTransport", "SwarmTransport",
     "FetchResult", "PushOutcome",
-    "FrameType", "WireError",
+    "FrameType", "Op", "ErrorCode", "WireError",
     "encode_frame", "decode_frame",
     "encode_index", "decode_index",
     "encode_recipe", "decode_recipe",
@@ -55,4 +68,11 @@ __all__ = [
     "encode_want", "decode_want",
     "encode_has", "decode_has",
     "encode_missing", "decode_missing",
+    "encode_tags_request", "decode_tags_request",
+    "encode_tag_list", "decode_tag_list",
+    "encode_error", "decode_error",
+    "encode_receipt", "decode_receipt",
+    "encode_info", "decode_info",
+    "encode_request", "decode_request",
+    "encode_response", "decode_response",
 ]

@@ -159,12 +159,18 @@ class ImageClient:
         if missing:
             sizes = [size_of[fp] for fp in missing]
             # the backend may split each request batch into smaller response
-            # frames (RegistryServer.max_batch_chunks) — quote that exactly
+            # frames (RegistryServer.max_batch_chunks) — quote that exactly.
+            # A transport with extra per-response cost (the socket path's
+            # envelope) quotes its own batches via the hook instead.
+            quote = getattr(transport, "quote_chunk_batches", None)
             sub = getattr(transport, "response_batch_chunks",
                           self.batch_chunks)
             for start in range(0, len(sizes), self.batch_chunks):
-                expected_wire += wire.chunk_batches_wire_bytes(
-                    sizes[start:start + self.batch_chunks], sub)
+                part = sizes[start:start + self.batch_chunks]
+                if quote is not None:
+                    expected_wire += quote(part)
+                else:
+                    expected_wire += wire.chunk_batches_wire_bytes(part, sub)
         return PullPlan(lineage=lineage, tag=tag, transport=transport.name,
                         index=index, recipe=recipe, missing=missing,
                         chunks_total=len(recipe.fps),
@@ -204,11 +210,12 @@ class ImageClient:
             pending: "deque" = deque()
             for start in range(0, len(to_fetch), self.batch_chunks):
                 batch = to_fetch[start:start + self.batch_chunks]
+                # bounded pipeline: never more than pipeline_depth batches
+                # in flight — drain the oldest *before* submitting the next
+                while len(pending) >= self.pipeline_depth:
+                    self._drain(pending.popleft(), received, report)
                 pending.append(pool.submit(transport.fetch_chunks,
                                            plan.lineage, plan.tag, batch))
-                # bounded pipeline: drain the oldest once depth is reached
-                while len(pending) > self.pipeline_depth:
-                    self._drain(pending.popleft(), received, report)
             while pending:
                 self._drain(pending.popleft(), received, report)
 
@@ -277,7 +284,14 @@ class ImageClient:
             report.want_bytes += has_bytes
         else:
             to_send = []
-        payload = {fp: self.store.chunks.get(fp) for fp in to_send}
+        payload: Dict[bytes, bytes] = {}
+        for fp in to_send:
+            try:
+                payload[fp] = self.store.chunks.get(fp)
+            except KeyError:
+                raise DeliveryError(
+                    f"push {lineage}:{tag}: candidate chunk "
+                    f"{fp.hex()[:12]} is not in the local store") from None
         outcome = transport.push(lineage, tag, recipe, payload,
                                  parent_version=parent_version,
                                  claimed_root=local_idx.root,

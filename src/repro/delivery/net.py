@@ -1,0 +1,616 @@
+"""Real TCP delivery — the bytes this module reports crossed a socket.
+
+Until now every transport "wire" byte crossed a Python function call; this
+module is the seam the ROADMAP left open ("real network transports").  Two
+pieces:
+
+  * :class:`SocketRegistryServer` — a threaded TCP acceptor over the
+    existing thread-safe :class:`~repro.delivery.server.RegistryServer`
+    handlers.  One thread per connection; each request is a length-prefixed
+    envelope (``wire.encode_request``: op, lineage, tag, body frames) and
+    each response a status header plus length-prefixed frames.  WANT
+    answers are **streamed**: the response header commits the frame count
+    (known from the want length alone), then each CHUNK_BATCH is written as
+    it is built, so the server's store reads overlap the client's decode of
+    earlier batches.  Failures cross the wire as ERROR frames (protocol
+    data), never as a silently dropped connection — except a failure *after*
+    response streaming started, where the only honest signal left is a
+    close (the client surfaces it as ``DeliveryError``).
+  * :class:`SocketTransport` — a conforming
+    :class:`~repro.delivery.transport.Transport` over real TCP.  A small
+    connection pool lets ``ImageClient.execute``'s pipelined batches run
+    concurrent WANT exchanges that genuinely overlap on the network.  Every
+    byte it reports is a socket byte: request envelopes are accounted as
+    control/want traffic, response envelopes ride in the matching byte
+    category, and ``quote_chunk_batches`` lets ``plan_pull`` quote the full
+    socket cost of a pull — envelope overhead included — to the byte.
+
+Server-side errors re-raise client-side as the matching exception
+(``DeliveryError`` / ``PushRejected`` / ``WireError``); transport-level
+failures (connection refused/reset, truncated stream, timeouts) surface as
+``DeliveryError`` so a mid-pull server death fails the pull cleanly before
+anything is committed to the local store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import threading
+from typing import BinaryIO, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cdmt import CDMT, CDMTParams
+from repro.core.errors import DeliveryError
+from repro.core.registry import PushRejected, Registry
+from repro.core.store import Recipe
+
+from . import wire
+from .plan import SourceLeg
+from .server import RegistryServer
+from .transport import REGISTRY_SOURCE, FetchResult, PushOutcome
+
+__all__ = ["SocketRegistryServer", "SocketServerStats", "SocketTransport"]
+
+DEFAULT_TIMEOUT = 30.0
+
+
+class _ConnectionClosed(Exception):
+    """The peer closed (or the stream truncated) mid-exchange."""
+
+
+def _read_exact(f: BinaryIO, n: int) -> bytes:
+    data = f.read(n)
+    if data is None or len(data) < n:
+        raise _ConnectionClosed(f"stream closed (wanted {n} bytes, got "
+                                f"{0 if not data else len(data)})")
+    return data
+
+
+def _read_uvarint(f: BinaryIO) -> Tuple[int, int]:
+    """``(value, bytes_consumed)`` — LEB128 off a buffered stream."""
+    result = 0
+    shift = 0
+    for i in range(10):
+        b = _read_exact(f, 1)[0]
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, i + 1
+        shift += 7
+    raise wire.WireError("uvarint too long (>10 bytes)")
+
+
+def _read_str(f: BinaryIO) -> Tuple[str, int]:
+    n, nb = _read_uvarint(f)
+    if n > wire.MAX_ROUTING_BYTES:
+        raise wire.WireError(f"routing string of {n} bytes exceeds "
+                             f"{wire.MAX_ROUTING_BYTES}")
+    return _read_exact(f, n).decode("utf-8"), nb + n
+
+
+def _read_frame(f: BinaryIO) -> Tuple[bytes, int]:
+    """One length-prefixed frame off the stream: ``(frame, bytes_read)``.
+    The length is sanity-bounded before allocation — a corrupt (or hostile)
+    prefix must not make this endpoint buffer an arbitrary amount."""
+    size, nb = _read_uvarint(f)
+    if size > wire.MAX_FRAME_BYTES:
+        raise wire.WireError(f"frame of {size} bytes exceeds "
+                             f"{wire.MAX_FRAME_BYTES}")
+    return _read_exact(f, size), nb + size
+
+
+# ---------------------------------------------------------------- server
+
+
+@dataclasses.dataclass
+class SocketServerStats:
+    """Socket-level accounting (the frame-level meters live on the wrapped
+    :class:`~repro.delivery.server.ServerStats`; the difference between the
+    two is exactly the envelope overhead)."""
+    connections: int = 0
+    requests: int = 0
+    errors: int = 0                # requests answered with an ERROR frame
+    ingress_bytes: int = 0         # request envelopes read off sockets
+    egress_bytes: int = 0          # response envelopes written to sockets
+
+    def snapshot(self) -> "SocketServerStats":
+        return dataclasses.replace(self)
+
+
+class SocketRegistryServer:
+    """Threaded TCP front door over a :class:`RegistryServer`.
+
+    ``port=0`` (the default) binds an ephemeral port; read ``address`` after
+    construction.  The acceptor starts immediately; use as a context manager
+    or call :meth:`stop` to shut down (close the listener, then every live
+    connection).
+    """
+
+    def __init__(self, server: RegistryServer, host: str = "127.0.0.1",
+                 port: int = 0, backlog: int = 64,
+                 io_timeout: float = DEFAULT_TIMEOUT):
+        self.server = server
+        # mid-request read budget: a connection may idle indefinitely
+        # *between* requests (pooled client conns do), but once a request
+        # header byte arrives the rest must follow within this window, so a
+        # stalled or hostile client cannot pin a connection thread forever
+        self.io_timeout = io_timeout
+        self.stats = SocketServerStats()
+        self._stats_lock = threading.Lock()
+        self._closing = False
+        self._conns: Dict[int, socket.socket] = {}
+        self._threads: set = set()
+        self._conns_lock = threading.Lock()
+        self._listener = socket.create_server((host, port), backlog=backlog)
+        self.address: Tuple[str, int] = self._listener.getsockname()[:2]
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          name="socket-registry-accept",
+                                          daemon=True)
+        self._acceptor.start()
+
+    # ------------------------------------------------------------ lifecycle
+
+    def __enter__(self) -> "SocketRegistryServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def stop(self) -> None:
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns.values())
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        self._acceptor.join(timeout=5)
+        with self._conns_lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout=5)
+
+    def snapshot(self) -> SocketServerStats:
+        with self._stats_lock:
+            return self.stats.snapshot()
+
+    # ------------------------------------------------------------- acceptor
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return                       # listener closed: shutting down
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns[id(conn)] = conn
+            with self._stats_lock:
+                self.stats.connections += 1
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 name="socket-registry-conn", daemon=True)
+            with self._conns_lock:
+                self._threads.add(t)
+            t.start()
+
+    # ----------------------------------------------------------- connection
+
+    def _serve(self, conn: socket.socket) -> None:
+        rfile = conn.makefile("rb")
+        try:
+            while not self._closing:
+                req = self._read_request(conn, rfile)
+                if req is None:
+                    return                   # clean EOF between requests
+                op, lineage, tag, frames, req_bytes = req
+                with self._stats_lock:
+                    self.stats.requests += 1
+                    self.stats.ingress_bytes += req_bytes
+                self._answer(conn, op, lineage, tag, frames)
+        except (_ConnectionClosed, OSError):
+            return                           # peer vanished / we are closing
+        except wire.WireError as e:
+            # malformed request envelope: the stream offset is unknowable,
+            # so answer best-effort with an ERROR frame and drop the conn
+            with self._stats_lock:
+                self.stats.errors += 1
+            try:
+                self._send(conn, wire.encode_response(
+                    wire.STATUS_ERROR,
+                    [wire.encode_error(wire.ErrorCode.WIRE, str(e))]))
+            except OSError:
+                pass
+            return
+        finally:
+            try:
+                rfile.close()
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._conns_lock:
+                self._conns.pop(id(conn), None)
+                self._threads.discard(threading.current_thread())
+
+    def _read_request(self, conn: socket.socket, rfile: BinaryIO
+                      ) -> Optional[Tuple[wire.Op, str, str,
+                                          List[bytes], int]]:
+        """One request envelope off the stream, or None on EOF at a request
+        boundary (the client hung up cleanly).  The wait for the *first*
+        byte is unbounded (pooled client connections idle between
+        requests); once a request starts, the rest must arrive within
+        ``io_timeout`` or the connection is dropped."""
+        first = rfile.read(1)
+        if not first:
+            return None
+        conn.settimeout(self.io_timeout)     # a request is now in flight
+        try:
+            hdr = first + _read_exact(rfile, 3)
+            nbytes = 4
+            op = wire.check_request_header(hdr)
+            lineage, nb = _read_str(rfile)
+            nbytes += nb
+            tag, nb = _read_str(rfile)
+            nbytes += nb
+            n_frames, nb = _read_uvarint(rfile)
+            nbytes += nb
+            if n_frames > wire.MAX_ENVELOPE_FRAMES:
+                raise wire.WireError(f"request carries {n_frames} frames, "
+                                     f"limit {wire.MAX_ENVELOPE_FRAMES}")
+            frames: List[bytes] = []
+            for _ in range(n_frames):
+                f, nb = _read_frame(rfile)
+                nbytes += nb
+                frames.append(f)
+        finally:
+            conn.settimeout(None)            # back to idle between requests
+        return op, lineage, tag, frames, nbytes
+
+    def _send(self, conn: socket.socket, data: bytes) -> None:
+        conn.sendall(data)
+        with self._stats_lock:
+            self.stats.egress_bytes += len(data)
+
+    def _answer(self, conn: socket.socket, op: wire.Op, lineage: str,
+                tag: str, frames: List[bytes]) -> None:
+        streamed = False
+        try:
+            if op is wire.Op.WANT:
+                self._expect_frames(op, frames, 1)
+                n, frame_iter = self.server.want_plan(frames[0])
+                self._send(conn, wire.encode_response_header(
+                    wire.STATUS_OK, n))
+                streamed = True              # header out: count is committed
+                for f in frame_iter:
+                    self._send(conn, wire.encode_uvarint(len(f)) + f)
+                return
+            out = self._dispatch(op, lineage, tag, frames)
+        except (_ConnectionClosed, OSError):
+            raise
+        except Exception as e:
+            if streamed:
+                # the frame count is already on the wire; any "error frame"
+                # now would be decoded as chunk data.  Close: the client
+                # sees a truncated stream and raises DeliveryError.
+                raise _ConnectionClosed(str(e)) from e
+            code = (wire.ErrorCode.PUSH_REJECTED
+                    if isinstance(e, PushRejected)
+                    else wire.ErrorCode.WIRE if isinstance(e, wire.WireError)
+                    else wire.ErrorCode.DELIVERY
+                    if isinstance(e, DeliveryError)
+                    else wire.ErrorCode.INTERNAL)
+            msg = str(e) or type(e).__name__
+            with self._stats_lock:
+                self.stats.errors += 1
+            self._send(conn, wire.encode_response(
+                wire.STATUS_ERROR, [wire.encode_error(code, msg)]))
+            return
+        self._send(conn, wire.encode_response(wire.STATUS_OK, out))
+
+    @staticmethod
+    def _expect_frames(op: wire.Op, frames: Sequence[bytes],
+                       n: int) -> None:
+        if len(frames) != n:
+            raise wire.WireError(
+                f"{op.name} request carries {len(frames)} body frame(s), "
+                f"expected {n}")
+
+    def _dispatch(self, op: wire.Op, lineage: str, tag: str,
+                  frames: List[bytes]) -> List[bytes]:
+        if op is wire.Op.INDEX:
+            self._expect_frames(op, frames, 0)
+            return [self.server.get_index(lineage, tag)]
+        if op is wire.Op.LATEST_INDEX:
+            self._expect_frames(op, frames, 0)
+            frame = self.server.get_latest_index(lineage)
+            return [] if frame is None else [frame]
+        if op is wire.Op.RECIPE:
+            self._expect_frames(op, frames, 0)
+            return [self.server.get_recipe(lineage, tag)]
+        if op is wire.Op.HAS:
+            self._expect_frames(op, frames, 1)
+            return [self.server.handle_has(frames[0])]
+        if op is wire.Op.TAGS:
+            self._expect_frames(op, frames, 1)
+            return [self.server.handle_tags(frames[0])]
+        if op is wire.Op.INFO:
+            self._expect_frames(op, frames, 0)
+            return [wire.encode_info(self.server.max_batch_chunks)]
+        if op is wire.Op.PUSH:
+            if len(frames) < 2:
+                raise wire.WireError(
+                    f"PUSH request carries {len(frames)} body frame(s), "
+                    f"expected PUSH_HDR + RECIPE + CHUNK_BATCH*")
+            receipt = self.server.handle_push(frames[0], frames[1],
+                                              frames[2:])
+            return [wire.encode_receipt(receipt)]
+        raise wire.WireError(f"unhandled request op {op!r}")
+
+
+# -------------------------------------------------------------- transport
+
+
+class _Conn:
+    """One pooled client connection: socket + buffered reader."""
+
+    def __init__(self, address: Tuple[str, int], timeout: float):
+        self.sock = socket.create_connection(address, timeout=timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.rfile = self.sock.makefile("rb")
+
+    def send(self, data: bytes) -> None:
+        self.sock.sendall(data)
+
+    def close(self) -> None:
+        try:
+            self.rfile.close()
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class SocketTransport:
+    """:class:`Transport` over real TCP to a :class:`SocketRegistryServer`.
+
+    Byte accounting is end-to-end socket bytes: ``get_index`` /
+    ``get_recipe`` / ``has_chunks`` report request + response envelopes in
+    full; ``fetch_chunks`` records the WANT request envelope as
+    ``want_bytes`` and the streamed response envelope as ``chunk_bytes`` on
+    its source leg, matching the wire transport's split so reports stay
+    comparable across transports.  Construction performs one INFO exchange
+    to learn the server's response batch split, which makes
+    ``quote_chunk_batches`` (and therefore ``plan_pull``) exact.
+    """
+
+    name = "socket"
+    verifies_payloads = True       # decode_chunk_batch hashes every payload
+
+    def __init__(self, address: Tuple[str, int], batch_chunks: int = 64,
+                 timeout: float = DEFAULT_TIMEOUT, pool_size: int = 8):
+        self.address = (address[0], int(address[1]))
+        self.batch_chunks = max(1, batch_chunks)
+        self.timeout = timeout
+        self.pool_size = pool_size
+        self._pool: List[_Conn] = []
+        self._pool_lock = threading.Lock()
+        self._closed = False
+        # one control exchange: the server's response split, so pull plans
+        # quote the streamed CHUNK_BATCH framing (and its envelope) exactly
+        _, frames, _ = self._exchange(wire.Op.INFO, "", "")
+        self.response_batch_chunks = wire.decode_info(frames[0])
+
+    # ------------------------------------------------------------ lifecycle
+
+    def close(self) -> None:
+        self._closed = True
+        with self._pool_lock:
+            conns, self._pool = self._pool, []
+        for c in conns:
+            c.close()
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------------- pool
+
+    def _checkout(self) -> _Conn:
+        if self._closed:
+            raise DeliveryError("socket transport is closed")
+        with self._pool_lock:
+            if self._pool:
+                return self._pool.pop()
+        try:
+            return _Conn(self.address, self.timeout)
+        except OSError as e:
+            raise DeliveryError(
+                f"socket transport: cannot connect to "
+                f"{self.address[0]}:{self.address[1]} ({e})") from e
+
+    def _checkin(self, conn: _Conn) -> None:
+        with self._pool_lock:
+            if not self._closed and len(self._pool) < self.pool_size:
+                self._pool.append(conn)
+                return
+        conn.close()
+
+    # ------------------------------------------------------------- exchange
+
+    def _exchange(self, op: wire.Op, lineage: str, tag: str,
+                  frames: Sequence[bytes] = ()
+                  ) -> Tuple[int, List[bytes], int]:
+        """One request/response round-trip.  Returns ``(request_bytes,
+        response_frames, response_bytes)``; server-side errors re-raise as
+        the matching exception, transport failures as ``DeliveryError``."""
+        req = wire.encode_request(op, lineage, tag, frames)
+        conn = self._checkout()
+        try:
+            conn.send(req)
+            status, n, resp_bytes = self._read_header(conn)
+            out: List[bytes] = []
+            for _ in range(n):
+                f, nb = _read_frame(conn.rfile)
+                resp_bytes += nb
+                out.append(f)
+        except (_ConnectionClosed, OSError) as e:
+            conn.close()
+            raise DeliveryError(
+                f"socket transport: {op.name} to {self.address[0]}:"
+                f"{self.address[1]}: connection lost ({e})") from e
+        except wire.WireError:
+            conn.close()                     # stream state unknown: drop it
+            raise
+        self._checkin(conn)
+        if status == wire.STATUS_ERROR:
+            self._raise_remote(out)
+        return len(req), out, resp_bytes
+
+    @staticmethod
+    def _read_header(conn: _Conn) -> Tuple[int, int, int]:
+        status = wire.check_response_header(_read_exact(conn.rfile, 4))
+        n, nb = _read_uvarint(conn.rfile)
+        return status, n, 4 + nb
+
+    @staticmethod
+    def _raise_remote(frames: Sequence[bytes]) -> None:
+        if not frames:
+            raise DeliveryError("remote error with no ERROR frame")
+        code, msg = wire.decode_error(frames[0])
+        if code is wire.ErrorCode.PUSH_REJECTED:
+            raise PushRejected(msg)
+        if code is wire.ErrorCode.WIRE:
+            raise wire.WireError(msg)
+        raise DeliveryError(msg)
+
+    # ------------------------------------------------------------ transport
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        req_b, frames, resp_b = self._exchange(wire.Op.INDEX, lineage, tag)
+        return wire.decode_index(frames[0]), req_b + resp_b
+
+    def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        req_b, frames, resp_b = self._exchange(wire.Op.LATEST_INDEX,
+                                               lineage, "")
+        if not frames:
+            return None, req_b + resp_b
+        return wire.decode_index(frames[0]), req_b + resp_b
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        req_b, frames, resp_b = self._exchange(wire.Op.RECIPE, lineage, tag)
+        return wire.decode_recipe(frames[0]), req_b + resp_b
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        """One WANT exchange; response frames are decoded *as they arrive*,
+        so with pipelined batches (several pooled connections in flight) the
+        hash-verify of one batch overlaps the socket reads of the next."""
+        want = wire.encode_want(fps)
+        req = wire.encode_request(wire.Op.WANT, lineage, tag, [want])
+        conn = self._checkout()
+        chunks: Dict[bytes, bytes] = {}
+        error_frames: Optional[List[bytes]] = None
+        try:
+            conn.send(req)
+            status, n, resp_bytes = self._read_header(conn)
+            if status == wire.STATUS_ERROR:
+                error_frames = []
+            for _ in range(n):
+                f, nb = _read_frame(conn.rfile)
+                resp_bytes += nb
+                if error_frames is not None:
+                    error_frames.append(f)
+                else:
+                    chunks.update(wire.decode_chunk_batch(f))
+        except (_ConnectionClosed, OSError) as e:
+            conn.close()
+            raise DeliveryError(
+                f"socket transport: WANT to {self.address[0]}:"
+                f"{self.address[1]}: connection lost mid-stream ({e})"
+            ) from e
+        except wire.WireError:
+            conn.close()
+            raise
+        self._checkin(conn)
+        if error_frames is not None:
+            self._raise_remote(error_frames)
+        leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
+                        chunk_bytes=resp_bytes, want_bytes=len(req),
+                        rounds=1)
+        return FetchResult(chunks=chunks, legs=[leg])
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], *,
+             parent_version: Optional[int] = None,
+             claimed_root: Optional[bytes] = None,
+             claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        hdr = wire.encode_push_header(wire.PushHeader(
+            lineage=lineage, tag=tag, root=claimed_root,
+            parent_version=parent_version, params=claimed_params))
+        recipe_frame = wire.encode_recipe(recipe)
+        chunk_frames: List[bytes] = []
+        fps = list(chunks)
+        for start in range(0, len(fps), self.batch_chunks):
+            part = {fp: chunks[fp]
+                    for fp in fps[start:start + self.batch_chunks]}
+            chunk_frames.append(wire.encode_chunk_batch(part))
+        req_b, frames, resp_b = self._exchange(
+            wire.Op.PUSH, lineage, tag, [hdr, recipe_frame] + chunk_frames)
+        receipt = wire.decode_receipt(frames[0])
+        # split the socket bytes by category: each body frame owns its
+        # envelope length prefix; the fixed header, PUSH_HDR share, and the
+        # receipt ride in header_bytes — the three sum to every socket byte
+        recipe_share = wire.uvarint_len(len(recipe_frame)) + len(recipe_frame)
+        chunk_share = sum(wire.uvarint_len(len(f)) + len(f)
+                          for f in chunk_frames)
+        return PushOutcome(
+            receipt=receipt,
+            header_bytes=req_b - recipe_share - chunk_share + resp_b,
+            recipe_bytes=recipe_share,
+            chunk_bytes=chunk_share,
+            rounds=1 if chunks else 0)
+
+    def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        req_b, frames, resp_b = self._exchange(wire.Op.HAS, "", "",
+                                               [wire.encode_has(fps)])
+        return wire.decode_missing(frames[0]), req_b + resp_b
+
+    def tags(self, lineage: str) -> List[str]:
+        _, frames, _ = self._exchange(wire.Op.TAGS, lineage, "",
+                                      [wire.encode_tags_request(lineage)])
+        return wire.decode_tag_list(frames[0])
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        pass
+
+    # -------------------------------------------------------------- quoting
+
+    def quote_chunk_batches(self, sizes: Sequence[int]) -> int:
+        """Exact socket bytes of the streamed response to one WANT of
+        payloads ``sizes`` — CHUNK_BATCH frames at the server's split, plus
+        the response envelope around them.  ``plan_pull`` calls this per
+        request batch, making a socket plan's quote byte-exact."""
+        lens = wire.chunk_batch_frame_lens(sizes, self.response_batch_chunks)
+        return wire.response_envelope_bytes(lens)
+
+
+def serve_registry(registry: Registry, host: str = "127.0.0.1",
+                   port: int = 0, **server_kw) -> SocketRegistryServer:
+    """Convenience: wrap a bare :class:`Registry` in a frame-level
+    :class:`RegistryServer` and put a TCP front door on it."""
+    return SocketRegistryServer(RegistryServer(registry, **server_kw),
+                                host=host, port=port)

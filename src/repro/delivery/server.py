@@ -46,6 +46,7 @@ class ServerStats:
     recipe_requests: int = 0
     want_requests: int = 0
     has_requests: int = 0          # HAS presence queries answered
+    tags_requests: int = 0         # TAGS listing queries answered
     chunks_served: int = 0
     chunk_bytes_served: int = 0
     store_reads: int = 0           # chunk reads that reached cache/store
@@ -73,7 +74,8 @@ class RegistryServer:
     def __init__(self, registry: Registry,
                  cache_bytes: int = DEFAULT_CAPACITY,
                  max_batch_chunks: int = 64,
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 warm_scan_limit: int = 50_000):
         self.registry = registry
         self.cache = TieredChunkCache(registry.store.chunks, cache_bytes)
         self.max_batch_chunks = max_batch_chunks
@@ -83,22 +85,33 @@ class RegistryServer:
         self._inflight: Dict[bytes, _InFlight] = {}
         self._inflight_lock = threading.Lock()
         if warm_start and registry.store.chunks.directory is not None:
-            self.stats.warmed_chunks = self._warm_from_store()
+            self.stats.warmed_chunks = self._warm_from_store(warm_scan_limit)
 
-    def _warm_from_store(self) -> int:
+    def _warm_from_store(self, scan_limit: int) -> int:
         """Pre-load the memory tier from the recovered chunk index so a
         restarted registry serves its first wave from RAM instead of cold
         (ROADMAP: "registry restart under load").  Most recently appended
         chunks first — the heads of each lineage are what pullers hit —
-        until the cache's capacity budget is full."""
+        until the cache's capacity budget is full.
+
+        A chunk too large for the remaining budget is *skipped*, not a stop
+        condition: smaller (older) chunks behind it may still fit, so one
+        big recent chunk must not leave the rest of the budget cold.  The
+        index sizes are known up-front, so a skip costs no chunk read; the
+        walk is bounded by ``scan_limit`` entries so startup stays O(bounded)
+        even over a huge store whose budget filled early."""
         store = self.registry.store.chunks
         entries = sorted(store.index_entries(),
                          key=lambda e: e[1], reverse=True)  # offset desc
         warmed = 0
-        for fp, _off, _size in entries:
-            if not self.cache.warm(fp, store.get(fp)):
+        for fp, _off, size in entries[:max(0, scan_limit)]:
+            free = self.cache.capacity_bytes - self.cache.stats.resident_bytes
+            if free <= 0:
                 break
-            warmed += 1
+            if size > free:
+                continue                   # skip-and-continue, no read done
+            if self.cache.warm(fp, store.get(fp)):
+                warmed += 1
         return warmed
 
     # ------------------------------------------------------------ index/recipe
@@ -144,11 +157,26 @@ class RegistryServer:
         which fps arrived); the session layer decides whether absence is an
         error.
         """
+        _, frames = self.want_plan(want_frame)
+        return list(frames)
+
+    def want_plan(self, want_frame: bytes
+                  ) -> Tuple[int, Iterable[bytes]]:
+        """``(n_frames, frame iterator)`` for one WANT — the streaming form
+        of :meth:`handle_want`.  The frame count is known before a single
+        chunk is read (it depends only on the want length and the batch
+        split), so a socket server can commit a response header and then
+        write each CHUNK_BATCH as it is built, overlapping store reads with
+        the client's decode of earlier batches."""
         fps = wire.decode_want(want_frame)
         with self._stats_lock:
             self.stats.want_requests += 1
             self.stats.ingress_bytes += len(want_frame)
-        frames: List[bytes] = []
+        n_frames = max(1, -(-len(fps) // self.max_batch_chunks))
+        return n_frames, self._want_frames(fps)
+
+    def _want_frames(self, fps: Sequence[bytes]) -> Iterable[bytes]:
+        produced = False
         for start in range(0, len(fps), self.max_batch_chunks):
             batch: Dict[bytes, bytes] = {}
             for fp in fps[start:start + self.max_batch_chunks]:
@@ -156,17 +184,17 @@ class RegistryServer:
                 if data is not None:
                     batch[fp] = data
             frame = wire.encode_chunk_batch(batch)
-            frames.append(frame)
+            produced = True
             with self._stats_lock:
                 self.stats.egress_bytes += len(frame)
                 self.stats.chunks_served += len(batch)
                 self.stats.chunk_bytes_served += sum(len(v) for v in batch.values())
-        if not frames:                       # empty WANT still gets an answer
+            yield frame
+        if not produced:                     # empty WANT still gets an answer
             frame = wire.encode_chunk_batch({})
             with self._stats_lock:
                 self.stats.egress_bytes += len(frame)
-            frames.append(frame)
-        return frames
+            yield frame
 
     def handle_has(self, has_frame: bytes) -> bytes:
         """Answer a HAS presence query with a MISSING frame — the fps the
@@ -179,6 +207,21 @@ class RegistryServer:
         with self._stats_lock:
             self.stats.has_requests += 1
             self.stats.ingress_bytes += len(has_frame)
+            self.stats.egress_bytes += len(resp)
+        return resp
+
+    def handle_tags(self, tags_frame: bytes) -> bytes:
+        """Answer a TAGS listing query with a TAG_LIST frame.
+
+        Tag names are control-plane *protocol data*: routing them through a
+        frame (instead of a Python attribute reach into the registry) keeps
+        them metered and makes the query answerable over a socket."""
+        lineage = wire.decode_tags_request(tags_frame)
+        with self._registry_lock:
+            resp = wire.encode_tag_list(self.registry.tags(lineage))
+        with self._stats_lock:
+            self.stats.tags_requests += 1
+            self.stats.ingress_bytes += len(tags_frame)
             self.stats.egress_bytes += len(resp)
         return resp
 

@@ -57,6 +57,7 @@ class SwarmNode:
         self.served_bytes = 0
         self.served_chunks = 0
         self._lock = threading.Lock()
+        self._trackers: List["SwarmTracker"] = []   # who lists this node
 
     def kill(self) -> None:
         """Take the node offline: subsequent ``serve_want`` calls raise, so
@@ -64,7 +65,19 @@ class SwarmNode:
         self.alive = False
 
     def revive(self) -> None:
+        """Come back online and re-register: every tracker that benched this
+        node for repeated failures clears the backoff, so the node serves
+        again without waiting to complete a fresh pull."""
         self.alive = True
+        with self._lock:
+            trackers = list(self._trackers)
+        for t in trackers:
+            t.revive(self)
+
+    def _registered_with(self, tracker: "SwarmTracker") -> None:
+        with self._lock:
+            if tracker not in self._trackers:
+                self._trackers.append(tracker)
 
     # ------------------------------------------------------------ peer server
 
@@ -98,10 +111,21 @@ class SwarmTracker:
     liveness), but each tier orders currently-live nodes first so corpses
     never crowd live providers out of the ``limit`` slots; a returned
     provider that still fails is absorbed by the transport as a failover.
+
+    **Health**: the transport reports each ``serve_want`` outcome back
+    (:meth:`report_failure` / :meth:`report_success`).  A provider that
+    fails ``failure_threshold`` times *consecutively* is benched — excluded
+    from lookups entirely — so a dead node stops costing one failed round
+    per batch forever.  Any success clears the streak; a benched node
+    returns via :meth:`revive` (``SwarmNode.revive`` calls it on every
+    tracker the node registered with) or by re-registering after a fresh
+    pull.
     """
 
-    def __init__(self):
+    def __init__(self, failure_threshold: int = 3):
+        self.failure_threshold = max(1, failure_threshold)
         self._providers: Dict[Tuple[str, str], List[SwarmNode]] = {}
+        self._failures: Dict[int, int] = {}   # id(node) -> consecutive fails
         self._lock = threading.Lock()
         self._rr = itertools.count()
 
@@ -110,6 +134,34 @@ class SwarmTracker:
             nodes = self._providers.setdefault((lineage, tag), [])
             if node not in nodes:
                 nodes.append(node)
+            self._failures.pop(id(node), None)   # a fresh pull proves health
+        if hasattr(node, "_registered_with"):
+            node._registered_with(self)
+
+    # ------------------------------------------------------------- health
+
+    def report_failure(self, node: SwarmNode) -> None:
+        with self._lock:
+            self._failures[id(node)] = self._failures.get(id(node), 0) + 1
+
+    def report_success(self, node: SwarmNode) -> None:
+        with self._lock:
+            self._failures.pop(id(node), None)
+
+    def revive(self, node: SwarmNode) -> None:
+        """Clear a node's backoff so existing registrations serve again."""
+        with self._lock:
+            self._failures.pop(id(node), None)
+
+    def is_benched(self, node: SwarmNode) -> bool:
+        with self._lock:
+            return self._failures.get(id(node), 0) >= self.failure_threshold
+
+    def consecutive_failures(self, node: SwarmNode) -> int:
+        with self._lock:
+            return self._failures.get(id(node), 0)
+
+    # ------------------------------------------------------------- lookups
 
     def providers(self, lineage: str, tag: str,
                   exclude: Optional[SwarmNode] = None,
@@ -117,15 +169,22 @@ class SwarmTracker:
         """Up to ``limit`` providers — exact-tag holders first, same-lineage
         holders after, each tier rotated round-robin so concurrent pullers
         spread load across the swarm, and live nodes ahead of dead ones
-        within each tier."""
+        within each tier.  Benched providers (too many consecutive failures)
+        are excluded outright."""
         with self._lock:
+            thresh = self.failure_threshold
+
+            def ok(n: SwarmNode) -> bool:
+                return (n is not exclude
+                        and self._failures.get(id(n), 0) < thresh)
+
             exact = [n for n in self._providers.get((lineage, tag), ())
-                     if n is not exclude]
+                     if ok(n)]
             rest: List[SwarmNode] = []
             for (lin, t), nodes in self._providers.items():
                 if lin == lineage and t != tag:
                     rest.extend(n for n in nodes
-                                if n is not exclude and n not in exact
+                                if ok(n) and n not in exact
                                 and n not in rest)
             rot = next(self._rr)
         out: List[SwarmNode] = []

@@ -245,9 +245,11 @@ class WireTransport:
         return wire.decode_missing(resp), len(req) + len(resp)
 
     def tags(self, lineage: str) -> List[str]:
-        # control-plane query (tag names only); served from the registry
-        # index, not the data plane
-        return self.server.registry.tags(lineage)
+        # control-plane query, but still protocol data: a TAGS frame in, a
+        # TAG_LIST frame back, both metered by the server — the same frames
+        # the socket path sends, so no byte silently skips the meters
+        resp = self.server.handle_tags(wire.encode_tags_request(lineage))
+        return wire.decode_tag_list(resp)
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
@@ -270,12 +272,20 @@ class SwarmTransport:
     name = "swarm"
     verifies_payloads = True
 
-    def __init__(self, node, tracker, server: RegistryServer,
+    def __init__(self, node, tracker, server,
                  max_peers: int = 4, batch_chunks: int = 64):
         self.node = node
         self.tracker = tracker
-        self.registry_transport = WireTransport(server,
-                                                batch_chunks=batch_chunks)
+        # `server` is either a RegistryServer (historical form, wrapped in a
+        # WireTransport) or any ready registry-facing Transport — e.g. a
+        # SocketTransport, putting the swarm's fallback on a real socket.
+        # `batch_chunks` only shapes the wrapper built here; a ready
+        # transport keeps the framing it was constructed with.
+        if isinstance(server, RegistryServer):
+            self.registry_transport = WireTransport(
+                server, batch_chunks=batch_chunks)
+        else:
+            self.registry_transport = server
         self.max_peers = max_peers
 
     # registry-delegated control plane --------------------------------------
@@ -319,9 +329,13 @@ class SwarmTransport:
             try:
                 frame = peer.serve_want(want)
             except DeliveryError:
-                # dead/unreachable peer: failover to the next provider
+                # dead/unreachable peer: failover to the next provider, and
+                # tell the tracker — enough consecutive failures bench the
+                # provider so later batches stop paying a failed round
                 leg.failures += 1
+                self.tracker.report_failure(peer)
                 continue
+            self.tracker.report_success(peer)
             # the frame crossed the wire either way — empty replies count too
             leg.chunk_bytes += len(frame)
             got = wire.decode_chunk_batch(frame)

@@ -18,9 +18,28 @@ frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
   ``HAS``          presence query: which of these fps does the server hold?
   ``MISSING``      the reply — fps the server does NOT hold (a push then
                    ships exactly these, enabling cross-lineage dedup).
+  ``TAGS``         tag-listing query for one lineage (control plane — tag
+                   names are protocol data, not an attribute reach).
+  ``TAG_LIST``     the reply: the lineage's tag names in version order.
+  ``ERROR``        protocol-level failure: an error code plus message, so a
+                   remote server's rejection crosses the wire as data and is
+                   re-raised client-side as the matching exception.
+  ``RECEIPT``      a serialized :class:`~repro.core.registry.PushReceipt` —
+                   what a socket push gets back instead of a Python object.
+  ``INFO``         server parameters a client needs to quote costs exactly
+                   (today: the server's response batch split).
 
 All decoders raise :class:`WireError` on truncation, bad magic, trailing
 garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
+
+For real sockets, frames travel inside length-prefixed **envelopes** (see
+``encode_request`` / ``encode_response_header``): a request names an
+:class:`Op` plus lineage/tag routing strings and carries zero or more body
+frames; a response is a status byte plus a frame count, then the frames —
+which lets a server *stream* a multi-frame WANT answer while the client
+decodes batches as they arrive.  Envelope overhead is exactly computable
+(``request_envelope_bytes`` / ``response_envelope_bytes``), so a pull plan
+can quote socket bytes to the byte before opening a connection.
 """
 
 from __future__ import annotations
@@ -50,6 +69,31 @@ class FrameType(enum.IntEnum):
     PUSH_HDR = 5
     HAS = 6
     MISSING = 7
+    TAGS = 8
+    TAG_LIST = 9
+    ERROR = 10
+    RECEIPT = 11
+    INFO = 12
+
+
+class Op(enum.IntEnum):
+    """Request operations a delivery endpoint answers (socket envelope)."""
+    INDEX = 1          # -> INDEX frame
+    LATEST_INDEX = 2   # -> INDEX frame, or zero frames for a new lineage
+    RECIPE = 3         # -> RECIPE frame
+    WANT = 4           # WANT frame -> streamed CHUNK_BATCH frames
+    HAS = 5            # HAS frame -> MISSING frame
+    PUSH = 6           # PUSH_HDR + RECIPE + CHUNK_BATCH* -> RECEIPT frame
+    TAGS = 7           # TAGS frame -> TAG_LIST frame
+    INFO = 8           # -> INFO frame
+
+
+class ErrorCode(enum.IntEnum):
+    """What kind of exception an ERROR frame re-raises client-side."""
+    DELIVERY = 1       # repro.core.errors.DeliveryError
+    PUSH_REJECTED = 2  # repro.core.registry.PushRejected
+    WIRE = 3           # WireError (malformed request reached the server)
+    INTERNAL = 4       # anything else — surfaced as DeliveryError
 
 
 # ----------------------------------------------------------------- varints
@@ -405,6 +449,251 @@ def decode_push_header(buf: bytes) -> PushHeader:
                       root=root, parent_version=parent, params=params)
 
 
+# ------------------------------------------------------- TAGS / TAG_LIST
+
+def _encode_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    return encode_uvarint(len(b)) + b
+
+
+def _decode_str(payload: bytes, off: int, what: str) -> Tuple[str, int]:
+    n, off = decode_uvarint(payload, off)
+    raw, off = _take(payload, off, n, what)
+    return raw.decode("utf-8"), off
+
+
+def encode_tags_request(lineage: str) -> bytes:
+    return encode_frame(FrameType.TAGS, _encode_str(lineage))
+
+
+def decode_tags_request(buf: bytes) -> str:
+    payload = _decode_single(buf, FrameType.TAGS)
+    lineage, off = _decode_str(payload, 0, "tags lineage")
+    if off != len(payload):
+        raise WireError("trailing bytes in TAGS payload")
+    return lineage
+
+
+def encode_tag_list(tags: Sequence[str]) -> bytes:
+    out = bytearray()
+    out += encode_uvarint(len(tags))
+    for t in tags:
+        out += _encode_str(t)
+    return encode_frame(FrameType.TAG_LIST, bytes(out))
+
+
+def decode_tag_list(buf: bytes) -> List[str]:
+    payload = _decode_single(buf, FrameType.TAG_LIST)
+    off = 0
+    n, off = decode_uvarint(payload, off)
+    tags: List[str] = []
+    for _ in range(n):
+        t, off = _decode_str(payload, off, "tag name")
+        tags.append(t)
+    if off != len(payload):
+        raise WireError("trailing bytes in TAG_LIST payload")
+    return tags
+
+
+# ------------------------------------------------------------------- ERROR
+
+def encode_error(code: ErrorCode, message: str) -> bytes:
+    return encode_frame(FrameType.ERROR,
+                        encode_uvarint(int(code)) + _encode_str(message))
+
+
+def decode_error(buf: bytes) -> Tuple[ErrorCode, str]:
+    payload = _decode_single(buf, FrameType.ERROR)
+    raw_code, off = decode_uvarint(payload, 0)
+    try:
+        code = ErrorCode(raw_code)
+    except ValueError:
+        code = ErrorCode.INTERNAL      # future codes degrade gracefully
+    message, off = _decode_str(payload, off, "error message")
+    if off != len(payload):
+        raise WireError("trailing bytes in ERROR payload")
+    return code, message
+
+
+# ----------------------------------------------------------------- RECEIPT
+
+def encode_receipt(r: "PushReceipt") -> bytes:
+    out = bytearray()
+    out += _encode_str(r.lineage)
+    out += _encode_str(r.tag)
+    out += encode_uvarint(r.version)
+    out += encode_uvarint(r.chunks_received)
+    out += encode_uvarint(r.bytes_received)
+    out += encode_uvarint(r.index_bytes)
+    if r.root is None:                 # empty artifact: its CDMT has no root
+        out += encode_uvarint(0)
+    else:
+        if len(r.root) != hashing.DIGEST_SIZE:
+            raise WireError(f"bad receipt root length {len(r.root)}")
+        out += encode_uvarint(1)
+        out += r.root
+    out += encode_uvarint(r.nodes_created)
+    out += encode_uvarint(r.nodes_hashed)
+    out += encode_uvarint(r.hash_calls)
+    out += encode_uvarint(1 if r.deduplicated else 0)
+    return encode_frame(FrameType.RECEIPT, bytes(out))
+
+
+def decode_receipt(buf: bytes) -> "PushReceipt":
+    from repro.core.registry import PushReceipt
+    payload = _decode_single(buf, FrameType.RECEIPT)
+    off = 0
+    lineage, off = _decode_str(payload, off, "receipt lineage")
+    tag, off = _decode_str(payload, off, "receipt tag")
+    version, off = decode_uvarint(payload, off)
+    chunks_received, off = decode_uvarint(payload, off)
+    bytes_received, off = decode_uvarint(payload, off)
+    index_bytes, off = decode_uvarint(payload, off)
+    has_root, off = decode_uvarint(payload, off)
+    root = None
+    if has_root:
+        root, off = _take(payload, off, hashing.DIGEST_SIZE, "receipt root")
+    nodes_created, off = decode_uvarint(payload, off)
+    nodes_hashed, off = decode_uvarint(payload, off)
+    hash_calls, off = decode_uvarint(payload, off)
+    dedup, off = decode_uvarint(payload, off)
+    if off != len(payload):
+        raise WireError("trailing bytes in RECEIPT payload")
+    return PushReceipt(lineage=lineage, tag=tag, version=version,
+                       chunks_received=chunks_received,
+                       bytes_received=bytes_received,
+                       index_bytes=index_bytes, root=root,
+                       nodes_created=nodes_created,
+                       nodes_hashed=nodes_hashed, hash_calls=hash_calls,
+                       deduplicated=bool(dedup))
+
+
+# -------------------------------------------------------------------- INFO
+
+def encode_info(response_batch_chunks: int) -> bytes:
+    return encode_frame(FrameType.INFO,
+                        encode_uvarint(response_batch_chunks))
+
+
+def decode_info(buf: bytes) -> int:
+    payload = _decode_single(buf, FrameType.INFO)
+    val, off = decode_uvarint(payload, 0)
+    if off != len(payload):
+        raise WireError("trailing bytes in INFO payload")
+    return val
+
+
+# --------------------------------------------------------------- envelopes
+#
+# The socket protocol.  A request envelope routes an Op plus lineage/tag to
+# a handler and carries the operation's body frames; a response envelope is
+# a status byte plus a frame count, then length-prefixed frames.  The
+# response *header* goes out before any frame is built, so a server streams
+# a large WANT answer batch-by-batch while the client decodes in lockstep.
+
+REQUEST_MAGIC = b"CQ"
+RESPONSE_MAGIC = b"CR"
+STATUS_OK = 0
+STATUS_ERROR = 1
+
+# sanity bounds a stream reader enforces before allocating: a corrupt or
+# hostile length prefix must not make an endpoint buffer gigabytes
+MAX_ROUTING_BYTES = 4096           # lineage / tag strings
+MAX_ENVELOPE_FRAMES = 65536
+MAX_FRAME_BYTES = 256 << 20        # one frame (a CHUNK_BATCH tops out far
+                                   # below this at sane batch settings)
+
+
+def check_request_header(hdr: bytes) -> Op:
+    """Validate a 4-byte request envelope header; returns the op.  Shared
+    by the buffer decoder and the socket stream reader."""
+    if hdr[:2] != REQUEST_MAGIC:
+        raise WireError(f"bad request magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported request version {hdr[2]}")
+    try:
+        return Op(hdr[3])
+    except ValueError:
+        raise WireError(f"unknown request op {hdr[3]}") from None
+
+
+def check_response_header(hdr: bytes) -> int:
+    """Validate a 4-byte response envelope header; returns the status."""
+    if hdr[:2] != RESPONSE_MAGIC:
+        raise WireError(f"bad response magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported response version {hdr[2]}")
+    status = hdr[3]
+    if status not in (STATUS_OK, STATUS_ERROR):
+        raise WireError(f"unknown response status {status}")
+    return status
+
+
+def encode_request(op: Op, lineage: str, tag: str,
+                   frames: Sequence[bytes] = ()) -> bytes:
+    out = bytearray()
+    out += REQUEST_MAGIC
+    out.append(VERSION)
+    out.append(int(op))
+    out += _encode_str(lineage)
+    out += _encode_str(tag)
+    out += encode_uvarint(len(frames))
+    for f in frames:
+        out += encode_uvarint(len(f))
+        out += f
+    return bytes(out)
+
+
+def decode_request(buf: bytes) -> Tuple[Op, str, str, List[bytes]]:
+    hdr, off = _take(buf, 0, 4, "request header")
+    op = check_request_header(hdr)
+    lineage, off = _decode_str(buf, off, "request lineage")
+    tag, off = _decode_str(buf, off, "request tag")
+    n, off = decode_uvarint(buf, off)
+    frames: List[bytes] = []
+    for _ in range(n):
+        size, off = decode_uvarint(buf, off)
+        f, off = _take(buf, off, size, "request frame")
+        frames.append(f)
+    if off != len(buf):
+        raise WireError(f"{len(buf) - off} trailing bytes after request")
+    return op, lineage, tag, frames
+
+
+def encode_response_header(status: int, n_frames: int) -> bytes:
+    return (RESPONSE_MAGIC + bytes((VERSION, status))
+            + encode_uvarint(n_frames))
+
+
+def decode_response_header(buf: bytes, off: int = 0) -> Tuple[int, int, int]:
+    """``(status, n_frames, new_offset)``."""
+    hdr, off = _take(buf, off, 4, "response header")
+    status = check_response_header(hdr)
+    n, off = decode_uvarint(buf, off)
+    return status, n, off
+
+
+def encode_response(status: int, frames: Sequence[bytes]) -> bytes:
+    """Whole response in one buffer (tests / non-streaming paths)."""
+    out = bytearray(encode_response_header(status, len(frames)))
+    for f in frames:
+        out += encode_uvarint(len(f))
+        out += f
+    return bytes(out)
+
+
+def decode_response(buf: bytes) -> Tuple[int, List[bytes]]:
+    status, n, off = decode_response_header(buf, 0)
+    frames: List[bytes] = []
+    for _ in range(n):
+        size, off = decode_uvarint(buf, off)
+        f, off = _take(buf, off, size, "response frame")
+        frames.append(f)
+    if off != len(buf):
+        raise WireError(f"{len(buf) - off} trailing bytes after response")
+    return status, frames
+
+
 # ----------------------------------------------------------------- records
 #
 # Checksummed records: the same varint framing as frames, plus a trailing
@@ -486,15 +775,41 @@ def chunk_batch_wire_bytes(chunks: Mapping[bytes, bytes]) -> int:
     return _frame_len(payload)
 
 
-def chunk_batches_wire_bytes(sizes: Sequence[int], batch_chunks: int) -> int:
-    """Exact CHUNK_BATCH bytes for payloads of ``sizes`` delivered in frames
-    of ``batch_chunks`` — from sizes alone, so a pull *plan* can quote its
-    expected wire cost before a single payload is read."""
+def chunk_batch_frame_lens(sizes: Sequence[int],
+                           batch_chunks: int) -> List[int]:
+    """Exact per-frame CHUNK_BATCH lengths for payloads of ``sizes`` split
+    into frames of ``batch_chunks`` — from sizes alone.  The socket path
+    needs the individual frame lengths (each one carries an envelope length
+    prefix), not just their sum."""
     batch_chunks = max(1, batch_chunks)
-    total = 0
+    lens: List[int] = []
     for start in range(0, len(sizes), batch_chunks):
         part = sizes[start:start + batch_chunks]
         payload = uvarint_len(len(part)) + sum(
             hashing.DIGEST_SIZE + uvarint_len(s) + s for s in part)
-        total += _frame_len(payload)
-    return total
+        lens.append(_frame_len(payload))
+    return lens
+
+
+def chunk_batches_wire_bytes(sizes: Sequence[int], batch_chunks: int) -> int:
+    """Exact CHUNK_BATCH bytes for payloads of ``sizes`` delivered in frames
+    of ``batch_chunks`` — from sizes alone, so a pull *plan* can quote its
+    expected wire cost before a single payload is read."""
+    return sum(chunk_batch_frame_lens(sizes, batch_chunks))
+
+
+def request_envelope_bytes(lineage: str, tag: str,
+                           frame_lens: Sequence[int]) -> int:
+    """Exact ``len(encode_request(op, lineage, tag, frames))`` from the
+    body-frame lengths alone (the op byte is fixed-width)."""
+    lin = len(lineage.encode("utf-8"))
+    tg = len(tag.encode("utf-8"))
+    return (4 + uvarint_len(lin) + lin + uvarint_len(tg) + tg
+            + uvarint_len(len(frame_lens))
+            + sum(uvarint_len(n) + n for n in frame_lens))
+
+
+def response_envelope_bytes(frame_lens: Sequence[int]) -> int:
+    """Exact ``len(encode_response(status, frames))`` from frame lengths."""
+    return (4 + uvarint_len(len(frame_lens))
+            + sum(uvarint_len(n) + n for n in frame_lens))

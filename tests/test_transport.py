@@ -1,26 +1,32 @@
-"""Transport conformance: one ``ImageClient``, three ``Transport``s.
+"""Transport conformance: one ``ImageClient``, four ``Transport``s.
 
 The same scenario must move the same chunks through every transport, with
-byte counts equal up to framing overhead; swarm pulls must survive provider
-death mid-pull (failover to the next source, then the registry); and the
-server's restart warm-up must serve a recovered registry's first wave from
-RAM.
+byte counts equal up to framing overhead — and for the socket transport,
+equal to the wire transport's bytes **plus exactly the envelope overhead**;
+swarm pulls must survive provider death mid-pull (failover to the next
+source, then the registry); and the server's restart warm-up must serve a
+recovered registry's first wave from RAM.
 """
+
+import threading
+import time
 
 import pytest
 
 from repro.core import cdc, hashing
-from repro.core.cdmt import CDMTParams
+from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError
 from repro.core.registry import Registry
-from repro.delivery import (ImageClient, LocalTransport, PullPlan,
-                            RegistryServer, SwarmNode, SwarmTracker,
-                            SwarmTransport, TransferReport, WireTransport,
-                            swarm_pull, wire)
+from repro.core.store import Recipe
+from repro.delivery import (FetchResult, ImageClient, LocalTransport,
+                            PullPlan, RegistryServer, SocketRegistryServer,
+                            SocketTransport, SourceLeg, SwarmNode,
+                            SwarmTracker, SwarmTransport, TransferReport,
+                            WireTransport, swarm_pull, wire)
 
 PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
 P = CDMTParams(window=4, rule_bits=2)
-TRANSPORTS = ["local", "wire", "swarm"]
+TRANSPORTS = ["local", "wire", "socket", "swarm"]
 
 
 def _rand(n, seed=0):
@@ -55,7 +61,9 @@ def _seed_registry(versions, lineage="app"):
 
 def _fresh_client(kind, reg, provisioned_tags=()):
     """A cold ImageClient over transport ``kind``.  For swarm, one peer is
-    pre-provisioned per tag in ``provisioned_tags`` so providers exist."""
+    pre-provisioned per tag in ``provisioned_tags`` so providers exist.
+    Socket clients carry their server on ``_cleanup`` — call
+    ``_cleanup_client`` when done."""
     if kind == "local":
         return ImageClient(LocalTransport(reg), cdc_params=PARAMS,
                            cdmt_params=P)
@@ -63,6 +71,12 @@ def _fresh_client(kind, reg, provisioned_tags=()):
     if kind == "wire":
         return ImageClient(WireTransport(srv), cdc_params=PARAMS,
                            cdmt_params=P)
+    if kind == "socket":
+        sock_srv = SocketRegistryServer(srv)
+        transport = SocketTransport(sock_srv.address)
+        cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        cl._cleanup = (transport, sock_srv)
+        return cl
     tracker = SwarmTracker()
     for i, tag in enumerate(provisioned_tags):
         peer = SwarmNode(f"seed{i}", cdc_params=PARAMS, cdmt_params=P)
@@ -73,6 +87,14 @@ def _fresh_client(kind, reg, provisioned_tags=()):
                        indexes=node.client.indexes,
                        tag_trees=node.client.tag_trees,
                        cdc_params=PARAMS, cdmt_params=P)
+
+
+def _cleanup_client(cl):
+    transport, sock_srv = getattr(cl, "_cleanup", (None, None))
+    if transport is not None:
+        transport.close()
+    if sock_srv is not None:
+        sock_srv.stop()
 
 
 # ------------------------------------------------------------- conformance
@@ -88,13 +110,16 @@ class TestConformance:
         for kind in TRANSPORTS:
             reg = _seed_registry(versions)
             cl = _fresh_client(kind, reg, provisioned_tags=("v0", head))
-            cold = cl.pull("app", "v0")
-            warm = cl.pull("app", head)
-            out[kind] = {
-                "cold": cold, "warm": warm,
-                "v0": cl.materialize("app", "v0"),
-                "head": cl.materialize("app", head),
-            }
+            try:
+                cold = cl.pull("app", "v0")
+                warm = cl.pull("app", head)
+                out[kind] = {
+                    "cold": cold, "warm": warm,
+                    "v0": cl.materialize("app", "v0"),
+                    "head": cl.materialize("app", head),
+                }
+            finally:
+                _cleanup_client(cl)
         return versions, out
 
     def test_materialization_identical(self, scenario):
@@ -149,29 +174,180 @@ class TestConformance:
         assert warm.peer_offload_fraction >= 0.5
 
 
+class TestSocketConformance:
+    """The socket transport's acceptance gate: same chunks as local/wire
+    over real TCP, bytes equal to the wire path plus exactly the envelope
+    overhead, plans quoted to the byte, and a mid-pull server death that
+    commits nothing."""
+
+    def _socket_client(self, reg, **transport_kw):
+        srv = RegistryServer(reg)
+        sock_srv = SocketRegistryServer(srv)
+        transport = SocketTransport(sock_srv.address, **transport_kw)
+        cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        cl._cleanup = (transport, sock_srv)
+        return cl, srv, sock_srv
+
+    def test_socket_bytes_are_wire_bytes_plus_envelope(self):
+        versions = _versions(4, seed=58)
+        wire_cl = _fresh_client("wire", _seed_registry(versions))
+        sock_cl = _fresh_client("socket", _seed_registry(versions))
+        try:
+            wplan = wire_cl.plan_pull("app", "v0")
+            wrep = wire_cl.execute(wplan)
+            splan = sock_cl.plan_pull("app", "v0")
+            srep = sock_cl.execute(splan)
+            assert splan.missing == wplan.missing
+
+            # chunk traffic: same CHUNK_BATCH frames, plus one response
+            # envelope per WANT round
+            size_of = dict(zip(splan.recipe.fps, splan.recipe.sizes))
+            sizes = [size_of[fp] for fp in splan.missing]
+            sub = sock_cl.transport.response_batch_chunks
+            envelope = 0
+            for start in range(0, len(sizes), sock_cl.batch_chunks):
+                lens = wire.chunk_batch_frame_lens(
+                    sizes[start:start + sock_cl.batch_chunks], sub)
+                envelope += wire.response_envelope_bytes(lens) - sum(lens)
+            assert srep.chunk_bytes == wrep.chunk_bytes + envelope
+
+            # control traffic: the same INDEX/RECIPE frame, plus request
+            # envelope (new on socket) and response envelope
+            for sock_b, frame_len in ((srep.index_bytes, wrep.index_bytes),
+                                      (srep.recipe_bytes, wrep.recipe_bytes)):
+                assert sock_b == (
+                    wire.request_envelope_bytes("app", "v0", [])
+                    + wire.response_envelope_bytes([frame_len]))
+        finally:
+            _cleanup_client(wire_cl)
+            _cleanup_client(sock_cl)
+
+    def test_plan_quote_exact_with_server_split_and_envelope(self):
+        """Client batches larger than the server's response split stream as
+        several frames inside one envelope — the plan quotes all of it."""
+        versions = _versions(3, seed=59)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg, max_batch_chunks=16)
+        sock_srv = SocketRegistryServer(srv)
+        transport = SocketTransport(sock_srv.address, batch_chunks=256)
+        try:
+            cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P,
+                             batch_chunks=256)
+            assert transport.response_batch_chunks == 16   # INFO handshake
+            plan = cl.plan_pull("app", "v2")
+            assert plan.chunks_to_fetch > 16               # forces a split
+            report = cl.execute(plan)
+            assert (report.index_bytes + report.recipe_bytes
+                    + report.chunk_bytes) == plan.expected_wire_bytes
+        finally:
+            transport.close()
+            sock_srv.stop()
+
+    def test_mid_pull_server_death_commits_nothing(self):
+        """The server dies after streaming one CHUNK_BATCH of a multi-frame
+        response: the client must surface DeliveryError (not hang, not a
+        bare socket error) with nothing committed to the local store."""
+        versions = _versions(3, seed=60)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg, max_batch_chunks=8)
+        sock_srv = SocketRegistryServer(srv)
+        transport = SocketTransport(sock_srv.address, batch_chunks=1024)
+        try:
+            cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P,
+                             batch_chunks=1024)
+            plan = cl.plan_pull("app", "v0")
+            assert plan.chunks_to_fetch > 8    # multi-frame response
+
+            real_want_plan = srv.want_plan
+
+            def dying_want_plan(want_frame):
+                n, frames = real_want_plan(want_frame)
+
+                def die_after_first():
+                    yield next(iter(frames))
+                    raise RuntimeError("registry crashed mid-stream")
+
+                return n, die_after_first()
+
+            srv.want_plan = dying_want_plan
+            chunks_before = cl.store.chunks.n_chunks()
+            with pytest.raises(DeliveryError):
+                cl.execute(plan)
+            assert "app:v0" not in cl.store.recipes
+            assert cl.store.chunks.n_chunks() == chunks_before
+            assert "app" not in cl.indexes
+        finally:
+            transport.close()
+            sock_srv.stop()
+
+    def test_swarm_over_socket_registry_fallback(self):
+        """SwarmTransport composes peers over *any* registry transport —
+        here the fallback crosses a real socket."""
+        versions = _versions(3, seed=61)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sock_srv = SocketRegistryServer(srv)
+        fallback = SocketTransport(sock_srv.address)
+        try:
+            tracker = SwarmTracker()
+            node = SwarmNode("s0", cdc_params=PARAMS, cdmt_params=P)
+            transport = SwarmTransport(node, tracker, fallback)
+            cl = ImageClient(transport, store=node.client.store,
+                             indexes=node.client.indexes,
+                             tag_trees=node.client.tag_trees,
+                             cdc_params=PARAMS, cdmt_params=P)
+            rep = cl.pull("app", "v2")
+            assert cl.materialize("app", "v2") == versions[2]
+            assert rep.transport == "swarm"
+            assert rep.registry_chunk_bytes > 0    # fallback carried it
+            # the next swarm puller rides the first as a peer, fetching
+            # only the remainder over the socket
+            node2 = SwarmNode("s1", cdc_params=PARAMS, cdmt_params=P)
+            t2 = SwarmTransport(node2, tracker, fallback)
+            cl2 = ImageClient(t2, store=node2.client.store,
+                              indexes=node2.client.indexes,
+                              tag_trees=node2.client.tag_trees,
+                              cdc_params=PARAMS, cdmt_params=P)
+            rep2 = cl2.pull("app", "v2")
+            assert cl2.materialize("app", "v2") == versions[2]
+            assert rep2.chunks_from_peers > 0
+        finally:
+            fallback.close()
+            sock_srv.stop()
+
+
 class TestPushConformance:
     @pytest.mark.parametrize("kind", TRANSPORTS)
     def test_push_lands_identically(self, kind):
         versions = _versions(3, seed=41)
         reg = Registry(cdmt_params=P)
+        sock_srv = None
         if kind == "local":
             transport = LocalTransport(reg)
         elif kind == "wire":
             transport = WireTransport(RegistryServer(reg))
+        elif kind == "socket":
+            sock_srv = SocketRegistryServer(RegistryServer(reg))
+            transport = SocketTransport(sock_srv.address)
         else:
             node = SwarmNode("pub", cdc_params=PARAMS, cdmt_params=P)
             transport = SwarmTransport(node, SwarmTracker(),
                                        RegistryServer(reg))
-        pub = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
-        reference = _seed_registry(versions)
-        for i, v in enumerate(versions):
-            pub.commit("app", f"v{i}", v)
-            st = pub.push("app", f"v{i}")
-            assert st.chunks_moved <= st.chunks_total
-        assert reg.tags("app") == reference.tags("app")
-        for tag in reg.tags("app"):
-            assert reg.index_for_tag("app", tag).root \
-                == reference.index_for_tag("app", tag).root
+        try:
+            pub = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+            reference = _seed_registry(versions)
+            for i, v in enumerate(versions):
+                pub.commit("app", f"v{i}", v)
+                st = pub.push("app", f"v{i}")
+                assert st.chunks_moved <= st.chunks_total
+            assert reg.tags("app") == reference.tags("app")
+            for tag in reg.tags("app"):
+                assert reg.index_for_tag("app", tag).root \
+                    == reference.index_for_tag("app", tag).root
+        finally:
+            if sock_srv is not None:
+                transport.close()
+                sock_srv.stop()
 
     @pytest.mark.parametrize("kind", ["local", "wire"])
     def test_has_chunks_gives_cross_lineage_push_dedup(self, kind):
@@ -308,6 +484,48 @@ class TestFailover:
         assert st.registry_chunk_bytes > 0       # registry served the rest
         assert st.chunks_moved == st.chunks_total
 
+    def test_dead_provider_benched_after_threshold_then_revived(self):
+        """Tracker health (churn): a provider that keeps failing is benched
+        after ``failure_threshold`` consecutive failures — later batches and
+        later pullers stop paying one failed round each — and ``revive()``
+        re-registers it on every tracker it joined."""
+        versions, srv, tracker, peer, head = self._swarm_env()
+        peer.kill()
+        node = SwarmNode("n1", cdc_params=PARAMS, cdmt_params=P)
+        st = swarm_pull(node, srv, tracker, "app", head, batch_chunks=8)
+        assert node.client.materialize("app", head) == versions[-1]
+        # enough batches ran to exceed the threshold many times over, but
+        # the corpse only cost threshold failed rounds before the bench
+        assert st.rounds > tracker.failure_threshold
+        assert st.failovers == tracker.failure_threshold
+        assert tracker.is_benched(peer)
+        # a benched provider is invisible to the next puller
+        node2 = SwarmNode("n2", cdc_params=PARAMS, cdmt_params=P)
+        st2 = swarm_pull(node2, srv, tracker, "app", head, batch_chunks=8)
+        assert st2.failovers == 0
+        assert f"peer:{peer.name}" not in st2.sources
+        # revive: back online, backoff cleared, serving again
+        peer.revive()
+        assert not tracker.is_benched(peer)
+        node3 = SwarmNode("n3", cdc_params=PARAMS, cdmt_params=P)
+        st3 = swarm_pull(node3, srv, tracker, "app", head, batch_chunks=8)
+        assert st3.failovers == 0
+        assert st3.chunks_from_peers > 0
+
+    def test_success_resets_failure_streak(self):
+        """Failures must be *consecutive* to bench: a flaky peer that
+        recovers before the threshold keeps serving."""
+        versions, srv, tracker, peer, head = self._swarm_env()
+        for _ in range(tracker.failure_threshold - 1):
+            tracker.report_failure(peer)
+        assert not tracker.is_benched(peer)
+        tracker.report_success(peer)
+        assert tracker.consecutive_failures(peer) == 0
+        for _ in range(tracker.failure_threshold - 1):
+            tracker.report_failure(peer)
+        assert not tracker.is_benched(peer)
+        assert peer in tracker.providers("app", head)
+
     def test_live_provider_preferred_over_dead(self):
         """The tracker orders live nodes ahead of dead ones in each tier, so
         a lingering corpse neither crowds out the live provider nor costs a
@@ -324,6 +542,129 @@ class TestFailover:
         assert st.chunks_from_peers == st.chunks_moved
         assert st.sources[f"peer:{backup.name}"].chunks > 0
         assert f"peer:{peer.name}" not in st.sources
+
+
+# ---------------------------------------------------------- pipeline bound
+
+
+class _CountingTransport:
+    """Fake transport serving canned chunks, counting fetch rounds."""
+
+    name = "fake"
+    verifies_payloads = True
+
+    def __init__(self, chunks):
+        self.chunks = dict(chunks)
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def fetch_chunks(self, lineage, tag, fps):
+        with self._lock:
+            self.calls += 1
+        time.sleep(0.002)                   # give the pipeline time to race
+        got = {fp: self.chunks[fp] for fp in fps if fp in self.chunks}
+        leg = SourceLeg(source="registry", chunks=len(got),
+                        chunk_bytes=sum(len(v) for v in got.values()),
+                        rounds=1)
+        return FetchResult(chunks=got, legs=[leg])
+
+    def notify_pulled(self, lineage, tag):
+        pass
+
+
+class TestPipelineBound:
+    def _plan(self, n_chunks=24):
+        payloads = [bytes([i]) * (50 + i) for i in range(n_chunks)]
+        fps = [hashing.chunk_fingerprint(d) for d in payloads]
+        recipe = Recipe(name="app:v0", fps=fps,
+                        sizes=[len(d) for d in payloads])
+        plan = PullPlan(lineage="app", tag="v0", transport="fake",
+                        index=CDMT.build(fps, params=P), recipe=recipe,
+                        missing=list(fps), chunks_total=len(fps),
+                        raw_bytes=sum(recipe.sizes))
+        return plan, dict(zip(fps, payloads)), b"".join(payloads)
+
+    def test_at_most_pipeline_depth_batches_in_flight(self, monkeypatch):
+        """The documented bound is ``pipeline_depth`` batches in flight;
+        the old loop drained only *after* submitting, keeping depth+1."""
+        from repro.delivery import client as client_mod
+        outstanding = {"now": 0, "max": 0}
+        lock = threading.Lock()
+        real_executor = client_mod.ThreadPoolExecutor
+
+        class ProbeFuture:
+            def __init__(self, fut):
+                self._fut = fut
+
+            def result(self):
+                out = self._fut.result()
+                with lock:
+                    outstanding["now"] -= 1
+                return out
+
+        class ProbeExecutor(real_executor):
+            def submit(self, fn, *args, **kw):
+                with lock:
+                    outstanding["now"] += 1
+                    outstanding["max"] = max(outstanding["max"],
+                                             outstanding["now"])
+                return ProbeFuture(super().submit(fn, *args, **kw))
+
+        monkeypatch.setattr(client_mod, "ThreadPoolExecutor", ProbeExecutor)
+        plan, chunks, raw = self._plan()
+        transport = _CountingTransport(chunks)
+        cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P,
+                         batch_chunks=2, pipeline_depth=3)
+        report = cl.execute(plan)
+        assert transport.calls == 12            # 24 chunks / batches of 2
+        assert report.chunks_moved == 24
+        assert outstanding["max"] == 3          # == depth, never depth + 1
+        assert cl.materialize("app", "v0") == raw
+
+
+# ----------------------------------------------------------- push integrity
+
+
+class TestPushLocalStore:
+    def test_missing_local_candidate_is_delivery_error(self):
+        """A candidate fp the local store cannot produce must fail as a
+        protocol-level DeliveryError naming the fp, not a bare KeyError."""
+        reg = Registry(cdmt_params=P)
+        cl = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                         cdmt_params=P)
+        recipe = cl.commit("app", "v0", _rand(60_000, seed=62))
+        victim = recipe.fps[0]
+        real_get = cl.store.chunks.get
+
+        def missing_get(fp):
+            if fp == victim:
+                raise KeyError(fp)
+            return real_get(fp)
+
+        cl.store.chunks.get = missing_get
+        with pytest.raises(DeliveryError) as ei:
+            cl.push("app", "v0")
+        assert victim.hex()[:12] in str(ei.value)
+
+
+# ------------------------------------------------------- tag-listing frames
+
+
+class TestTagsFrames:
+    def test_wire_tags_are_metered_protocol_data(self):
+        """Tag queries flow through TAGS/TAG_LIST frames and the server's
+        meters — not an attribute reach into the registry."""
+        versions = _versions(2, seed=63)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        s0 = srv.snapshot()
+        assert t.tags("app") == ["v0", "v1"]
+        s1 = srv.snapshot()
+        assert s1.tags_requests == s0.tags_requests + 1
+        assert s1.ingress_bytes > s0.ingress_bytes
+        assert s1.egress_bytes > s0.egress_bytes
+        assert t.tags("ghost") == []
 
 
 # ------------------------------------------------------- HAS/MISSING frames
@@ -406,3 +747,43 @@ class TestWarmStart:
         reg = _seed_registry(versions)
         srv = RegistryServer(reg)
         assert srv.snapshot().warmed_chunks == 0
+
+    def _chunked_store(self, tmp_path, small_n=20, small_size=1000,
+                       big_size=50_000):
+        """A durable store whose most recent chunk is far larger than the
+        warm budget, with plenty of older small chunks behind it."""
+        reg = Registry(directory=str(tmp_path), cdmt_params=P)
+        smalls = []
+        for i in range(small_n):
+            data = _rand(small_size, seed=100 + i)
+            reg.store.chunks.put(hashing.chunk_fingerprint(data), data)
+            smalls.append(hashing.chunk_fingerprint(data))
+        big = _rand(big_size, seed=99)
+        big_fp = hashing.chunk_fingerprint(big)
+        reg.store.chunks.put(big_fp, big)          # most recently appended
+        reg.close()
+        return Registry(directory=str(tmp_path), cdmt_params=P), big_fp
+
+    def test_warm_skips_oversized_recent_chunk(self, tmp_path):
+        """Regression: one big recent chunk used to stop warming at the
+        first reject, leaving the rest of the budget cold even though many
+        smaller older chunks still fit."""
+        reg, big_fp = self._chunked_store(tmp_path)
+        try:
+            srv = RegistryServer(reg, cache_bytes=10_000)
+            s = srv.snapshot()
+            assert s.warmed_chunks >= 9            # ~10 × 1000B fit
+            assert big_fp not in srv.cache.resident_fps()
+            assert srv.cache.stats.resident_bytes <= 10_000
+        finally:
+            reg.close()
+
+    def test_warm_scan_limit_bounds_startup(self, tmp_path):
+        reg, _big_fp = self._chunked_store(tmp_path)
+        try:
+            srv = RegistryServer(reg, warm_scan_limit=5)
+            # the scan stopped after 5 index entries (big one included)
+            assert srv.snapshot().warmed_chunks <= 5
+            assert srv.snapshot().warmed_chunks > 0
+        finally:
+            reg.close()
