@@ -34,8 +34,9 @@ from repro.core import cdc
 from repro.core.cdmt import CDMTParams
 from repro.core.pushpull import Client
 from repro.core.registry import Registry
-from repro.delivery import (DeltaSession, ImageClient, LocalTransport,
-                            RegistryServer, SocketRegistryServer,
+from repro.delivery import (DeltaSession, ImageClient, JournalFollower,
+                            LocalTransport, RegistryServer,
+                            ReplicatedTransport, SocketRegistryServer,
                             SocketTransport, SwarmNode, SwarmTracker,
                             SwarmTransport, WireTransport, swarm_pull)
 
@@ -58,10 +59,12 @@ def _loaded_server(app: str, versions) -> RegistryServer:
     return RegistryServer(reg)
 
 
-def _rolling_waves(n: int, worker, wave_size: int = 0) -> float:
+def _rolling_waves(n: int, worker, wave_size: int = 0,
+                   after_wave=None) -> float:
     """Run ``worker(i)`` for i in 0..n-1 as a rolling upgrade: waves of
     ``wave_size`` clients run concurrently (barrier-released), waves proceed
-    in order.  Default wave size: n/4, ≥1."""
+    in order.  Default wave size: n/4, ≥1.  ``after_wave(wave_index)`` runs
+    between waves (fault injection: e.g. kill the primary registry)."""
     wave_size = wave_size or max(1, n // 4)
     errors: List[BaseException] = []
 
@@ -73,7 +76,7 @@ def _rolling_waves(n: int, worker, wave_size: int = 0) -> float:
             errors.append(e)
 
     with Timer() as t:
-        for start in range(0, n, wave_size):
+        for wave, start in enumerate(range(0, n, wave_size)):
             members = range(start, min(start + wave_size, n))
             barrier = threading.Barrier(len(members))
             threads = [threading.Thread(target=run, args=(i, barrier))
@@ -84,6 +87,8 @@ def _rolling_waves(n: int, worker, wave_size: int = 0) -> float:
                 th.join()
             if errors:
                 raise errors[0]
+            if after_wave is not None:
+                after_wave(wave)
     return t.s
 
 
@@ -264,6 +269,100 @@ def run_unified(scale: float = 1.0) -> Report:
     return rep
 
 
+def _replicated(app: str, versions, n: int, warm_tag: str, new_tag: str,
+                n_replicas: int = 3, kill_primary_after_wave: int = -1):
+    """Rolling upgrade through a ``ReplicatedTransport`` over ``n_replicas``
+    journal-shipped socket registries.  With ``kill_primary_after_wave >=
+    0`` the primary's socket server is stopped after that wave — the
+    remaining waves must promote a standby and complete with zero failed
+    pulls."""
+    srv = _loaded_server(app, versions)
+    servers = [SocketRegistryServer(srv)]
+    primary_wire = WireTransport(srv)
+    for i in range(n_replicas - 1):
+        sreg = Registry(cdmt_params=CDMT_PARAMS)
+        JournalFollower(sreg, primary_wire, name=f"standby{i}").sync_once()
+        servers.append(SocketRegistryServer(RegistryServer(sreg)))
+    transports: List[SocketTransport] = []
+    clients: List[ImageClient] = []
+    try:
+        for _ in range(n):
+            ts = [SocketTransport(s.address) for s in servers]
+            transports.extend(ts)
+            clients.append(ImageClient(ReplicatedTransport(ts),
+                                       cdc_params=CDC_PARAMS,
+                                       cdmt_params=CDMT_PARAMS))
+        for cl in clients:
+            cl.pull(app, warm_tag)            # provision (not measured)
+        base = [s.snapshot().egress_bytes for s in servers]
+        reports: List = [None] * n
+        failures: List = [None] * n
+
+        def worker(i):
+            # a failed pull is the metric under test in failover mode —
+            # count it rather than crashing the whole wave
+            try:
+                reports[i] = clients[i].pull(app, new_tag)
+            except Exception as e:            # noqa: BLE001 — recorded
+                failures[i] = e
+
+        def after_wave(w):
+            if w == kill_primary_after_wave:
+                servers[0].stop()             # primary dies mid-rollout
+
+        wall = _rolling_waves(n, worker, after_wave=after_wave)
+
+        egress = [s.snapshot().egress_bytes - b
+                  for s, b in zip(servers, base)]
+        return {
+            "max_replica_egress_mb": max(egress) / 2**20,
+            "total_egress_mb": sum(egress) / 2**20,
+            "promotions": sum(cl.transport.promotions for cl in clients),
+            "failed_pulls": sum(1 for e in failures if e is not None),
+            "wall_s": wall,
+        }
+    finally:
+        for t in transports:
+            t.close()
+        for s in servers:
+            s.stop()
+
+
+def run_replicated(scale: float = 1.0) -> Report:
+    """Registry replication rows: the same rolling upgrade against one
+    socket registry (``single-socket``: all egress leaves one NIC), against
+    N=3 journal-shipped replicas (``replicated-3``: per-registry egress cut
+    ~N× — the capacity-planning win), and against N=3 with the primary
+    killed after the first wave (``replicated-3-failover``: standbys are
+    promoted mid-rollout and ``failed_pulls`` stays 0 — the availability
+    win)."""
+    rep = Report("delivery_replicated")
+    c = corpus(scale)
+    app = "node"
+    versions = c[app]
+    warm_tag = versions[max(0, len(versions) - 4)].tag
+    new_tag = versions[-1].tag
+    naive_mb = versions[-1].size / 2**20
+    n = 8
+    single = _unified(app, versions, n, warm_tag, new_tag, "socket")
+    rows = [("single-socket", {
+        "max_replica_egress_mb": single["registry_egress_mb"],
+        "total_egress_mb": single["registry_egress_mb"],
+        "promotions": 0, "failed_pulls": 0, "wall_s": single["wall_s"],
+    })]
+    rows.append(("replicated-3",
+                 _replicated(app, versions, n, warm_tag, new_tag)))
+    rows.append(("replicated-3-failover",
+                 _replicated(app, versions, n, warm_tag, new_tag,
+                             kill_primary_after_wave=0)))
+    for mode, row in rows:
+        cut = (single["registry_egress_mb"] / row["max_replica_egress_mb"]
+               if row["max_replica_egress_mb"] else 0.0)
+        rep.add(app=app, mode=mode, n_clients=n,
+                naive_egress_mb=naive_mb * n, egress_cut=cut, **row)
+    return rep
+
+
 def run_socket(scale: float = 1.0) -> Report:
     """Focused wire-vs-socket comparison (the CI smoke): one app, the same
     rolling upgrade over the in-process framed path and over real TCP —
@@ -288,3 +387,4 @@ if __name__ == "__main__":
     run(scale).print_csv()
     run_unified(scale).print_csv()
     run_socket(scale).print_csv()
+    run_replicated(scale).print_csv()

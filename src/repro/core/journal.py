@@ -17,6 +17,36 @@ journal, and because the registry's record application is idempotent, a crash
 between snapshot rename and journal truncation only causes harmless
 re-application.
 
+Replication: :class:`ReplicationLog` is the in-memory, offset-addressed tap
+a primary registry feeds with every committed record (in commit order — the
+same order the journal sees them).  Standby registries follow it over the
+socket protocol's ``JOURNAL_SHIP``/``REPL_ACK`` ops (see
+:mod:`repro.delivery.net`), resuming from the count of records they have
+already applied; because the log stores the *encoded* checksummed record
+bytes, a shipped record is re-verified end to end before a standby replays
+it.  The log is logical — journal compaction does not disturb its offsets;
+only a GC sweep that drops versions rolls it over to a new ``epoch``
+(standbys at an older epoch must full-resync from an empty directory).
+
+Concurrency contract
+    ``Journal`` is **single-writer**: exactly one thread (the registry
+    commit path, which the delivery frontends already serialize behind
+    ``RegistryServer._registry_lock``) may call :meth:`Journal.append` /
+    :meth:`Journal.reset`.  ``scan_records`` / recovery run before any
+    writer exists.  :class:`ReplicationLog` by contrast is **thread-safe**
+    (internal lock): one committer appends while any number of
+    ``JOURNAL_SHIP`` handler threads read ``records_from`` concurrently.
+
+Crash-recovery contract
+    A record is *committed* iff it decodes cleanly (checksum included) from
+    the snapshot-then-journal sequence.  After any crash, reopening a
+    ``Journal`` truncates the torn tail, so the journal is always left in a
+    state where every byte on disk belongs to a committed record; appends
+    with ``sync=True`` make the record durable before returning.  The
+    ``ReplicationLog`` is rebuilt on recovery from exactly those committed
+    records, so a standby's resume offset (records applied) stays valid
+    across primary *and* standby restarts.
+
 Layering note: like ``core.pushpull``, this module's wire-format use is the
 deliberate upward reference from core to the delivery layer; it is imported
 lazily (call time) so ``import repro.core`` never recurses into
@@ -26,11 +56,13 @@ lazily (call time) so ``import repro.core`` never recurses into
 from __future__ import annotations
 
 import os
-from typing import Iterable, List, Tuple
+import threading
+from typing import Iterable, List, Optional, Tuple
 
 from .errors import JournalError
 
-__all__ = ["Journal", "JournalError", "scan_records", "write_snapshot"]
+__all__ = ["Journal", "JournalError", "ReplicationLog", "scan_records",
+           "write_snapshot", "write_snapshot_raw"]
 
 
 def _wire():
@@ -87,9 +119,16 @@ class Journal:
     # ----------------------------------------------------------------- write
 
     def append(self, rtype: int, payload: bytes) -> None:
+        self.append_raw(_wire().encode_record(rtype, payload))
+
+    def append_raw(self, raw_record: bytes) -> None:
+        """Append an already-encoded checksummed record — the commit path
+        encodes each record once and hands the same bytes to the journal
+        and the replication log, so shipped bytes are byte-identical to
+        journaled ones."""
         if self._f is None:
             raise JournalError(f"journal {self.path} is closed")
-        self._f.write(_wire().encode_record(rtype, payload))
+        self._f.write(raw_record)
         self._f.flush()
         if self.sync_writes:
             os.fsync(self._f.fileno())
@@ -115,15 +154,110 @@ class Journal:
             self._f = None
 
 
+class ReplicationLog:
+    """Offset-addressed stream of committed records — the replication tap.
+
+    Every committed registry record (push commit, metadata write) is
+    appended here as its **encoded checksummed bytes**
+    (:func:`repro.delivery.wire.encode_record`), so shipping a record to a
+    standby is a copy of bytes whose integrity the standby re-verifies
+    before replay.  Offsets are dense record ordinals: a standby that has
+    applied ``k`` records resumes from offset ``k``.
+
+    ``epoch`` starts at 0 and increments only on :meth:`rollover` (a GC
+    sweep that dropped versions — offsets from the old epoch are
+    meaningless afterwards and followers at the old epoch are refused).
+
+    Thread-safe: one committer appends while ship handlers read.
+    """
+
+    def __init__(self):
+        self.epoch = 0
+        self._base = 0                     # seq of _records[0] (future trim)
+        self._records: List[bytes] = []
+        self._lock = threading.Lock()
+
+    def append(self, rtype: int, payload: bytes) -> int:
+        """Record one committed ``(rtype, payload)``; returns its offset."""
+        return self.append_raw(_wire().encode_record(rtype, payload))
+
+    def append_raw(self, raw_record: bytes) -> int:
+        """Record one already-encoded checksummed record (what the journal
+        wrote / what a ship delivered) without re-encoding it."""
+        with self._lock:
+            self._records.append(raw_record)
+            return self._base + len(self._records) - 1
+
+    def head(self) -> int:
+        """The next offset to be assigned == number of records ever logged
+        this epoch."""
+        with self._lock:
+            return self._base + len(self._records)
+
+    def records_from(self, start: int,
+                     limit: Optional[int] = None) -> List[bytes]:
+        """Encoded records from offset ``start`` (at most ``limit``).
+
+        ``start == head()`` is a caught-up follower (empty list); beyond it
+        — or behind a trimmed base — is a divergence and raises
+        :class:`JournalError`.
+        """
+        with self._lock:
+            if start < self._base:
+                raise JournalError(
+                    f"replication offset {start} is behind the log base "
+                    f"{self._base} — full resync required")
+            end = self._base + len(self._records)
+            if start > end:
+                raise JournalError(
+                    f"replication offset {start} is ahead of the log head "
+                    f"{end} — follower has diverged")
+            out = self._records[start - self._base:]
+            if limit is not None:
+                out = out[:limit]
+            return list(out)
+
+    def dump(self) -> List[bytes]:
+        """Every raw record this epoch, in order — what a snapshot persists
+        so offsets survive a restart-after-compaction."""
+        with self._lock:
+            return list(self._records)
+
+    def tail(self, n: int) -> List[bytes]:
+        """The last ``n`` raw records (fewer if the log is shorter) — used
+        by recovery to detect a journal that is a byte-identical suffix of
+        the snapshot (crash between snapshot rename and journal truncate)."""
+        with self._lock:
+            return list(self._records[-n:]) if n > 0 else []
+
+    def rollover(self) -> int:
+        """Start a new epoch with an empty log (after a version-dropping GC
+        sweep; the caller re-seeds it from the retained state).  Returns the
+        new epoch."""
+        with self._lock:
+            self.epoch += 1
+            self._base = 0
+            self._records = []
+            return self.epoch
+
+
 def write_snapshot(path: str, records: Iterable[Tuple[int, bytes]]) -> None:
     """Atomically write a compacted record file: temp + fsync + rename +
     directory fsync.  Readers either see the old snapshot or the complete
     new one, never a partial write."""
     wire = _wire()
+    write_snapshot_raw(path, (wire.encode_record(rtype, payload)
+                              for rtype, payload in records))
+
+
+def write_snapshot_raw(path: str, raw_records: Iterable[bytes]) -> None:
+    """:func:`write_snapshot` for already-encoded records (what a
+    :class:`ReplicationLog` stores) — persisting the log's exact bytes with
+    no decode/re-encode round-trip."""
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        for rtype, payload in records:
-            f.write(wire.encode_record(rtype, payload))
+        for raw in raw_records:
+            f.write(raw)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)

@@ -30,13 +30,26 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, \
 from . import hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
 from .errors import DeliveryError, JournalError
-from .journal import Journal, scan_records, write_snapshot
+from .journal import Journal, ReplicationLog, scan_records, \
+    write_snapshot_raw
 from .store import DedupStore, Recipe
 from .versioning import VersionedCDMT, VersionRecord
 
 # journal record types
 _J_COMMIT = 1
 _J_META = 2
+_J_EPOCH = 3    # replication epoch marker: journal/snapshot only, never
+                # shipped — it describes the log, it is not part of it
+_J_COMPACT = 4  # compaction boundary: first record of a freshly reset
+                # journal, carrying the replication (epoch, head) its
+                # snapshot covers — the durable signal that distinguishes
+                # post-compact records from a stale journal whose
+                # truncation was interrupted (including across GC epochs)
+
+
+def _wire():
+    from repro.delivery import wire   # lazy: see core.journal layering note
+    return wire
 
 
 class PushRejected(ValueError):
@@ -92,6 +105,10 @@ class Registry:
         self.metadata: Dict[Tuple[str, str], bytes] = {}   # small blobs (manifests)
         self._journal: Optional[Journal] = None
         self._snap_path: Optional[str] = None
+        # replication tap: every committed record, in commit order — what a
+        # standby follows over JOURNAL_SHIP (see repro.delivery.net).  Fed
+        # during recovery too, so resume offsets survive a primary restart.
+        self.replication = ReplicationLog()
         if directory is not None:
             self._snap_path = os.path.join(directory, "registry.snap")
             if os.path.exists(self._snap_path):
@@ -105,11 +122,118 @@ class Registry:
                         f"snapshot {self._snap_path} is corrupt at byte "
                         f"{good_end} of {size}")
                 for rtype, payload in records:
-                    self._apply(rtype, payload)
+                    self._recover_record(rtype, payload)
+            had_snapshot = os.path.exists(self._snap_path)
             self._journal = Journal(
                 os.path.join(directory, "registry.journal"), sync=sync)
-            for rtype, payload in self._journal.replay():
-                self._apply(rtype, payload)
+            self._recover_journal(self._journal.replay(),
+                                  has_snapshot=had_snapshot)
+
+    # -- recovery -------------------------------------------------------------
+
+    def _recover_record(self, rtype: int, payload: bytes) -> None:
+        """Replay one persisted record at startup: epoch markers restore
+        the replication epoch (compaction boundaries are structural and
+        skipped here); everything else is applied AND fed to the
+        replication log in persisted order, so resume offsets survive a
+        restart."""
+        if rtype == _J_EPOCH:
+            epoch, _ = _wire().decode_uvarint(payload, 0)
+            self.replication.epoch = epoch
+            return
+        if rtype == _J_COMPACT:
+            return
+        self._apply(rtype, payload)
+        self.replication.append(rtype, payload)
+
+    def _recover_journal(self, jrecords: List[Tuple[int, bytes]],
+                         has_snapshot: bool) -> None:
+        """Replay the journal after the snapshot, deciding whether its
+        records are post-compaction state (feed them) or a stale journal
+        a crash left un-truncated (skip them — replaying would double-feed
+        the replication tap, shift every standby's offset, or resurrect
+        GC-dropped versions).
+
+        The decision is the ``_J_COMPACT`` boundary marker ``compact()``
+        writes as the first record of every freshly reset journal, carrying
+        the replication ``(epoch, head)`` its snapshot covers:
+
+        * journal epoch **behind** the snapshot's → the whole journal
+          predates a GC rollover the snapshot includes (sweep died between
+          its snapshot and the journal reset) → stale, skip;
+        * same epoch, marker head == snapshot head → the journal continues
+          the snapshot → feed;
+        * same epoch, marker head behind → a later compact's truncation was
+          interrupted; the body must byte-match the snapshot's tail
+          (anything else is corruption) → stale, skip;
+        * journal ahead of the snapshot (epoch or head) → the snapshot
+          regressed — real corruption, fail loudly.
+
+        Without a snapshot the journal is the sole authority and is fed
+        whole.  Journals from before the marker existed fall back to the
+        byte-suffix comparison.  A detected stale journal is truncated on
+        the spot (the interrupted compaction is finished), so post-crash
+        appends never mix stale and fresh records.
+        """
+        wire = _wire()
+        snap_epoch = self.replication.epoch    # as set by the snapshot (or 0)
+        snap_head = self.replication.head()
+        marker: Optional[Tuple[int, int]] = None
+        if jrecords and jrecords[0][0] == _J_COMPACT:
+            m_epoch, off = wire.decode_uvarint(jrecords[0][1], 0)
+            m_head, _ = wire.decode_uvarint(jrecords[0][1], off)
+            marker = (m_epoch, m_head)
+            jrecords = jrecords[1:]
+        epochs = [(t, p) for t, p in jrecords if t == _J_EPOCH]
+        body = [(t, p) for t, p in jrecords
+                if t not in (_J_EPOCH, _J_COMPACT)]
+        journal_epoch = marker[0] if marker is not None else 0
+        for _t, p in epochs:
+            e, _ = wire.decode_uvarint(p, 0)
+            journal_epoch = max(journal_epoch, e)
+        stale = False
+        if body and has_snapshot:
+            if journal_epoch > snap_epoch:
+                raise JournalError(
+                    f"journal is at replication epoch {journal_epoch} but "
+                    f"the snapshot only covers epoch {snap_epoch} — the "
+                    f"snapshot regressed")
+            if journal_epoch < snap_epoch:
+                stale = True               # predates the GC rollover
+            elif marker is not None:
+                if marker[1] > snap_head:
+                    raise JournalError(
+                        f"journal claims a compaction at replication head "
+                        f"{marker[1]} but the snapshot only covers "
+                        f"{snap_head}")
+                if marker[1] < snap_head:
+                    if not self._is_replication_tail(body):
+                        raise JournalError(
+                            "journal and snapshot disagree about the "
+                            "records after the last compaction")
+                    stale = True
+            else:
+                stale = self._is_replication_tail(body)
+        if stale:
+            # finish the interrupted truncation: later appends must land on
+            # a clean post-compact journal, never after stale records
+            self._journal.reset()
+            self._journal.append(_J_COMPACT,
+                                 wire.encode_uvarint(snap_epoch)
+                                 + wire.encode_uvarint(snap_head))
+            return
+        for rtype, payload in epochs:      # epochs first: idempotent values
+            self._recover_record(rtype, payload)
+        for rtype, payload in body:
+            self._recover_record(rtype, payload)
+
+    def _is_replication_tail(self, records: Sequence[Tuple[int, bytes]]
+                             ) -> bool:
+        """True iff ``records`` re-encode byte-identically to the last
+        ``len(records)`` records already fed to the replication log."""
+        wire = _wire()
+        raws = [wire.encode_record(t, p) for t, p in records]
+        return raws == self.replication.tail(len(raws))
 
     # -- server-side API (what the wire protocol calls) -----------------------
 
@@ -262,9 +386,12 @@ class Registry:
         pending = VersionRecord(version=len(lin.roots), tag=tag,
                                 root=tree.root, parent=parent_resolved,
                                 n_leaves=len(recipe.fps), new_nodes=0)
+        # encode ONCE: the journal and the replication log get the same
+        # bytes, so a shipped record is byte-identical to the journaled one
+        commit_raw = _wire().encode_record(
+            _J_COMMIT, _encode_commit(lineage, tag, pending, recipe))
         if self._journal is not None:
-            self._journal.append(_J_COMMIT,
-                                 _encode_commit(lineage, tag, pending, recipe))
+            self._journal.append_raw(commit_raw)
         self.recipes[(lineage, tag)] = recipe
         self.store.recipes[f"{lineage}:{tag}"] = recipe
         rec = lin.commit(recipe.fps, tag=tag, parent=parent_version,
@@ -272,6 +399,8 @@ class Registry:
         assert rec.version == pending.version and rec.root == pending.root
         if new_lineage:
             self.lineages[lineage] = lin
+        # replication tap: only *committed* records are shipped to standbys
+        self.replication.append_raw(commit_raw)
         return PushReceipt(lineage=lineage, tag=tag, version=rec.version,
                            chunks_received=nchunks, bytes_received=nbytes,
                            index_bytes=tree.index_size_bytes(), root=rec.root,
@@ -308,9 +437,11 @@ class Registry:
     def put_metadata(self, lineage: str, tag: str, blob: bytes) -> None:
         # write-ahead like receive_push: journal first, so a failed append
         # never leaves in-memory state a later compact() would resurrect
+        raw = _wire().encode_record(_J_META, _encode_meta(lineage, tag, blob))
         if self._journal is not None:
-            self._journal.append(_J_META, _encode_meta(lineage, tag, blob))
+            self._journal.append_raw(raw)
         self.metadata[(lineage, tag)] = blob
+        self.replication.append_raw(raw)
 
     def get_metadata(self, lineage: str, tag: str) -> bytes:
         blob = self.metadata.get((lineage, tag))
@@ -398,6 +529,15 @@ class Registry:
             del self.recipes[(lineage, tag)]
             self.store.recipes.pop(f"{lineage}:{tag}", None)
             self.metadata.pop((lineage, tag), None)
+        # dropping versions reassigns version numbers, so every standby's
+        # resume offset is now meaningless: roll the replication log into a
+        # new epoch and re-seed it with the retained-only state (a *fresh*
+        # standby can still sync from offset 0; followers at the old epoch
+        # are refused and must full-resync)
+        if dropped_pairs:
+            self.replication.rollover()
+            for rtype, payload in self._state_records():
+                self.replication.append(rtype, payload)
         # 2) journal safety: persist the retained-only state BEFORE any
         #    chunk payload disappears
         if self._journal is not None:
@@ -437,16 +577,59 @@ class Registry:
             lineage, tag, blob = _decode_meta(payload)
             self.metadata[(lineage, tag)] = blob
 
-    def compact(self) -> None:
-        """Write the current state as a snapshot and truncate the journal.
+    def apply_replicated(self, rtype: int, payload: bytes,
+                         expected_seq: Optional[int] = None,
+                         raw: Optional[bytes] = None) -> bool:
+        """Apply one record shipped from a primary (standby-side replay).
 
-        Crash-safe in every window: the snapshot lands by atomic rename, and
-        if the process dies between rename and journal truncation, recovery
-        replays snapshot *and* journal — commit replay is idempotent (same
-        tag, same root), so the overlap is harmless.
+        ``expected_seq`` is the record's offset in the primary's replication
+        log; a record at an offset this registry has already applied is
+        **skipped** (returns ``False``) — duplicate delivery after a lost
+        ack or a crash between apply and ack is idempotent — while a gap
+        (offset ahead of our head) raises :class:`JournalError` instead of
+        silently corrupting version numbering.
+
+        Write order mirrors ``receive_push``: any chunk payloads the record
+        references must already be in the store (the follower fetches them
+        first); they are fsynced, then the record is journaled, then applied
+        — so an acked offset never points at non-durable standby state.
+
+        The record itself was checksum-verified on decode
+        (:func:`repro.delivery.wire.decode_record_frame`) before it reaches
+        this method; ``raw`` is that verified encoding — passing it through
+        avoids re-encoding and re-journals the primary's exact bytes.
         """
-        if self._journal is None:
-            return
+        if expected_seq is not None:
+            head = self.replication.head()
+            if expected_seq < head:
+                return False               # duplicate delivery: already applied
+            if expected_seq > head:
+                raise JournalError(
+                    f"replication gap: record offset {expected_seq} but "
+                    f"standby has only applied {head}")
+        if raw is None:
+            raw = _wire().encode_record(rtype, payload)
+        if self._journal is not None:
+            self.store.chunks.sync()   # referenced chunks durable first
+            self._journal.append_raw(raw)
+        self._apply(rtype, payload)
+        self.replication.append_raw(raw)
+        return True
+
+    def set_replication_epoch(self, epoch: int) -> None:
+        """Adopt a replication epoch (standby role: a fresh follower learns
+        the primary's epoch on first contact).  Journaled as an epoch
+        marker, so the pairing of *offset × epoch* survives a standby
+        restart — a follower must never resume an old-epoch offset against
+        a newer-epoch primary."""
+        if self._journal is not None:
+            self._journal.append(_J_EPOCH, _wire().encode_uvarint(epoch))
+        self.replication.epoch = epoch
+
+    def _state_records(self) -> List[Tuple[int, bytes]]:
+        """The current committed state as a compacted record sequence —
+        what a snapshot persists and what a rolled-over replication log is
+        re-seeded with."""
         records: List[Tuple[int, bytes]] = []
         for lineage, lin in self.lineages.items():
             for rec in lin.version_records():
@@ -457,8 +640,40 @@ class Registry:
                                                    recipe)))
         for (lineage, tag), blob in self.metadata.items():
             records.append((_J_META, _encode_meta(lineage, tag, blob)))
-        write_snapshot(self._snap_path, records)
+        return records
+
+    def compact(self) -> None:
+        """Write the current state as a snapshot and truncate the journal.
+
+        The snapshot is the replication epoch marker followed by the
+        **replication log's own records, in log order** — not a re-derived
+        state dump — so a restart rebuilds the log byte-identically and
+        every standby's resume offset stays valid across primary
+        compactions and restarts.  The deliberate trade: snapshot size (and
+        the in-memory log) grow with the epoch's *record history* rather
+        than its live state — re-written metadata keys keep their old
+        records until a version-dropping sweep rolls the epoch.  Trimming
+        the log below the minimum acked standby offset needs a snapshot
+        bootstrap path for fresh standbys first (see ROADMAP).
+
+        Crash-safe in every window: the snapshot lands by atomic rename;
+        the reset journal immediately receives a ``_J_COMPACT`` boundary
+        marker naming the head the snapshot covers, so recovery can tell a
+        post-compaction journal from a stale one whose truncation was
+        interrupted (and in the latter case skips it and finishes the
+        truncation — no double-apply, no offset shift).
+        """
+        if self._journal is None:
+            return
+        wire = _wire()
+        epoch = self.replication.epoch
+        head = self.replication.head()
+        epoch_raw = wire.encode_record(_J_EPOCH, wire.encode_uvarint(epoch))
+        write_snapshot_raw(self._snap_path,
+                           [epoch_raw] + self.replication.dump())
         self._journal.reset()
+        self._journal.append(_J_COMPACT, wire.encode_uvarint(epoch)
+                             + wire.encode_uvarint(head))
 
     def journal_size_bytes(self) -> int:
         return self._journal.size_bytes() if self._journal is not None else 0
@@ -470,6 +685,16 @@ class Registry:
 
 
 # ---------------------------------------------------- journal record payloads
+
+def record_chunk_fps(rtype: int, payload: bytes) -> List[bytes]:
+    """The chunk fingerprints a replicated record references — what a
+    standby must hold *before* replaying it (a commit record's recipe fps;
+    metadata records reference none).  Unknown record types reference none
+    (forward compatibility: they are skipped by ``_apply`` too)."""
+    if rtype != _J_COMMIT:
+        return []
+    return list(_decode_commit(payload)[5].fps)
+
 
 def _encode_commit(lineage: str, tag: str, rec: VersionRecord,
                    recipe: Recipe) -> bytes:

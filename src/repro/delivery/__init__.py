@@ -32,21 +32,24 @@ them into a delivery *system* whose byte counts are real:
 from .cache import CacheStats, TieredChunkCache
 from .client import ImageClient
 from .delta import DeliveryError, DeliveryStats, DeltaSession
-from .net import (SocketRegistryServer, SocketServerStats, SocketTransport,
-                  serve_registry)
+from .net import (JournalFollower, SocketRegistryServer, SocketServerStats,
+                  SocketTransport, serve_registry)
 from .plan import PullPlan, SourceLeg, TransferReport
 from .server import RegistryServer, ServerStats
 from .swarm import SwarmNode, SwarmStats, SwarmTracker, swarm_pull
 from .transport import (FetchResult, LocalTransport, PushOutcome,
-                        SwarmTransport, Transport, WireTransport)
+                        ReplicatedTransport, SwarmTransport, Transport,
+                        WireTransport)
 from .wire import (ErrorCode, FrameType, Op, WireError, decode_chunk_batch,
                    decode_error, decode_frame, decode_has, decode_index,
                    decode_info, decode_missing, decode_receipt, decode_recipe,
-                   decode_request, decode_response, decode_tag_list,
+                   decode_record_frame, decode_repl_ack, decode_request,
+                   decode_response, decode_ship, decode_tag_list,
                    decode_tags_request, decode_want, encode_chunk_batch,
                    encode_error, encode_frame, encode_has, encode_index,
                    encode_info, encode_missing, encode_receipt, encode_recipe,
-                   encode_request, encode_response, encode_tag_list,
+                   encode_record_frame, encode_repl_ack, encode_request,
+                   encode_response, encode_ship, encode_tag_list,
                    encode_tags_request, encode_want)
 
 __all__ = [
@@ -55,11 +58,11 @@ __all__ = [
     "DeliveryError", "DeliveryStats", "DeltaSession",
     "PullPlan", "SourceLeg", "TransferReport",
     "RegistryServer", "ServerStats",
-    "SocketRegistryServer", "SocketServerStats", "SocketTransport",
-    "serve_registry",
+    "JournalFollower", "SocketRegistryServer", "SocketServerStats",
+    "SocketTransport", "serve_registry",
     "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
     "Transport", "LocalTransport", "WireTransport", "SwarmTransport",
-    "FetchResult", "PushOutcome",
+    "ReplicatedTransport", "FetchResult", "PushOutcome",
     "FrameType", "Op", "ErrorCode", "WireError",
     "encode_frame", "decode_frame",
     "encode_index", "decode_index",
@@ -73,6 +76,9 @@ __all__ = [
     "encode_error", "decode_error",
     "encode_receipt", "decode_receipt",
     "encode_info", "decode_info",
+    "encode_ship", "decode_ship",
+    "encode_record_frame", "decode_record_frame",
+    "encode_repl_ack", "decode_repl_ack",
     "encode_request", "decode_request",
     "encode_response", "decode_response",
 ]

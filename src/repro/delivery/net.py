@@ -25,11 +25,42 @@ pieces:
     category, and ``quote_chunk_batches`` lets ``plan_pull`` quote the full
     socket cost of a pull — envelope overhead included — to the byte.
 
+  * :class:`JournalFollower` — keeps a standby registry in sync with a
+    primary over the same envelope protocol: ``JOURNAL_SHIP`` streams
+    checksummed journal records from a resume offset, referenced chunk
+    payloads ride the ordinary WANT path, and ``REPL_ACK`` reports applied
+    progress back so the primary can publish standby lag.
+
 Server-side errors re-raise client-side as the matching exception
 (``DeliveryError`` / ``PushRejected`` / ``WireError``); transport-level
 failures (connection refused/reset, truncated stream, timeouts) surface as
 ``DeliveryError`` so a mid-pull server death fails the pull cleanly before
 anything is committed to the local store.
+
+Concurrency contract
+    ``SocketRegistryServer`` runs one daemon thread per connection plus the
+    acceptor; every request is answered through the wrapped
+    ``RegistryServer``'s handlers, which serialize registry mutations
+    behind ``_registry_lock`` and meter stats behind ``_stats_lock`` — so
+    any number of connections may pull, push, and ship concurrently.
+    ``SocketTransport`` is thread-safe: pooled connections are checked out
+    per exchange (``ImageClient.execute``'s pipelined batches genuinely
+    overlap on the network), and a connection whose stream state is in
+    doubt (I/O error, wire error) is closed, never re-pooled.
+    ``JournalFollower`` applies records from exactly one thread (its own,
+    or the caller of ``sync_once``) — standby registries have a single
+    writer, like primaries.
+
+Crash-recovery contract
+    The server owns no state of its own: everything durable lives in the
+    wrapped ``Registry`` (journal + chunk log, see
+    :mod:`repro.core.journal`), so killing the process at any point costs
+    at most the in-flight requests — clients see a truncated stream and
+    raise ``DeliveryError`` with nothing committed locally.  A standby that
+    crashes recovers its replication position from its own journal (records
+    applied == offset), re-requests from there, and duplicate or torn
+    shipped records are skipped / re-verified rather than re-applied —
+    see ``Registry.apply_replicated``.
 """
 
 from __future__ import annotations
@@ -40,8 +71,8 @@ import threading
 from typing import BinaryIO, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cdmt import CDMT, CDMTParams
-from repro.core.errors import DeliveryError
-from repro.core.registry import PushRejected, Registry
+from repro.core.errors import DeliveryError, JournalError
+from repro.core.registry import PushRejected, Registry, record_chunk_fps
 from repro.core.store import Recipe
 
 from . import wire
@@ -49,7 +80,8 @@ from .plan import SourceLeg
 from .server import RegistryServer
 from .transport import REGISTRY_SOURCE, FetchResult, PushOutcome
 
-__all__ = ["SocketRegistryServer", "SocketServerStats", "SocketTransport"]
+__all__ = ["JournalFollower", "SocketRegistryServer", "SocketServerStats",
+           "SocketTransport"]
 
 DEFAULT_TIMEOUT = 30.0
 
@@ -157,6 +189,20 @@ class SocketRegistryServer:
 
     def stop(self) -> None:
         self._closing = True
+        # closing a listener does NOT wake a thread blocked in accept() on
+        # every platform: shutdown() does on Linux (accept raises EINVAL),
+        # and the throwaway self-connection covers platforms where a
+        # listener shutdown is a no-op — without this, every stop() ate the
+        # full acceptor join timeout
+        try:
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            with socket.create_connection(self.address, timeout=0.5):
+                pass
+        except OSError:
+            pass
         try:
             self._listener.close()
         except OSError:
@@ -346,6 +392,12 @@ class SocketRegistryServer:
         if op is wire.Op.INFO:
             self._expect_frames(op, frames, 0)
             return [wire.encode_info(self.server.max_batch_chunks)]
+        if op is wire.Op.JOURNAL_SHIP:
+            self._expect_frames(op, frames, 1)
+            return self.server.handle_ship(frames[0])
+        if op is wire.Op.REPL_ACK:
+            self._expect_frames(op, frames, 1)
+            return [self.server.handle_repl_ack(frames[0])]
         if op is wire.Op.PUSH:
             if len(frames) < 2:
                 raise wire.WireError(
@@ -597,6 +649,39 @@ class SocketTransport:
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 
+    # ---------------------------------------------------------- replication
+
+    def ship_journal(self, replica: str, epoch: int, start: int,
+                     limit: int = 512
+                     ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """One JOURNAL_SHIP exchange: ``(primary_epoch, primary_head,
+        records)`` where ``records`` are checksum-verified ``(rtype,
+        payload, raw)`` triples from offset ``start`` (at most ``limit``).
+        A corrupt (torn) shipped record raises :class:`WireError` before
+        anything is returned — nothing half-verified reaches replay."""
+        _, frames, _ = self._exchange(
+            wire.Op.JOURNAL_SHIP, "", "",
+            [wire.encode_ship(replica, epoch, start, limit)])
+        _, srv_epoch, head = wire.decode_repl_ack(frames[0])
+        records = [wire.decode_record_frame(f) for f in frames[1:]]
+        return srv_epoch, head, records
+
+    def ack_journal(self, replica: str, epoch: int,
+                    offset: int) -> Tuple[int, int]:
+        """Report applied progress; returns the primary's
+        ``(epoch, head)``."""
+        _, frames, _ = self._exchange(
+            wire.Op.REPL_ACK, "", "",
+            [wire.encode_repl_ack(replica, epoch, offset)])
+        _, srv_epoch, head = wire.decode_repl_ack(frames[0])
+        return srv_epoch, head
+
+    def replication_status(self) -> Tuple[int, int]:
+        """The remote registry's ``(epoch, head)`` — a cheap liveness and
+        freshness probe (a SHIP with a record budget of 0)."""
+        epoch, head, _ = self.ship_journal("", 0, 0, 0)
+        return epoch, head
+
     # -------------------------------------------------------------- quoting
 
     def quote_chunk_batches(self, sizes: Sequence[int]) -> int:
@@ -606,6 +691,164 @@ class SocketTransport:
         request batch, making a socket plan's quote byte-exact."""
         lens = wire.chunk_batch_frame_lens(sizes, self.response_batch_chunks)
         return wire.response_envelope_bytes(lens)
+
+
+# ------------------------------------------------------------- replication
+
+
+class JournalFollower:
+    """Keeps a standby :class:`Registry` in sync with a primary by
+    following the primary's replication log.
+
+    ``primary`` is any transport exposing ``ship_journal`` / ``ack_journal``
+    / ``fetch_chunks`` (a :class:`SocketTransport` for a real standby, a
+    ``WireTransport`` for in-process tests).  One sync round per record
+    batch:
+
+      1. ship records from the standby's own position — ``(epoch, head)``
+         of ``registry.replication``, which counts exactly the records it
+         has applied and survives a standby restart via journal replay (a
+         fresh standby adopts the primary's epoch on first contact,
+         durably) — so the follower itself is stateless;
+      2. per record: fetch any referenced chunk payloads the standby is
+         missing over the ordinary WANT path (payloads are fingerprint-
+         verified on decode), store them, then
+         :meth:`Registry.apply_replicated` — which skips duplicates, so a
+         crash between apply and ack (or a torn ship re-sent whole) replays
+         idempotently;
+      3. ack the new head, so the primary can report standby lag.
+
+    A record whose checksum fails decodes as :class:`WireError` *before*
+    step 2 — a torn ship never half-applies.  :meth:`follow` runs
+    :meth:`sync_once` in a daemon thread, absorbing transport and
+    divergence errors (primary temporarily down, epoch rolled by a GC
+    sweep) into ``last_error`` and retrying; an epoch mismatch persists in
+    ``last_error`` until the operator full-resyncs the standby from an
+    empty directory.
+    """
+
+    def __init__(self, registry: Registry, primary, name: str = "standby",
+                 batch_records: int = 512, chunk_batch: int = 64,
+                 poll_interval: float = 0.2):
+        self.registry = registry
+        self.primary = primary
+        self.name = name
+        self.batch_records = max(1, batch_records)
+        self.chunk_batch = max(1, chunk_batch)
+        self.poll_interval = poll_interval
+        self.records_applied = 0
+        self.duplicates_skipped = 0
+        self.chunks_fetched = 0
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------------- sync
+
+    def lag(self) -> int:
+        """Records the primary has committed that this standby has not."""
+        _, head = self.primary.replication_status()
+        return max(0, head - self.registry.replication.head())
+
+    def sync_once(self) -> int:
+        """Catch up to the primary's current head; returns records applied.
+
+        The standby's **own persisted** ``(epoch, head)`` is the resume
+        position — never a freshly probed epoch, which would let a restart
+        silently resume old-epoch offsets against a newer-epoch primary.  A
+        truly fresh standby (nothing applied, epoch 0) adopts the primary's
+        current epoch durably before its first ship."""
+        log = self.registry.replication
+        if log.head() == 0 and log.epoch == 0:
+            p_epoch, _ = self.primary.replication_status()
+            if p_epoch != 0:
+                self.registry.set_replication_epoch(p_epoch)
+        applied = 0
+        while True:
+            start = log.head()
+            epoch, head, records = self.primary.ship_journal(
+                self.name, log.epoch, start, self.batch_records)
+            for i, (rtype, payload, raw) in enumerate(records):
+                self._fetch_referenced_chunks(start + i, rtype, payload)
+                if self.registry.apply_replicated(rtype, payload,
+                                                  expected_seq=start + i,
+                                                  raw=raw):
+                    applied += 1
+                    self.records_applied += 1
+                else:
+                    self.duplicates_skipped += 1
+            new_head = log.head()
+            self.primary.ack_journal(self.name, epoch, new_head)
+            if new_head >= head:
+                return applied
+
+    def _fetch_referenced_chunks(self, seq: int, rtype: int,
+                                 payload: bytes) -> None:
+        """Chunks must land before the record is applied — a standby must
+        never index a version whose payloads it cannot serve."""
+        missing = self.registry.store.missing(record_chunk_fps(rtype,
+                                                               payload))
+        if not missing:
+            return
+        got: Dict[bytes, bytes] = {}
+        for s in range(0, len(missing), self.chunk_batch):
+            res = self.primary.fetch_chunks("", "",
+                                            missing[s:s + self.chunk_batch])
+            got.update(res.chunks)
+        still = [fp for fp in missing if fp not in got]
+        if still:
+            raise DeliveryError(
+                f"replication: primary cannot serve {len(still)} chunk(s) "
+                f"referenced by record {seq} "
+                f"(first: {still[0].hex()[:12]})")
+        for fp, data in got.items():
+            self.registry.store.chunks.put(fp, data)
+        self.chunks_fetched += len(got)
+
+    # ------------------------------------------------------------ background
+
+    def follow(self) -> "JournalFollower":
+        """Sync continuously in a daemon thread until :meth:`stop`.
+
+        At most one applier thread ever runs: a second ``follow`` while the
+        first is alive is a no-op, and if a previous :meth:`stop` timed out
+        with its thread still draining a blocked exchange, ``follow``
+        refuses rather than start a concurrent applier (standby registries
+        are single-writer).  Each generation gets its own stop event, so a
+        lingering old thread can never be revived by a new start."""
+        if self._thread is not None and self._thread.is_alive():
+            if self._stop.is_set():
+                raise DeliveryError(
+                    "journal follower is still stopping (previous thread "
+                    "draining a blocked exchange) — retry after it exits")
+            return self
+        stop = threading.Event()
+        self._stop = stop
+
+        def loop():
+            while not stop.is_set():
+                try:
+                    self.sync_once()
+                    self.last_error = None
+                except (DeliveryError, wire.WireError, JournalError,
+                        OSError) as e:
+                    # primary down / mid-restart / diverged: record and
+                    # retry — the thread must never die silently
+                    self.last_error = e
+                stop.wait(self.poll_interval)
+
+        self._thread = threading.Thread(target=loop, name="journal-follower",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            if not self._thread.is_alive():
+                self._thread = None   # else: keep it visible so follow()
+                                      # refuses to double-start
 
 
 def serve_registry(registry: Registry, host: str = "127.0.0.1",

@@ -31,6 +31,7 @@ import dataclasses
 import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core.errors import DeliveryError
 from repro.core.registry import PushReceipt, Registry
 from repro.core.store import Recipe
 
@@ -47,6 +48,9 @@ class ServerStats:
     want_requests: int = 0
     has_requests: int = 0          # HAS presence queries answered
     tags_requests: int = 0         # TAGS listing queries answered
+    ship_requests: int = 0         # JOURNAL_SHIP requests answered
+    records_shipped: int = 0       # journal records streamed to standbys
+    repl_acks: int = 0             # REPL_ACK progress reports received
     chunks_served: int = 0
     chunk_bytes_served: int = 0
     store_reads: int = 0           # chunk reads that reached cache/store
@@ -84,6 +88,9 @@ class RegistryServer:
         self._registry_lock = threading.RLock()   # Registry itself is not MT-safe
         self._inflight: Dict[bytes, _InFlight] = {}
         self._inflight_lock = threading.Lock()
+        # replica name -> last acked replication offset (observability: a
+        # primary can report standby lag without polling the standbys)
+        self.replica_offsets: Dict[str, int] = {}
         if warm_start and registry.store.chunks.directory is not None:
             self.stats.warmed_chunks = self._warm_from_store(warm_scan_limit)
 
@@ -222,6 +229,62 @@ class RegistryServer:
         with self._stats_lock:
             self.stats.tags_requests += 1
             self.stats.ingress_bytes += len(tags_frame)
+            self.stats.egress_bytes += len(resp)
+        return resp
+
+    # ------------------------------------------------------------ replication
+
+    def handle_ship(self, ship_frame: bytes) -> List[bytes]:
+        """Answer a SHIP request: one REPL_ACK frame carrying the primary's
+        epoch + log head, then up to ``limit`` RECORD frames from the
+        requested offset.
+
+        ``limit == 0`` is a pure status probe (freshness query) and is
+        answered regardless of the follower's epoch; with ``limit > 0`` an
+        epoch mismatch raises :class:`DeliveryError` — offsets from another
+        epoch are meaningless and replaying across one would corrupt the
+        standby.
+        """
+        replica, epoch, start, limit = wire.decode_ship(ship_frame)
+        log = self.registry.replication
+        with self._registry_lock:
+            if limit and epoch != log.epoch:
+                raise DeliveryError(
+                    f"replication epoch mismatch: primary is at epoch "
+                    f"{log.epoch}, {replica or 'standby'} asked for epoch "
+                    f"{epoch} — the standby must full-resync from an empty "
+                    f"directory")
+            records = log.records_from(start, limit) if limit else []
+            head = log.head()
+            cur_epoch = log.epoch
+        frames = [wire.encode_repl_ack("", cur_epoch, head)]
+        frames += [wire.encode_record_frame(r) for r in records]
+        with self._stats_lock:
+            self.stats.ship_requests += 1
+            self.stats.records_shipped += len(records)
+            self.stats.ingress_bytes += len(ship_frame)
+            self.stats.egress_bytes += sum(len(f) for f in frames)
+        return frames
+
+    def handle_repl_ack(self, ack_frame: bytes) -> bytes:
+        """Record a standby's applied offset; reply with the primary's
+        current epoch + head so the follower knows its remaining lag.
+
+        An ack from another epoch (a late report racing a GC rollover)
+        carries a meaningless offset: it is dropped — and any offset the
+        replica reported under the old epoch is forgotten — so the lag
+        table never mixes offsets across epochs."""
+        replica, epoch, offset = wire.decode_repl_ack(ack_frame)
+        log = self.registry.replication
+        with self._registry_lock:
+            if epoch == log.epoch:
+                self.replica_offsets[replica] = offset
+            else:
+                self.replica_offsets.pop(replica, None)
+            resp = wire.encode_repl_ack(replica, log.epoch, log.head())
+        with self._stats_lock:
+            self.stats.repl_acks += 1
+            self.stats.ingress_bytes += len(ack_frame)
             self.stats.egress_bytes += len(resp)
         return resp
 

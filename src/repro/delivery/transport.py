@@ -26,7 +26,9 @@ chunk traffic flows only through ``fetch_chunks``/``push``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple,\
+import itertools
+import threading
+from typing import Dict, List, Optional, Protocol, Sequence, Set, Tuple,\
     runtime_checkable
 
 from repro.core.cdmt import CDMT, CDMTParams
@@ -169,6 +171,12 @@ class LocalTransport:
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 
+    def replication_status(self) -> Tuple[int, int]:
+        """The registry's replication ``(epoch, head)`` — liveness and
+        freshness probe used by :class:`ReplicatedTransport`."""
+        log = self.registry.replication
+        return log.epoch, log.head()
+
 
 # ----------------------------------------------------------------------- wire
 
@@ -253,6 +261,30 @@ class WireTransport:
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
+
+    # ---------------------------------------------------------- replication
+
+    def ship_journal(self, replica: str, epoch: int, start: int,
+                     limit: int = 512
+                     ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """In-process JOURNAL_SHIP (same frames the socket path ships):
+        ``(epoch, head, checksum-verified (rtype, payload, raw) records)``."""
+        frames = self.server.handle_ship(
+            wire.encode_ship(replica, epoch, start, limit))
+        _, srv_epoch, head = wire.decode_repl_ack(frames[0])
+        return srv_epoch, head, [wire.decode_record_frame(f)
+                                 for f in frames[1:]]
+
+    def ack_journal(self, replica: str, epoch: int,
+                    offset: int) -> Tuple[int, int]:
+        resp = self.server.handle_repl_ack(
+            wire.encode_repl_ack(replica, epoch, offset))
+        _, srv_epoch, head = wire.decode_repl_ack(resp)
+        return srv_epoch, head
+
+    def replication_status(self) -> Tuple[int, int]:
+        epoch, head, _ = self.ship_journal("", 0, 0, 0)
+        return epoch, head
 
 
 # ---------------------------------------------------------------------- swarm
@@ -353,3 +385,318 @@ class SwarmTransport:
     def notify_pulled(self, lineage: str, tag: str) -> None:
         # freshly provisioned ⇒ this node can now serve the version
         self.tracker.register(lineage, tag, self.node)
+
+
+# ----------------------------------------------------------------- replicated
+
+class ReplicatedTransport:
+    """N replicas of one registry behind a single :class:`Transport`.
+
+    ``replicas`` are transports to registries kept in sync by journal
+    shipping (see :class:`repro.delivery.net.JournalFollower`); index
+    ``primary`` is the one accepting pushes.  Behavior:
+
+      * **Writes** (``push``, and the authoritative control reads
+        ``get_index`` / ``get_recipe`` / ``tags`` / ``has_chunks``) go to
+        the current primary.  The root the primary returns for a tag is
+        remembered — it is the freshness reference every standby is checked
+        against.
+      * **Chunk reads** (``fetch_chunks``) rotate across live replicas, so
+        N replicas each carry ~1/N of the data-plane egress.  Before a
+        standby serves its first batch of a pull, it is **probed**: its
+        index for the tag must exist and hash to the primary-recorded root.
+        A standby that fails the probe — or omits requested payloads — is
+        *stale* for that tag: the batch (and the tag's later batches) fall
+        through to the next replica and finally the primary, and the
+        stale-detection is counted on ``stale_detected``.  Probe and
+        failed-round traffic rides in ``want_bytes`` on the replica's
+        :class:`~repro.delivery.plan.SourceLeg`, so the plan identity
+        ``index + recipe + chunk_bytes == expected_wire_bytes`` stays exact.
+      * **Promotion**: a replica whose transport fails is health-probed
+        (``replication_status`` — a zero-budget JOURNAL_SHIP); a dead
+        primary is replaced by the standby with the freshest replication
+        position (highest ``(epoch, head)`` — freshest-root wins, since the
+        head counts committed roots), mid-pull, without failing the client
+        operation.  ``promotions`` counts them.
+
+    Quote exactness (``plan_pull``): delegated to the primary's own quoting
+    hook.  Replicas of one primary should be configured with the same
+    response batch split — then a batch's chunk bytes are identical
+    whichever replica serves it, and a replicated plan quotes socket bytes
+    (envelopes included) to the byte.
+
+    Thread-safe: ``ImageClient.execute`` fans pipelined batches across
+    threads; rotation, death/staleness marks, and promotion are guarded by
+    one lock, held only around bookkeeping (never across network calls).
+    """
+
+    name = "replicated"
+
+    # instances start their read rotation at staggered positions, so a
+    # fleet of single-batch pullers (each its own transport) spreads across
+    # the replicas instead of all electing the same first choice
+    _stagger = itertools.count()
+
+    def __init__(self, replicas: Sequence[Transport], primary: int = 0):
+        if not replicas:
+            raise ValueError("ReplicatedTransport needs at least one replica")
+        if not 0 <= primary < len(replicas):
+            raise ValueError(f"primary index {primary} out of range")
+        self.replicas: List[Transport] = list(replicas)
+        self.verifies_payloads = all(t.verifies_payloads
+                                     for t in self.replicas)
+        self._lock = threading.Lock()
+        self._primary = primary
+        self._dead: Set[int] = set()
+        self._stale: Dict[Tuple[str, str], Set[int]] = {}
+        self._checked: Dict[Tuple[str, str], Set[int]] = {}
+        self._roots: Dict[Tuple[str, str], Optional[bytes]] = {}
+        self._rr = next(ReplicatedTransport._stagger)
+        self.promotions = 0        # primaries replaced after death
+        self.stale_detected = 0    # stale replica probes/fetches absorbed
+
+    # ------------------------------------------------------------- lifecycle
+
+    @property
+    def primary_index(self) -> int:
+        with self._lock:
+            return self._primary
+
+    @property
+    def primary_transport(self) -> Transport:
+        with self._lock:
+            return self.replicas[self._primary]
+
+    def close(self) -> None:
+        for t in self.replicas:
+            close = getattr(t, "close", None)
+            if close is not None:
+                close()
+
+    def __enter__(self) -> "ReplicatedTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------- health bookkeeping
+
+    def _mark_dead(self, idx: int) -> None:
+        with self._lock:
+            self._dead.add(idx)
+
+    def _mark_stale(self, idx: int, key: Tuple[str, str]) -> None:
+        with self._lock:
+            self._stale.setdefault(key, set()).add(idx)
+            self.stale_detected += 1
+
+    def _probe_alive(self, idx: int) -> bool:
+        """Distinguish a dead replica from a live one returning a protocol
+        error: a zero-budget ship must succeed on any live registry."""
+        status = getattr(self.replicas[idx], "replication_status", None)
+        if status is None:
+            return True
+        try:
+            status()
+            return True
+        except DeliveryError:
+            return False
+
+    def _promote(self) -> None:
+        """Replace a dead primary with the freshest live standby (highest
+        ``(epoch, head)`` replication position)."""
+        with self._lock:
+            if self._primary not in self._dead:
+                return                     # another thread already promoted
+            candidates = [i for i in range(len(self.replicas))
+                          if i not in self._dead]
+        best: Optional[int] = None
+        best_pos = (-1, -1)
+        for i in candidates:
+            status = getattr(self.replicas[i], "replication_status", None)
+            if status is None:
+                pos = (0, 0)
+            else:
+                try:
+                    pos = status()
+                except DeliveryError:
+                    self._mark_dead(i)
+                    continue
+            if pos > best_pos:
+                best, best_pos = i, pos
+        if best is None:
+            raise DeliveryError(
+                "replicated transport: primary is dead and no standby is "
+                "reachable")
+        with self._lock:
+            if self._primary in self._dead:
+                self._primary = best
+                self.promotions += 1
+
+    def _on_primary(self, fn):
+        """Run ``fn(primary_transport)``; a dead primary is replaced by the
+        freshest standby and the call retried there.  Protocol-level errors
+        from a live primary (unknown tag, rejected push) re-raise."""
+        for _ in range(len(self.replicas) + 1):
+            with self._lock:
+                idx = self._primary
+            try:
+                return fn(self.replicas[idx])
+            except DeliveryError:
+                if self._probe_alive(idx):
+                    raise
+                self._mark_dead(idx)
+                self._promote()
+        raise DeliveryError("replicated transport: no live replica")
+
+    # --------------------------------------------- control plane (primary)
+
+    def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        tree, nbytes = self._on_primary(lambda t: t.get_index(lineage, tag))
+        with self._lock:
+            self._roots[(lineage, tag)] = tree.root
+        return tree, nbytes
+
+    def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        return self._on_primary(lambda t: t.get_latest_index(lineage))
+
+    def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        return self._on_primary(lambda t: t.get_recipe(lineage, tag))
+
+    def tags(self, lineage: str) -> List[str]:
+        return self._on_primary(lambda t: t.tags(lineage))
+
+    def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        return self._on_primary(lambda t: t.has_chunks(fps))
+
+    def push(self, lineage: str, tag: str, recipe: Recipe,
+             chunks: Dict[bytes, bytes], *,
+             parent_version: Optional[int] = None,
+             claimed_root: Optional[bytes] = None,
+             claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        return self._on_primary(lambda t: t.push(
+            lineage, tag, recipe, chunks, parent_version=parent_version,
+            claimed_root=claimed_root, claimed_params=claimed_params))
+
+    def notify_pulled(self, lineage: str, tag: str) -> None:
+        pass
+
+    # ------------------------------------------------- data plane (fan-out)
+
+    def _source_name(self, idx: int) -> str:
+        with self._lock:
+            primary = self._primary
+        return REGISTRY_SOURCE if idx == primary else f"replica:{idx}"
+
+    def _read_order(self, key: Tuple[str, str]) -> List[int]:
+        """Live, not-stale-for-this-tag replicas, rotated one step per call
+        — consecutive batches land on different replicas."""
+        with self._lock:
+            live = [i for i in range(len(self.replicas))
+                    if i not in self._dead
+                    and i not in self._stale.get(key, ())]
+            if not live:
+                return [self._primary]
+            start = self._rr % len(live)
+            self._rr += 1
+            return live[start:] + live[:start]
+
+    def _probe_fresh(self, idx: int, key: Tuple[str, str]) -> Tuple[bool, int]:
+        """One KB-sized index fetch against a standby before its first batch
+        of a pull: the tag must exist there and hash to the root the primary
+        served.  Returns ``(fresh, probe_wire_bytes)``."""
+        try:
+            tree, nbytes = self.replicas[idx].get_index(*key)
+        except DeliveryError:
+            if self._probe_alive(idx):
+                self._mark_stale(idx, key)     # tag not replicated yet
+            else:
+                self._mark_dead(idx)
+            return False, 0
+        with self._lock:
+            expected = self._roots.setdefault(key, tree.root)
+        if tree.root != expected:
+            self._mark_stale(idx, key)         # diverged: CDMT root mismatch
+            return False, nbytes
+        with self._lock:
+            self._checked.setdefault(key, set()).add(idx)
+        return True, nbytes
+
+    def fetch_chunks(self, lineage: str, tag: str,
+                     fps: Sequence[bytes]) -> FetchResult:
+        key = (lineage, tag)
+        chunks: Dict[bytes, bytes] = {}
+        legs: List[SourceLeg] = []
+        wanted = list(fps)
+        primary_answered = False
+        for idx in self._read_order(key):
+            if not wanted:
+                break
+            with self._lock:
+                is_primary = idx == self._primary
+                checked = idx in self._checked.get(key, ())
+                if idx in self._stale.get(key, ()) or idx in self._dead:
+                    continue
+            probe_bytes = 0
+            if not is_primary and not checked:
+                fresh, probe_bytes = self._probe_fresh(idx, key)
+                if not fresh:
+                    legs.append(SourceLeg(source=self._source_name(idx),
+                                          want_bytes=probe_bytes, rounds=1,
+                                          failures=1))
+                    continue
+            try:
+                res = self.replicas[idx].fetch_chunks(lineage, tag, wanted)
+            except DeliveryError:
+                if self._probe_alive(idx):
+                    raise                      # protocol error from a live one
+                name = self._source_name(idx)  # before promotion renames it
+                self._mark_dead(idx)
+                if is_primary:
+                    # promote NOW, mid-pull — later batches and the next
+                    # control-plane call go straight to the new primary
+                    try:
+                        self._promote()
+                    except DeliveryError:
+                        pass       # no standby left: the loop (and finally
+                                   # _on_primary) surface it if chunks remain
+                legs.append(SourceLeg(source=name, want_bytes=probe_bytes,
+                                      rounds=1, failures=1))
+                continue
+            name = self._source_name(idx)
+            for leg in res.legs:
+                leg.source = name
+            if res.legs and probe_bytes:
+                res.legs[0].want_bytes += probe_bytes
+            legs.extend(res.legs)
+            chunks.update(res.chunks)
+            wanted = [fp for fp in wanted if fp not in res.chunks]
+            if is_primary:
+                primary_answered = True
+            elif wanted:
+                # a fresh-looking standby omitted payloads its index
+                # references: its chunk store lags — stale for this tag,
+                # the remainder falls through to the next source
+                self._mark_stale(idx, key)
+        if wanted and not primary_answered:
+            # rotation never reached a (live) primary: ask it directly,
+            # promoting first if the old primary died mid-pull
+            res = self._on_primary(
+                lambda t: t.fetch_chunks(lineage, tag, wanted))
+            for leg in res.legs:
+                leg.source = REGISTRY_SOURCE
+            legs.extend(res.legs)
+            chunks.update(res.chunks)
+        return FetchResult(chunks=chunks, legs=legs)
+
+    # -------------------------------------------------------------- quoting
+
+    def quote_chunk_batches(self, sizes: Sequence[int]) -> int:
+        """Quote via the primary's framing.  Exact when every replica
+        serves the same response batch split (deploy them that way)."""
+        t = self.primary_transport
+        quote = getattr(t, "quote_chunk_batches", None)
+        if quote is not None:
+            return quote(sizes)
+        sub = getattr(t, "response_batch_chunks", None) or max(1, len(sizes))
+        return wire.chunk_batches_wire_bytes(sizes, sub)

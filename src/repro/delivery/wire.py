@@ -28,6 +28,15 @@ frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
                    what a socket push gets back instead of a Python object.
   ``INFO``         server parameters a client needs to quote costs exactly
                    (today: the server's response batch split).
+  ``SHIP``         a standby's journal-ship request: replica name, epoch,
+                   resume offset, record budget (0 = pure status probe).
+  ``RECORD``       one checksummed journal record in transit — the payload
+                   is the *encoded* record (``wire.encode_record`` bytes),
+                   so a standby re-verifies the checksum before replay.
+  ``REPL_ACK``     replication position: replica name, epoch, offset.  Sent
+                   by a standby to report applied progress, and returned by
+                   the primary (as a ship-response header and as the ack
+                   reply) to publish its current epoch and log head.
 
 All decoders raise :class:`WireError` on truncation, bad magic, trailing
 garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
@@ -74,6 +83,9 @@ class FrameType(enum.IntEnum):
     ERROR = 10
     RECEIPT = 11
     INFO = 12
+    SHIP = 13
+    RECORD = 14
+    REPL_ACK = 15
 
 
 class Op(enum.IntEnum):
@@ -86,6 +98,8 @@ class Op(enum.IntEnum):
     PUSH = 6           # PUSH_HDR + RECIPE + CHUNK_BATCH* -> RECEIPT frame
     TAGS = 7           # TAGS frame -> TAG_LIST frame
     INFO = 8           # -> INFO frame
+    JOURNAL_SHIP = 9   # SHIP frame -> REPL_ACK frame + RECORD frames
+    REPL_ACK = 10      # REPL_ACK frame -> REPL_ACK frame (primary's head)
 
 
 class ErrorCode(enum.IntEnum):
@@ -581,6 +595,72 @@ def decode_info(buf: bytes) -> int:
     if off != len(payload):
         raise WireError("trailing bytes in INFO payload")
     return val
+
+
+# ------------------------------------------- SHIP / RECORD / REPL_ACK
+#
+# Journal replication (standby follows primary).  A SHIP request names the
+# replica, the epoch it believes the primary is in, the record offset to
+# resume from, and a record budget; the answer is one REPL_ACK frame (the
+# primary's epoch + log head) followed by RECORD frames, each wrapping one
+# checksummed journal record verbatim.  A budget of 0 is a pure status
+# probe — the freshness query replica-aware transports use for promotion.
+
+def encode_ship(replica: str, epoch: int, start: int, limit: int) -> bytes:
+    return encode_frame(FrameType.SHIP,
+                        _encode_str(replica) + encode_uvarint(epoch)
+                        + encode_uvarint(start) + encode_uvarint(limit))
+
+
+def decode_ship(buf: bytes) -> Tuple[str, int, int, int]:
+    """``(replica, epoch, start_offset, limit)``."""
+    payload = _decode_single(buf, FrameType.SHIP)
+    replica, off = _decode_str(payload, 0, "ship replica")
+    epoch, off = decode_uvarint(payload, off)
+    start, off = decode_uvarint(payload, off)
+    limit, off = decode_uvarint(payload, off)
+    if off != len(payload):
+        raise WireError("trailing bytes in SHIP payload")
+    return replica, epoch, start, limit
+
+
+def encode_record_frame(raw_record: bytes) -> bytes:
+    """Wrap one already-encoded checksummed record (the bytes
+    :func:`encode_record` produced — what a :class:`ReplicationLog`
+    stores) for transit."""
+    return encode_frame(FrameType.RECORD, raw_record)
+
+
+def decode_record_frame(buf: bytes) -> Tuple[int, bytes, bytes]:
+    """Unwrap and **verify** one shipped record: the inner checksum must
+    match and the record must fill the frame exactly.  Returns ``(rtype,
+    payload, raw)`` — the arguments a standby replays plus the verified
+    encoding itself, so the standby re-journals the primary's exact bytes
+    without re-encoding."""
+    raw = _decode_single(buf, FrameType.RECORD)
+    rtype, payload, noff = decode_record(raw, 0)
+    if noff != len(raw):
+        raise WireError(f"{len(raw) - noff} trailing bytes after shipped "
+                        f"record")
+    return rtype, payload, raw
+
+
+def encode_repl_ack(replica: str, epoch: int, offset: int) -> bytes:
+    return encode_frame(FrameType.REPL_ACK,
+                        _encode_str(replica) + encode_uvarint(epoch)
+                        + encode_uvarint(offset))
+
+
+def decode_repl_ack(buf: bytes) -> Tuple[str, int, int]:
+    """``(replica, epoch, offset)`` — a replica's applied position (request
+    direction) or the primary's log head (response direction)."""
+    payload = _decode_single(buf, FrameType.REPL_ACK)
+    replica, off = _decode_str(payload, 0, "repl-ack replica")
+    epoch, off = decode_uvarint(payload, off)
+    offset, off = decode_uvarint(payload, off)
+    if off != len(payload):
+        raise WireError("trailing bytes in REPL_ACK payload")
+    return replica, epoch, offset
 
 
 # --------------------------------------------------------------- envelopes

@@ -1,0 +1,717 @@
+"""Registry replication over journal shipping.
+
+Three layers under test:
+
+  * the **wire contract**: SHIP / RECORD / REPL_ACK codecs round-trip, and a
+    torn (truncated or bit-flipped) shipped record fails its checksum
+    *before* replay;
+  * the **follower protocol**: a standby syncs a primary's full history,
+    resumes incrementally from its own applied offset (which survives a
+    standby restart — including one that tore the standby journal's tail),
+    replays duplicate deliveries idempotently, and refuses epoch gaps;
+  * the **replicated transport**: reads fan across replicas, a stale
+    replica is detected by CDMT root mismatch and the pull completes
+    byte-identically against the primary, and a primary death mid-pull
+    promotes the freshest standby with zero failed pulls — the acceptance
+    gate for the paper's registry being highly available, not just durable.
+"""
+
+import os
+
+import pytest
+
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams
+from repro.core.errors import DeliveryError, JournalError
+from repro.core.journal import ReplicationLog
+from repro.core.registry import Registry, record_chunk_fps
+from repro.delivery import (ImageClient, JournalFollower, LocalTransport,
+                            RegistryServer, ReplicatedTransport,
+                            SocketRegistryServer, SocketTransport,
+                            WireTransport, wire)
+
+PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+P = CDMTParams(window=4, rule_bits=2)
+
+
+def _rand(n, seed=0):
+    import numpy as np
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def _versions(n_versions=5, size=120_000, seed=0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    data = bytearray(_rand(size, seed))
+    out = [bytes(data)]
+    for _ in range(n_versions - 1):
+        for _ in range(3):
+            pos = rng.integers(0, len(data) - 100)
+            data[pos:pos + 64] = rng.bytes(64)
+        out.append(bytes(data))
+    return out
+
+
+def _seed_registry(versions, lineage="app", directory=None):
+    reg = Registry(directory=directory, cdmt_params=P)
+    pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS, cdmt_params=P)
+    for i, v in enumerate(versions):
+        pub.commit(lineage, f"v{i}", v)
+        pub.push(lineage, f"v{i}")
+    return reg
+
+
+def _assert_registries_equal(a: Registry, b: Registry, lineage="app"):
+    assert a.tags(lineage) == b.tags(lineage)
+    for tag in a.tags(lineage):
+        assert a.index_for_tag(lineage, tag).root \
+            == b.index_for_tag(lineage, tag).root
+        assert a.recipe_for(lineage, tag).fps == b.recipe_for(lineage,
+                                                             tag).fps
+    # every referenced payload is servable from the standby
+    for tag in a.tags(lineage):
+        fps = a.recipe_for(lineage, tag).fps
+        assert b.store.missing(fps) == []
+
+
+# ------------------------------------------------------------- wire contract
+
+
+class TestShipCodecs:
+    def test_ship_roundtrip(self):
+        frame = wire.encode_ship("standby-1", 3, 17, 256)
+        assert wire.decode_ship(frame) == ("standby-1", 3, 17, 256)
+        with pytest.raises(wire.WireError):
+            wire.decode_ship(frame[:-1])
+        with pytest.raises(wire.WireError):
+            wire.decode_ship(frame + b"x")
+
+    def test_repl_ack_roundtrip(self):
+        frame = wire.encode_repl_ack("s0", 1, 42)
+        assert wire.decode_repl_ack(frame) == ("s0", 1, 42)
+        with pytest.raises(wire.WireError):
+            wire.decode_repl_ack(wire.encode_ship("s0", 1, 42, 0))
+
+    def test_record_frame_roundtrip_and_checksum(self):
+        raw = wire.encode_record(7, b"some committed payload")
+        frame = wire.encode_record_frame(raw)
+        assert wire.decode_record_frame(frame) \
+            == (7, b"some committed payload", raw)
+        # torn in transit: truncated record fails before replay
+        torn = wire.encode_record_frame(raw[:-3])
+        with pytest.raises(wire.WireError):
+            wire.decode_record_frame(torn)
+        # bit-flipped in transit: checksum catches it
+        flipped = bytearray(raw)
+        flipped[len(raw) // 2] ^= 0xFF
+        with pytest.raises(wire.WireError):
+            wire.decode_record_frame(wire.encode_record_frame(bytes(flipped)))
+
+    def test_replication_log_offsets(self):
+        log = ReplicationLog()
+        assert log.head() == 0 and log.epoch == 0
+        log.append(1, b"a")
+        log.append(1, b"b")
+        log.append(2, b"c")
+        assert log.head() == 3
+        assert len(log.records_from(1)) == 2
+        assert len(log.records_from(0, limit=2)) == 2
+        assert log.records_from(3) == []           # caught-up follower
+        with pytest.raises(JournalError):
+            log.records_from(4)                    # diverged follower
+        assert log.rollover() == 1
+        assert log.head() == 0 and log.epoch == 1
+
+    def test_record_chunk_fps(self):
+        reg = _seed_registry(_versions(2, seed=10))
+        raw = reg.replication.records_from(0, 1)[0]
+        rtype, payload, _ = wire.decode_record(raw, 0)
+        fps = record_chunk_fps(rtype, payload)
+        assert fps == reg.recipe_for("app", "v0").fps
+        reg.put_metadata("app", "v0", b"manifest")
+        raw_meta = reg.replication.records_from(reg.replication.head() - 1,
+                                                1)[0]
+        rtype, payload, _ = wire.decode_record(raw_meta, 0)
+        assert record_chunk_fps(rtype, payload) == []
+
+
+# --------------------------------------------------------------- the tap
+
+
+class TestReplicationTap:
+    def test_commits_and_metadata_feed_the_log(self):
+        versions = _versions(3, seed=11)
+        reg = _seed_registry(versions)
+        assert reg.replication.head() == 3
+        reg.put_metadata("app", "v0", b"manifest")
+        assert reg.replication.head() == 4
+
+    def test_recovery_rebuilds_offsets(self, tmp_path):
+        """A primary restart must not invalidate standby resume offsets."""
+        versions = _versions(3, seed=12)
+        reg = _seed_registry(versions, directory=str(tmp_path))
+        head = reg.replication.head()
+        records = reg.replication.records_from(0)
+        reg.close()
+        back = Registry(directory=str(tmp_path), cdmt_params=P)
+        try:
+            assert back.replication.head() == head
+            assert back.replication.records_from(0) == records
+        finally:
+            back.close()
+
+    def test_compact_preserves_offsets(self, tmp_path):
+        versions = _versions(3, seed=13)
+        reg = _seed_registry(versions, directory=str(tmp_path))
+        head = reg.replication.head()
+        reg.compact()
+        assert reg.replication.head() == head      # journal truncation is
+        reg.close()                                # local, offsets logical
+
+    def test_offsets_survive_compact_restart_with_interleaved_records(
+            self, tmp_path):
+        """Regression: the snapshot must preserve the replication log's
+        *live* record order (commits and metadata interleaved), not a
+        re-derived grouping — otherwise a standby resuming its offset after
+        a primary compact+restart receives the wrong records and silently
+        loses versions."""
+        reg = Registry(directory=str(tmp_path), cdmt_params=P)
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        versions = _versions(2, seed=15)
+        pub.commit("app", "v0", versions[0])
+        pub.push("app", "v0")
+        reg.put_metadata("app", "v0", b"manifest-0")    # interleaved meta
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), name="s0")
+        assert fol.sync_once() == 2                     # commit + meta
+        pub.commit("app", "v1", versions[1])
+        pub.push("app", "v1")                           # not yet shipped
+        live_records = reg.replication.dump()
+        reg.compact()
+        reg.close()
+        back = Registry(directory=str(tmp_path), cdmt_params=P)
+        try:
+            assert back.replication.dump() == live_records
+            fol2 = JournalFollower(sreg, WireTransport(RegistryServer(back)),
+                                   name="s0")
+            assert fol2.sync_once() == 1                # exactly commit v1
+            _assert_registries_equal(back, sreg)
+            assert sreg.get_metadata("app", "v0") == b"manifest-0"
+        finally:
+            back.close()
+
+    def test_compact_crash_window_does_not_shift_offsets(self, tmp_path):
+        """Crash between snapshot rename and journal truncation: the stale
+        journal is a byte-identical suffix of the snapshot — recovery must
+        skip it, not double-feed the replication log."""
+        versions = _versions(2, seed=16)
+        reg = _seed_registry(versions, directory=str(tmp_path))
+        head = reg.replication.head()
+        records = reg.replication.dump()
+        stale = open(os.path.join(str(tmp_path), "registry.journal"),
+                     "rb").read()
+        reg.compact()
+        reg.close()
+        with open(os.path.join(str(tmp_path), "registry.journal"),
+                  "wb") as f:
+            f.write(stale)                  # pretend the truncate never hit
+        back = Registry(directory=str(tmp_path), cdmt_params=P)
+        try:
+            assert back.replication.head() == head
+            assert back.replication.dump() == records
+            assert back.tags("app") == ["v0", "v1"]
+        finally:
+            back.close()
+
+    def test_post_compact_record_identical_to_tail_is_not_dropped(
+            self, tmp_path):
+        """Regression: a legitimate record written right after compact()
+        that happens to be byte-identical to the snapshot's last record
+        (idempotent metadata re-write) must survive a restart — the
+        compaction boundary marker, not a byte heuristic, decides whether
+        the journal continues the snapshot."""
+        reg = Registry(directory=str(tmp_path), cdmt_params=P)
+        reg.put_metadata("app", "v1", b"notes")
+        reg.compact()
+        reg.put_metadata("app", "v1", b"notes")     # identical bytes again
+        head = reg.replication.head()
+        assert head == 2
+        reg.close()
+        back = Registry(directory=str(tmp_path), cdmt_params=P)
+        try:
+            assert back.replication.head() == head  # nothing dropped
+            assert back.get_metadata("app", "v1") == b"notes"
+        finally:
+            back.close()
+
+    def test_gc_sweep_rolls_epoch_and_reseeds(self):
+        versions = _versions(3, seed=14)
+        reg = _seed_registry(versions)
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)
+        assert reg.replication.epoch == 1
+        # re-seeded: a *fresh* standby can still sync from offset 0
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, WireTransport(RegistryServer(reg))).sync_once()
+        assert sreg.tags("app") == ["v2"]
+        _assert_registries_equal(reg, sreg)
+
+    def test_sweep_crash_between_snapshot_and_truncate_recovers(
+            self, tmp_path):
+        """Regression: a sweep that dies after writing its (new-epoch)
+        snapshot but before truncating the (old-epoch) journal must
+        recover to the swept state — the prior-epoch journal is discarded,
+        not fed (which would resurrect dropped versions) and not an
+        unrecoverable JournalError."""
+        versions = _versions(3, seed=17)
+        reg = _seed_registry(versions, directory=str(tmp_path))
+        reg.compact()                       # old-epoch marker in the journal
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.pull("app", "v2")
+        pub.commit("app", "v3", versions[2] + _rand(2_000, seed=18))
+        pub.push("app", "v3")
+        stale = open(os.path.join(str(tmp_path), "registry.journal"),
+                     "rb").read()
+        reg.sweep(retain_tags={"app": ["v2", "v3"]}, drop=True)
+        reg.close()
+        # pretend the sweep's journal truncation never hit the disk
+        with open(os.path.join(str(tmp_path), "registry.journal"),
+                  "wb") as f:
+            f.write(stale)
+        back = Registry(directory=str(tmp_path), cdmt_params=P)
+        try:
+            assert back.replication.epoch == 1
+            assert back.tags("app") == ["v2", "v3"]    # swept state, no
+            assert back.replication.head() == 2        # resurrected versions
+        finally:
+            back.close()
+
+
+# ---------------------------------------------------------------- follower
+
+
+class TestJournalFollower:
+    def test_full_sync_then_incremental(self):
+        versions = _versions(4, seed=20)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), name="s0")
+        assert fol.sync_once() == 4
+        _assert_registries_equal(reg, sreg)
+        assert fol.sync_once() == 0                # caught up: no-op
+        assert fol.lag() == 0
+        # one more push ships only the delta
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.pull("app", "v3")
+        new = versions[3] + _rand(5_000, seed=21)
+        pub.commit("app", "v4", new)
+        pub.push("app", "v4")
+        assert fol.lag() == 1
+        before = fol.chunks_fetched
+        assert fol.sync_once() == 1
+        assert fol.chunks_fetched - before < len(
+            reg.recipe_for("app", "v4").fps)       # only missing chunks moved
+        _assert_registries_equal(reg, sreg)
+        assert srv.replica_offsets["s0"] == reg.replication.head()
+
+    def test_standby_serves_pulls_byte_identically(self):
+        versions = _versions(3, seed=22)
+        reg = _seed_registry(versions)
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, WireTransport(RegistryServer(reg))).sync_once()
+        a = ImageClient(LocalTransport(reg), cdc_params=PARAMS, cdmt_params=P)
+        b = ImageClient(LocalTransport(sreg), cdc_params=PARAMS,
+                        cdmt_params=P)
+        ra = a.pull("app", "v2")
+        rb = b.pull("app", "v2")
+        assert a.materialize("app", "v2") == b.materialize("app", "v2") \
+            == versions[2]
+        assert ra.chunks_moved == rb.chunks_moved
+        assert ra.chunk_bytes == rb.chunk_bytes
+
+    def test_duplicate_delivery_is_idempotent(self):
+        """A lost ack (or a crash between apply and ack) re-ships records
+        the standby already applied — they must be skipped, not re-applied."""
+        versions = _versions(3, seed=23)
+        reg = _seed_registry(versions)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(RegistryServer(reg)))
+        fol.sync_once()
+        n_versions = len(sreg.tags("app"))
+        raw = reg.replication.records_from(0, 1)[0]
+        rtype, payload, _ = wire.decode_record(raw, 0)
+        assert sreg.apply_replicated(rtype, payload, expected_seq=0) is False
+        assert len(sreg.tags("app")) == n_versions
+        assert sreg.replication.head() == reg.replication.head()
+
+    def test_gap_is_refused(self):
+        versions = _versions(2, seed=24)
+        reg = _seed_registry(versions)
+        sreg = Registry(cdmt_params=P)
+        raw = reg.replication.records_from(1, 1)[0]
+        rtype, payload, _ = wire.decode_record(raw, 0)
+        with pytest.raises(JournalError):
+            sreg.apply_replicated(rtype, payload, expected_seq=1)
+
+    def test_torn_shipped_record_replays_idempotently(self, tmp_path):
+        """The standby crashes mid-append while journaling a shipped record:
+        on restart the torn tail is truncated, the resume offset falls back
+        to the last complete record, and re-shipping applies the record
+        exactly once — the standby ends bit-identical to the primary."""
+        versions = _versions(4, seed=25)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sdir = str(tmp_path / "standby")
+        os.makedirs(sdir)
+        sreg = Registry(directory=sdir, cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), name="s0")
+        fol.sync_once()
+        assert sreg.replication.head() == 4
+        # simulate the crash: append half of the *next* record (a re-ship of
+        # record 3 whose first attempt tore) to the standby journal
+        raw = reg.replication.records_from(3, 1)[0]
+        with open(os.path.join(sdir, "registry.journal"), "ab") as f:
+            f.write(raw[:len(raw) // 2])
+        sreg.close()
+        back = Registry(directory=sdir, cdmt_params=P)
+        try:
+            assert back.replication.head() == 4    # torn tail discarded
+            fol2 = JournalFollower(back, WireTransport(srv), name="s0")
+            assert fol2.sync_once() == 0           # nothing new to apply
+            _assert_registries_equal(reg, back)
+            assert back.tags("app") == [f"v{i}" for i in range(4)]
+        finally:
+            back.close()
+
+    def test_standby_restart_resumes_from_journal(self, tmp_path):
+        versions = _versions(3, seed=26)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sdir = str(tmp_path / "standby")
+        os.makedirs(sdir)
+        sreg = Registry(directory=sdir, cdmt_params=P)
+        JournalFollower(sreg, WireTransport(srv)).sync_once()
+        sreg.close()
+        # primary advances while the standby is down
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.pull("app", "v2")
+        pub.commit("app", "v3", versions[2] + _rand(4_000, seed=27))
+        pub.push("app", "v3")
+        back = Registry(directory=sdir, cdmt_params=P)
+        try:
+            fol = JournalFollower(back, WireTransport(srv))
+            assert fol.sync_once() == 1            # only the new record
+            _assert_registries_equal(reg, back)
+        finally:
+            back.close()
+
+    def test_restarted_follower_refused_after_primary_sweep(self):
+        """Regression: a follower constructed *fresh* over an already-synced
+        standby must resume with the standby's persisted epoch, not a
+        freshly probed one — otherwise a primary GC sweep between follower
+        restarts lets old-epoch offsets replay against the new-epoch log
+        and the standby silently diverges."""
+        versions = _versions(3, seed=56)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, WireTransport(srv), name="s0").sync_once()
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)   # epoch 0 -> 1
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.pull("app", "v2")
+        pub.commit("app", "v3", versions[2] + _rand(3_000, seed=57))
+        pub.push("app", "v3")
+        fresh_follower = JournalFollower(sreg, WireTransport(srv), name="s0")
+        with pytest.raises(DeliveryError):
+            fresh_follower.sync_once()
+        assert "v3" not in sreg.tags("app")    # nothing cross-epoch applied
+
+    def test_fresh_standby_adopts_primary_epoch_durably(self, tmp_path):
+        versions = _versions(2, seed=58)
+        reg = _seed_registry(versions)
+        reg.sweep(retain_tags={"app": ["v1"]}, drop=True)   # primary epoch 1
+        srv = RegistryServer(reg)
+        sdir = str(tmp_path / "standby")
+        os.makedirs(sdir)
+        sreg = Registry(directory=sdir, cdmt_params=P)
+        JournalFollower(sreg, WireTransport(srv)).sync_once()
+        assert sreg.replication.epoch == 1
+        sreg.close()
+        back = Registry(directory=sdir, cdmt_params=P)
+        try:
+            assert back.replication.epoch == 1      # epoch survives restart
+            fol = JournalFollower(back, WireTransport(srv))
+            assert fol.sync_once() == 0
+            _assert_registries_equal(reg, back)
+        finally:
+            back.close()
+
+    def test_follow_thread_survives_divergence(self):
+        """Regression: a diverged standby (ahead of the primary's log)
+        raises JournalError — the follow() daemon must record it in
+        last_error and keep retrying, never die silently."""
+        import time
+        donor = _seed_registry(_versions(2, seed=59))
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, WireTransport(RegistryServer(donor))
+                        ).sync_once()
+        empty_primary = Registry(cdmt_params=P)     # head 0: standby is ahead
+        fol = JournalFollower(sreg, WireTransport(
+            RegistryServer(empty_primary)), poll_interval=0.01)
+        fol.follow()
+        try:
+            deadline = 100
+            while fol.last_error is None and deadline:
+                time.sleep(0.02)
+                deadline -= 1
+            assert fol.last_error is not None
+            assert fol._thread.is_alive()           # still retrying
+        finally:
+            fol.stop()
+
+    def test_epoch_mismatch_requires_full_resync(self):
+        versions = _versions(3, seed=28)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv))
+        fol.sync_once()
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)   # epoch rollover
+        with pytest.raises(DeliveryError):
+            fol.sync_once()
+        # a fresh standby at the new epoch syncs fine
+        fresh = Registry(cdmt_params=P)
+        JournalFollower(fresh, WireTransport(srv)).sync_once()
+        assert fresh.tags("app") == ["v2"]
+
+    def test_follow_thread_keeps_up(self):
+        versions = _versions(2, seed=29)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), poll_interval=0.01)
+        fol.follow()
+        try:
+            pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                              cdmt_params=P)
+            pub.pull("app", "v1")
+            pub.commit("app", "v2", versions[1] + _rand(3_000, seed=30))
+            pub.push("app", "v2")
+            deadline = 100
+            while fol.lag() and deadline:
+                import time
+                time.sleep(0.02)
+                deadline -= 1
+            assert fol.lag() == 0
+            _assert_registries_equal(reg, sreg)
+        finally:
+            fol.stop()
+
+
+# ------------------------------------------------------------- socket ship
+
+
+class TestSocketShip:
+    def test_ship_over_real_tcp(self):
+        versions = _versions(3, seed=31)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        with SocketRegistryServer(srv) as door:
+            with SocketTransport(door.address) as t:
+                epoch, head = t.replication_status()
+                assert (epoch, head) == (0, 3)
+                sreg = Registry(cdmt_params=P)
+                fol = JournalFollower(sreg, t, name="tcp-standby")
+                assert fol.sync_once() == 3
+                _assert_registries_equal(reg, sreg)
+                s = srv.snapshot()
+                assert s.ship_requests >= 2        # probe + ship
+                assert s.records_shipped == 3
+                assert s.repl_acks >= 1
+                assert srv.replica_offsets["tcp-standby"] == 3
+
+    def test_stale_epoch_ack_is_dropped(self):
+        """Regression: a late REPL_ACK from an old-epoch standby must not
+        overwrite the lag table with an offset that is meaningless against
+        the new epoch's head."""
+        versions = _versions(3, seed=60)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        t.ack_journal("s0", 0, 3)
+        assert srv.replica_offsets["s0"] == 3
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)   # epoch 0 -> 1
+        epoch, head = t.ack_journal("s0", 0, 3)             # late old ack
+        assert epoch == 1
+        assert "s0" not in srv.replica_offsets              # forgotten
+        t.ack_journal("s0", 1, 1)
+        assert srv.replica_offsets["s0"] == 1
+
+    def test_ship_is_metered(self):
+        versions = _versions(2, seed=32)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        s0 = srv.snapshot()
+        t = WireTransport(srv)
+        t.ship_journal("s0", 0, 0, 512)
+        s1 = srv.snapshot()
+        assert s1.ingress_bytes > s0.ingress_bytes
+        assert s1.egress_bytes > s0.egress_bytes
+
+
+# ----------------------------------------------------- replicated transport
+
+
+def _replicated_stack(versions, n_standbys=2, batch_chunks=16):
+    """Primary + synced standbys behind sockets, a ReplicatedTransport
+    client, and the underlying servers for egress inspection."""
+    reg = _seed_registry(versions)
+    servers = [SocketRegistryServer(RegistryServer(reg))]
+    primary_wire = WireTransport(servers[0].server)
+    standby_regs = []
+    for i in range(n_standbys):
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, primary_wire, name=f"s{i}").sync_once()
+        standby_regs.append(sreg)
+        servers.append(SocketRegistryServer(RegistryServer(sreg)))
+    transports = [SocketTransport(s.address) for s in servers]
+    rt = ReplicatedTransport(transports)
+    cl = ImageClient(rt, cdc_params=PARAMS, cdmt_params=P,
+                     batch_chunks=batch_chunks)
+    return reg, standby_regs, servers, transports, rt, cl
+
+
+def _teardown(servers, transports):
+    for t in transports:
+        t.close()
+    for s in servers:
+        s.stop()
+
+
+class TestReplicatedTransport:
+    def test_plan_quote_exact_envelope_included(self):
+        versions = _versions(3, seed=33)
+        _, _, servers, transports, rt, cl = _replicated_stack(versions)
+        try:
+            plan = cl.plan_pull("app", "v2")
+            assert plan.transport == "replicated"
+            report = cl.execute(plan)
+            assert (report.index_bytes + report.recipe_bytes
+                    + report.chunk_bytes) == plan.expected_wire_bytes
+            assert cl.materialize("app", "v2") == versions[2]
+        finally:
+            _teardown(servers, transports)
+
+    def test_reads_fan_across_replicas(self):
+        versions = _versions(3, seed=34)
+        _, _, servers, transports, rt, cl = _replicated_stack(versions,
+                                                              batch_chunks=8)
+        try:
+            base = [s.snapshot().egress_bytes for s in servers]
+            cl.pull("app", "v0")
+            egress = [s.snapshot().egress_bytes - b
+                      for s, b in zip(servers, base)]
+            # every replica carried chunk traffic (many batches, 3 replicas)
+            assert all(e > 0 for e in egress), egress
+        finally:
+            _teardown(servers, transports)
+
+    def test_stale_root_detected_pull_byte_identical_vs_primary(self):
+        """A standby serving a *stale root* for the tag is detected by CDMT
+        root mismatch and excluded; the pull completes byte-identically
+        against the primary (same chunk set as the single-registry pull)."""
+        versions = _versions(3, seed=35)
+        reg, standby_regs, servers, transports, rt, cl = \
+            _replicated_stack(versions)
+        try:
+            # baseline: what a single-registry pull of v2 moves
+            baseline = ImageClient(LocalTransport(_seed_registry(versions)),
+                                   cdc_params=PARAMS, cdmt_params=P)
+            bplan = baseline.plan_pull("app", "v2")
+            # corrupt both standbys: bind the tag to an older version's root
+            for sreg in standby_regs:
+                sreg.lineages["app"]._by_tag["v2"] = 0
+                assert sreg.index_for_tag("app", "v2").root \
+                    != reg.index_for_tag("app", "v2").root
+            plan = cl.plan_pull("app", "v2")
+            assert set(plan.missing) == set(bplan.missing)
+            report = cl.execute(plan)
+            assert rt.stale_detected >= 1
+            assert report.chunks_moved == len(bplan.missing)
+            # every chunk byte came from the primary, none from stale standbys
+            assert report.sources["registry"].chunks == report.chunks_moved
+            assert cl.materialize("app", "v2") == versions[2]
+            baseline.execute(bplan)
+            assert baseline.materialize("app", "v2") == versions[2]
+        finally:
+            _teardown(servers, transports)
+
+    def test_lagging_standby_falls_through_to_primary(self):
+        """A standby that never synced the tag is stale (probe fails) — the
+        pull still completes, entirely from sources that hold the data."""
+        versions = _versions(3, seed=36)
+        reg = _seed_registry(versions)
+        servers = [SocketRegistryServer(RegistryServer(reg))]
+        empty = Registry(cdmt_params=P)              # never synced
+        servers.append(SocketRegistryServer(RegistryServer(empty)))
+        transports = [SocketTransport(s.address) for s in servers]
+        rt = ReplicatedTransport(transports)
+        cl = ImageClient(rt, cdc_params=PARAMS, cdmt_params=P,
+                         batch_chunks=16)
+        try:
+            rep = cl.pull("app", "v2")
+            assert cl.materialize("app", "v2") == versions[2]
+            assert rep.chunks_moved == rep.chunks_total
+            assert rt.stale_detected >= 1
+        finally:
+            _teardown(servers, transports)
+
+    def test_promoted_standby_after_primary_death_mid_pull(self):
+        """The acceptance gate: plan while the primary lives, kill it, and
+        the executing pull promotes the freshest standby and moves the
+        byte-identical chunk set a single healthy registry would have."""
+        versions = _versions(4, seed=37)
+        reg, standby_regs, servers, transports, rt, cl = \
+            _replicated_stack(versions)
+        try:
+            baseline = ImageClient(LocalTransport(_seed_registry(versions)),
+                                   cdc_params=PARAMS, cdmt_params=P)
+            bplan = baseline.plan_pull("app", "v3")
+            brep = baseline.execute(bplan)
+            plan = cl.plan_pull("app", "v3")
+            assert set(plan.missing) == set(bplan.missing)
+            servers[0].stop()                        # primary dies mid-pull
+            report = cl.execute(plan)
+            assert rt.primary_index != 0             # a standby took over
+            assert rt.promotions >= 1
+            assert report.chunks_moved == brep.chunks_moved
+            assert cl.materialize("app", "v3") == versions[3] \
+                == baseline.materialize("app", "v3")
+            # and the promoted standby now answers the control plane too
+            assert cl.transport.tags("app") == [f"v{i}" for i in range(4)]
+        finally:
+            _teardown(servers[1:], transports)
+
+    def test_pushes_route_to_primary_then_replicate(self):
+        versions = _versions(2, seed=38)
+        reg, standby_regs, servers, transports, rt, cl = \
+            _replicated_stack(versions)
+        try:
+            cl.pull("app", "v1")
+            cl.commit("app", "v2", versions[1] + _rand(4_000, seed=39))
+            cl.push("app", "v2")
+            assert reg.tags("app") == ["v0", "v1", "v2"]
+            assert standby_regs[0].tags("app") == ["v0", "v1"]  # not yet
+            fol = JournalFollower(standby_regs[0],
+                                  WireTransport(servers[0].server), name="s0")
+            fol.sync_once()
+            _assert_registries_equal(reg, standby_regs[0])
+        finally:
+            _teardown(servers, transports)

@@ -1,11 +1,14 @@
-"""Transport conformance: one ``ImageClient``, four ``Transport``s.
+"""Transport conformance: one ``ImageClient``, five ``Transport``s.
 
 The same scenario must move the same chunks through every transport, with
 byte counts equal up to framing overhead — and for the socket transport,
 equal to the wire transport's bytes **plus exactly the envelope overhead**;
 swarm pulls must survive provider death mid-pull (failover to the next
-source, then the registry); and the server's restart warm-up must serve a
-recovered registry's first wave from RAM.
+source, then the registry); a replicated pull must fan chunk reads across
+journal-shipped standbys (and survive primary death by promotion — see
+``tests/test_replication.py`` for the replication protocol itself); and the
+server's restart warm-up must serve a recovered registry's first wave from
+RAM.
 """
 
 import threading
@@ -18,15 +21,16 @@ from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError
 from repro.core.registry import Registry
 from repro.core.store import Recipe
-from repro.delivery import (FetchResult, ImageClient, LocalTransport,
-                            PullPlan, RegistryServer, SocketRegistryServer,
+from repro.delivery import (FetchResult, ImageClient, JournalFollower,
+                            LocalTransport, PullPlan, RegistryServer,
+                            ReplicatedTransport, SocketRegistryServer,
                             SocketTransport, SourceLeg, SwarmNode,
                             SwarmTracker, SwarmTransport, TransferReport,
                             WireTransport, swarm_pull, wire)
 
 PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
 P = CDMTParams(window=4, rule_bits=2)
-TRANSPORTS = ["local", "wire", "socket", "swarm"]
+TRANSPORTS = ["local", "wire", "socket", "swarm", "replicated"]
 
 
 def _rand(n, seed=0):
@@ -59,14 +63,33 @@ def _seed_registry(versions, lineage="app"):
     return reg
 
 
+def _replicated_env(reg, n_standbys=2):
+    """Primary + synced standbys, each behind its own socket server, plus a
+    ``ReplicatedTransport`` over all of them (primary first).  Returns
+    ``(transport, cleanup_objects)``."""
+    servers = [SocketRegistryServer(RegistryServer(reg))]
+    primary_wire = WireTransport(servers[0].server)
+    for i in range(n_standbys):
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, primary_wire, name=f"s{i}").sync_once()
+        servers.append(SocketRegistryServer(RegistryServer(sreg)))
+    transports = [SocketTransport(s.address) for s in servers]
+    return ReplicatedTransport(transports), transports + servers
+
+
 def _fresh_client(kind, reg, provisioned_tags=()):
     """A cold ImageClient over transport ``kind``.  For swarm, one peer is
     pre-provisioned per tag in ``provisioned_tags`` so providers exist.
-    Socket clients carry their server on ``_cleanup`` — call
+    Socket/replicated clients carry their servers on ``_cleanup`` — call
     ``_cleanup_client`` when done."""
     if kind == "local":
         return ImageClient(LocalTransport(reg), cdc_params=PARAMS,
                            cdmt_params=P)
+    if kind == "replicated":
+        transport, cleanup = _replicated_env(reg)
+        cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        cl._cleanup = cleanup
+        return cl
     srv = RegistryServer(reg)
     if kind == "wire":
         return ImageClient(WireTransport(srv), cdc_params=PARAMS,
@@ -89,12 +112,16 @@ def _fresh_client(kind, reg, provisioned_tags=()):
                        cdc_params=PARAMS, cdmt_params=P)
 
 
+def _close_all(objs):
+    for obj in objs:                          # transports first, then servers
+        for meth in ("close", "stop"):
+            fn = getattr(obj, meth, None)
+            if fn is not None:
+                fn()
+
+
 def _cleanup_client(cl):
-    transport, sock_srv = getattr(cl, "_cleanup", (None, None))
-    if transport is not None:
-        transport.close()
-    if sock_srv is not None:
-        sock_srv.stop()
+    _close_all(getattr(cl, "_cleanup", ()))
 
 
 # ------------------------------------------------------------- conformance
@@ -321,7 +348,7 @@ class TestPushConformance:
     def test_push_lands_identically(self, kind):
         versions = _versions(3, seed=41)
         reg = Registry(cdmt_params=P)
-        sock_srv = None
+        cleanup = []
         if kind == "local":
             transport = LocalTransport(reg)
         elif kind == "wire":
@@ -329,6 +356,10 @@ class TestPushConformance:
         elif kind == "socket":
             sock_srv = SocketRegistryServer(RegistryServer(reg))
             transport = SocketTransport(sock_srv.address)
+            cleanup = [transport, sock_srv]
+        elif kind == "replicated":
+            # pushes route to the primary; standbys never see them directly
+            transport, cleanup = _replicated_env(reg)
         else:
             node = SwarmNode("pub", cdc_params=PARAMS, cdmt_params=P)
             transport = SwarmTransport(node, SwarmTracker(),
@@ -345,9 +376,7 @@ class TestPushConformance:
                 assert reg.index_for_tag("app", tag).root \
                     == reference.index_for_tag("app", tag).root
         finally:
-            if sock_srv is not None:
-                transport.close()
-                sock_srv.stop()
+            _close_all(cleanup)
 
     @pytest.mark.parametrize("kind", ["local", "wire"])
     def test_has_chunks_gives_cross_lineage_push_dedup(self, kind):

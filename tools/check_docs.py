@@ -1,0 +1,88 @@
+"""Execute the fenced ``python`` blocks in README.md and docs/*.md.
+
+The docs CI job runs this so documented examples cannot rot: every block
+tagged ```` ```python ```` is executed against the real package.  Blocks
+within one file share a namespace and run top to bottom — a markdown file
+is a literate script, so later blocks may build on earlier ones.  Blocks in
+other languages (``bash``, ``text``, untagged) are ignored.
+
+Execution happens inside a temporary working directory, so examples may
+create registries with ``directory=...`` relative paths freely.
+
+Usage:  PYTHONPATH=$PWD/src python tools/check_docs.py [files...]
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import tempfile
+import traceback
+from typing import Iterator, List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def python_blocks(path: pathlib.Path) -> Iterator[Tuple[int, str]]:
+    """Yield ``(first_line_number, source)`` for each ```python fence."""
+    lines = path.read_text(encoding="utf-8").splitlines()
+    block: List[str] = []
+    start = 0
+    in_python = False
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if not in_python and stripped == "```python":
+            in_python = True
+            start = i + 1
+            block = []
+        elif in_python and stripped == "```":
+            in_python = False
+            yield start, "\n".join(block)
+        elif in_python:
+            block.append(line)
+    if in_python:
+        raise SystemExit(f"{path}: unterminated ```python fence at "
+                         f"line {start - 1}")
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Run every python block of one file in a shared namespace; returns
+    the number of blocks executed."""
+    namespace = {"__name__": "__docs__", "__file__": str(path)}
+    count = 0
+    for lineno, source in python_blocks(path):
+        code = compile(source, f"{path}:{lineno}", "exec")
+        try:
+            exec(code, namespace)
+        except Exception:
+            traceback.print_exc()
+            raise SystemExit(
+                f"\nFAILED: {path} block at line {lineno} — the documented "
+                f"example no longer executes; fix the doc or the code")
+        count += 1
+    return count
+
+
+def main(argv: List[str]) -> None:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = [REPO / "README.md"]
+        files += sorted((REPO / "docs").glob("*.md"))
+    total = 0
+    original_cwd = os.getcwd()
+    for path in files:
+        with tempfile.TemporaryDirectory() as scratch:
+            os.chdir(scratch)
+            try:
+                n = run_file(path)
+            finally:
+                os.chdir(original_cwd)
+        print(f"{path.relative_to(REPO)}: {n} block(s) OK")
+        total += n
+    print(f"docs OK: {total} python block(s) executed")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
