@@ -1,7 +1,8 @@
-"""Shared benchmark helpers: row collection + CSV emission."""
+"""Shared benchmark helpers: row collection + CSV/JSON emission."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Any, Dict, List
 
@@ -23,6 +24,18 @@ class Report:
         print(",".join(keys))
         for r in self.rows:
             print(",".join(_fmt(r.get(k)) for k in keys))
+
+    def to_json_obj(self) -> dict:
+        return {"name": self.name, "rows": self.rows}
+
+
+def write_json(path: str, reports: List["Report"]) -> None:
+    """Machine-readable benchmark output (``BENCH_*.json``): one object per
+    report, rows as plain dicts — what CI diffs and dashboards ingest."""
+    with open(path, "w") as f:
+        json.dump({"v": 1, "reports": [r.to_json_obj() for r in reports]},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def _fmt(v) -> str:

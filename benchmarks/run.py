@@ -24,6 +24,7 @@ ALL = {
     "delivery_unified": bench_delivery_scale.run_unified,
     "delivery_socket": bench_delivery_scale.run_socket,
     "delivery_replicated": bench_delivery_scale.run_replicated,
+    "delivery_obs": bench_delivery_scale.run_obs,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
     "push_incremental": bench_push_incremental.run,

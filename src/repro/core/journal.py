@@ -57,7 +57,10 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Iterable, List, Optional, Tuple
+
+from repro.obs import MetricsRegistry, NULL_REGISTRY
 
 from .errors import JournalError
 
@@ -96,9 +99,16 @@ def scan_records(path: str) -> Tuple[List[Tuple[int, bytes]], int, int]:
 
 
 class Journal:
-    """Writable journal over one file: recover, replay, append, reset."""
+    """Writable journal over one file: recover, replay, append, reset.
 
-    def __init__(self, path: str, sync: bool = True):
+    ``metrics`` (a :class:`repro.obs.MetricsRegistry`) receives the
+    ``journal_*`` series — append latency (fsync cost included) and the
+    on-disk size gauge.  The owning registry passes its own; a bare journal
+    defaults to the no-op registry, so metering never changes behavior.
+    """
+
+    def __init__(self, path: str, sync: bool = True,
+                 metrics: MetricsRegistry = NULL_REGISTRY):
         self.path = path
         self.sync_writes = sync
         records, good_end, size = scan_records(path)
@@ -108,6 +118,13 @@ class Journal:
                 f.truncate(good_end)
         self._pending: List[Tuple[int, bytes]] = records
         self._f = open(path, "ab")
+        self._size = good_end
+        self._m_append = metrics.histogram(
+            "journal_append_seconds",
+            "journal record append latency (fsync included)").labels()
+        self._m_size = metrics.gauge(
+            "journal_size_bytes", "journal file size on disk").labels()
+        self._m_size.set(self._size)
 
     # ------------------------------------------------------------------ read
 
@@ -128,10 +145,14 @@ class Journal:
         journaled ones."""
         if self._f is None:
             raise JournalError(f"journal {self.path} is closed")
+        t0 = time.perf_counter()
         self._f.write(raw_record)
         self._f.flush()
         if self.sync_writes:
             os.fsync(self._f.fileno())
+        self._m_append.observe(time.perf_counter() - t0)
+        self._size += len(raw_record)
+        self._m_size.set(self._size)
 
     def reset(self) -> None:
         """Truncate to empty — call only after the state the journal covers
@@ -142,6 +163,8 @@ class Journal:
         self._f = open(self.path, "wb")
         self._f.flush()
         os.fsync(self._f.fileno())
+        self._size = 0
+        self._m_size.set(0)
 
     # ------------------------------------------------------------ accounting
 

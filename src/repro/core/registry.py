@@ -24,8 +24,11 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, \
     Tuple
+
+from repro.obs import MetricsRegistry
 
 from . import hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
@@ -97,7 +100,8 @@ class Registry:
 
     def __init__(self, directory: Optional[str] = None,
                  cdmt_params: CDMTParams = DEFAULT_PARAMS,
-                 sync: bool = True):
+                 sync: bool = True,
+                 metrics: Optional[MetricsRegistry] = None):
         self.store = DedupStore(directory)
         self.cdmt_params = cdmt_params
         self.lineages: Dict[str, VersionedCDMT] = {}
@@ -105,6 +109,21 @@ class Registry:
         self.metadata: Dict[Tuple[str, str], bytes] = {}   # small blobs (manifests)
         self._journal: Optional[Journal] = None
         self._snap_path: Optional[str] = None
+        # per-instance metrics: the delivery frontends adopt this registry's
+        # so one scrape covers commit latency + frontend + cache together
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_commit = self.metrics.histogram(
+            "registry_commit_seconds",
+            "receive_push latency: verify + store + journal + index"
+        ).labels()
+        self._m_apply = self.metrics.histogram(
+            "replication_apply_seconds",
+            "standby apply latency for one shipped record").labels()
+        self._m_repl_head = self.metrics.gauge(
+            "replication_log_head", "replication log head (records this "
+            "epoch)").labels()
+        self._m_repl_epoch = self.metrics.gauge(
+            "replication_epoch", "current replication epoch").labels()
         # replication tap: every committed record, in commit order — what a
         # standby follows over JOURNAL_SHIP (see repro.delivery.net).  Fed
         # during recovery too, so resume offsets survive a primary restart.
@@ -125,7 +144,8 @@ class Registry:
                     self._recover_record(rtype, payload)
             had_snapshot = os.path.exists(self._snap_path)
             self._journal = Journal(
-                os.path.join(directory, "registry.journal"), sync=sync)
+                os.path.join(directory, "registry.journal"), sync=sync,
+                metrics=self.metrics)
             self._recover_journal(self._journal.replay(),
                                   has_snapshot=had_snapshot)
 
@@ -299,6 +319,7 @@ class Registry:
         untouched and raises :class:`PushRejected`.  On success, chunks are
         fsynced and the commit is journaled before the receipt is returned.
         """
+        t0 = time.perf_counter()
         if len(recipe.fps) != len(recipe.sizes):
             raise PushRejected(
                 f"push {lineage}:{tag}: recipe has {len(recipe.fps)} "
@@ -359,6 +380,7 @@ class Registry:
                 raise PushRejected(
                     f"push {lineage}:{tag}: tag is already bound to a "
                     f"different root — push under a new tag")
+            self._m_commit.observe(time.perf_counter() - t0)
             return PushReceipt(lineage=lineage, tag=tag, version=prev.version,
                                chunks_received=0, bytes_received=0,
                                index_bytes=tree.index_size_bytes(),
@@ -401,6 +423,8 @@ class Registry:
             self.lineages[lineage] = lin
         # replication tap: only *committed* records are shipped to standbys
         self.replication.append_raw(commit_raw)
+        self._m_repl_head.set(self.replication.head())
+        self._m_commit.observe(time.perf_counter() - t0)
         return PushReceipt(lineage=lineage, tag=tag, version=rec.version,
                            chunks_received=nchunks, bytes_received=nbytes,
                            index_bytes=tree.index_size_bytes(), root=rec.root,
@@ -538,6 +562,8 @@ class Registry:
             self.replication.rollover()
             for rtype, payload in self._state_records():
                 self.replication.append(rtype, payload)
+            self._m_repl_epoch.set(self.replication.epoch)
+            self._m_repl_head.set(self.replication.head())
         # 2) journal safety: persist the retained-only state BEFORE any
         #    chunk payload disappears
         if self._journal is not None:
@@ -607,6 +633,7 @@ class Registry:
                 raise JournalError(
                     f"replication gap: record offset {expected_seq} but "
                     f"standby has only applied {head}")
+        t0 = time.perf_counter()
         if raw is None:
             raw = _wire().encode_record(rtype, payload)
         if self._journal is not None:
@@ -614,6 +641,8 @@ class Registry:
             self._journal.append_raw(raw)
         self._apply(rtype, payload)
         self.replication.append_raw(raw)
+        self._m_repl_head.set(self.replication.head())
+        self._m_apply.observe(time.perf_counter() - t0)
         return True
 
     def set_replication_epoch(self, epoch: int) -> None:
@@ -625,6 +654,7 @@ class Registry:
         if self._journal is not None:
             self._journal.append(_J_EPOCH, _wire().encode_uvarint(epoch))
         self.replication.epoch = epoch
+        self._m_repl_epoch.set(epoch)
 
     def _state_records(self) -> List[Tuple[int, bytes]]:
         """The current committed state as a compacted record sequence —

@@ -27,6 +27,11 @@ them into a delivery *system* whose byte counts are real:
     (pipelined wire sessions);
   * :mod:`repro.delivery.swarm`     — EdgePier-style peer mode: provisioned
     clients serve chunks to later pullers before the registry is consulted.
+
+Observability: every layer above meters itself into a
+:class:`repro.obs.MetricsRegistry` (see ``docs/OBSERVABILITY.md``), and a
+live server's full snapshot is scrapeable over the socket protocol via
+``Op.METRICS`` (``SocketTransport.scrape_metrics``).
 """
 
 from .cache import CacheStats, TieredChunkCache
@@ -39,18 +44,19 @@ from .server import RegistryServer, ServerStats
 from .swarm import SwarmNode, SwarmStats, SwarmTracker, swarm_pull
 from .transport import (FetchResult, LocalTransport, PushOutcome,
                         ReplicatedTransport, SwarmTransport, Transport,
-                        WireTransport)
+                        TransportMeter, WireTransport)
 from .wire import (ErrorCode, FrameType, Op, WireError, decode_chunk_batch,
                    decode_error, decode_frame, decode_has, decode_index,
-                   decode_info, decode_missing, decode_receipt, decode_recipe,
-                   decode_record_frame, decode_repl_ack, decode_request,
-                   decode_response, decode_ship, decode_tag_list,
-                   decode_tags_request, decode_want, encode_chunk_batch,
-                   encode_error, encode_frame, encode_has, encode_index,
-                   encode_info, encode_missing, encode_receipt, encode_recipe,
-                   encode_record_frame, encode_repl_ack, encode_request,
-                   encode_response, encode_ship, encode_tag_list,
-                   encode_tags_request, encode_want)
+                   decode_info, decode_metrics, decode_missing,
+                   decode_receipt, decode_recipe, decode_record_frame,
+                   decode_repl_ack, decode_request, decode_response,
+                   decode_ship, decode_tag_list, decode_tags_request,
+                   decode_want, encode_chunk_batch, encode_error,
+                   encode_frame, encode_has, encode_index, encode_info,
+                   encode_metrics, encode_missing, encode_receipt,
+                   encode_recipe, encode_record_frame, encode_repl_ack,
+                   encode_request, encode_response, encode_ship,
+                   encode_tag_list, encode_tags_request, encode_want)
 
 __all__ = [
     "CacheStats", "TieredChunkCache",
@@ -62,7 +68,7 @@ __all__ = [
     "SocketTransport", "serve_registry",
     "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
     "Transport", "LocalTransport", "WireTransport", "SwarmTransport",
-    "ReplicatedTransport", "FetchResult", "PushOutcome",
+    "ReplicatedTransport", "FetchResult", "PushOutcome", "TransportMeter",
     "FrameType", "Op", "ErrorCode", "WireError",
     "encode_frame", "decode_frame",
     "encode_index", "decode_index",
@@ -76,6 +82,7 @@ __all__ = [
     "encode_error", "decode_error",
     "encode_receipt", "decode_receipt",
     "encode_info", "decode_info",
+    "encode_metrics", "decode_metrics",
     "encode_ship", "decode_ship",
     "encode_record_frame", "decode_record_frame",
     "encode_repl_ack", "decode_repl_ack",

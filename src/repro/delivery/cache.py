@@ -5,9 +5,14 @@ without touching the chunk log (many pullers upgrading the same lineage hit
 the same few-hundred-KB working set), and clients keep recently materialized
 chunks resident for swarm serving.
 
-Accounting is explicit (:class:`CacheStats`): the scale benchmark reports the
-hit rate alongside registry egress, because a warm cache is what makes the
-coalesced frontend O(working set) instead of O(requests) in store reads.
+Accounting lives in a :class:`~repro.obs.MetricsRegistry` (``cache_*``
+series — hits, misses, evictions, resident bytes; see
+``docs/OBSERVABILITY.md``), so a registry scrape reports cache behavior
+live.  :class:`CacheStats` remains the in-process view: an adapter built
+from the same metric children, field-compatible with the original
+dataclass.  Eviction bookkeeping (``_resident``, the warm set) stays in
+plain attributes under the cache lock — correctness never depends on the
+metrics being enabled.
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.store import ChunkStore
+from repro.obs import MetricsRegistry
 
 DEFAULT_CAPACITY = 32 << 20  # 32 MiB — plenty for the scaled-down corpus
 
@@ -48,22 +54,44 @@ class TieredChunkCache:
 
     Thread-safe: the registry frontend calls it from many puller threads.
     Chunks larger than the capacity bypass the memory tier entirely.
+
+    ``metrics`` is the registry the ``cache_*`` series land in — pass the
+    owning server's so one scrape covers both; by default the cache keeps a
+    private one (a swarm node's cache must not pollute a registry's).
     """
 
     def __init__(self, backing: ChunkStore,
-                 capacity_bytes: int = DEFAULT_CAPACITY):
+                 capacity_bytes: int = DEFAULT_CAPACITY,
+                 metrics: Optional[MetricsRegistry] = None):
         self.backing = backing
         self.capacity_bytes = capacity_bytes
         self._lru: "OrderedDict[bytes, bytes]" = OrderedDict()
         self._resident = 0
         self._lock = threading.Lock()
-        self._hits = 0
-        self._misses = 0
-        self._evictions = 0
-        self._puts = 0
         self._warm: set = set()    # fps admitted via warm(), still resident
-        self._warmed = 0
-        self._warm_hits = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_hits = m.counter(
+            "cache_hits_total", "chunk reads served from the memory tier"
+        ).labels()
+        self._m_misses = m.counter(
+            "cache_misses_total", "chunk reads that fell through to the "
+            "backing store").labels()
+        self._m_evictions = m.counter(
+            "cache_evictions_total", "LRU evictions").labels()
+        self._m_puts = m.counter(
+            "cache_puts_total", "write-through puts").labels()
+        self._m_warmed = m.counter(
+            "cache_warmed_total", "entries pre-loaded via warm()").labels()
+        self._m_warm_hits = m.counter(
+            "cache_warm_hits_total", "hits served by a pre-warmed entry"
+        ).labels()
+        self._m_resident = m.gauge(
+            "cache_resident_bytes", "bytes resident in the memory tier"
+        ).labels()
+        self._m_capacity = m.gauge(
+            "cache_capacity_bytes", "memory tier capacity").labels()
+        self._m_capacity.set(capacity_bytes)
 
     # ---------------------------------------------------------------- reads
 
@@ -72,11 +100,11 @@ class TieredChunkCache:
             data = self._lru.get(fp)
             if data is not None:
                 self._lru.move_to_end(fp)
-                self._hits += 1
+                self._m_hits.inc()
                 if fp in self._warm:
-                    self._warm_hits += 1
+                    self._m_warm_hits.inc()
                 return data
-            self._misses += 1
+        self._m_misses.inc()
         data = self.backing.get(fp)        # may raise KeyError: truly absent
         with self._lock:
             self._admit(fp, data)
@@ -93,8 +121,8 @@ class TieredChunkCache:
     def put(self, fp: bytes, data: bytes) -> bool:
         """Write-through store; returns True if the chunk was new."""
         new = self.backing.put(fp, data)
+        self._m_puts.inc()
         with self._lock:
-            self._puts += 1
             self._warm.discard(fp)         # freshly written, no longer "warm"
             self._admit(fp, data)
         return new
@@ -114,7 +142,8 @@ class TieredChunkCache:
             self._lru[fp] = data
             self._resident += len(data)
             self._warm.add(fp)
-            self._warmed += 1
+        self._m_warmed.inc()
+        self._m_resident.set(self._resident)
         return True
 
     def _admit(self, fp: bytes, data: bytes) -> None:
@@ -126,23 +155,34 @@ class TieredChunkCache:
             self._resident -= len(prev)
         self._lru[fp] = data
         self._resident += len(data)
+        evicted = 0
         while self._resident > self.capacity_bytes:
             victim_fp, victim = self._lru.popitem(last=False)
             self._resident -= len(victim)
             self._warm.discard(victim_fp)
-            self._evictions += 1
+            evicted += 1
+        if evicted:
+            self._m_evictions.inc(evicted)
+        self._m_resident.set(self._resident)
 
     # ----------------------------------------------------------- accounting
 
     @property
-    def stats(self) -> CacheStats:
+    def resident_bytes(self) -> int:
+        """Current memory-tier occupancy (cheap — no stats object built)."""
         with self._lock:
-            return CacheStats(hits=self._hits, misses=self._misses,
-                              evictions=self._evictions, puts=self._puts,
-                              resident_bytes=self._resident,
-                              capacity_bytes=self.capacity_bytes,
-                              warmed=self._warmed,
-                              warm_hits=self._warm_hits)
+            return self._resident
+
+    @property
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self._m_hits.value(),
+                          misses=self._m_misses.value(),
+                          evictions=self._m_evictions.value(),
+                          puts=self._m_puts.value(),
+                          resident_bytes=self.resident_bytes,
+                          capacity_bytes=self.capacity_bytes,
+                          warmed=self._m_warmed.value(),
+                          warm_hits=self._m_warm_hits.value())
 
     def resident_fps(self) -> List[bytes]:
         with self._lock:

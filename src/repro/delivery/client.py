@@ -20,10 +20,19 @@ once:
   * ``upgrade`` — pull the lineage head; ``materialize`` — reconstruct.
 
 Every operation returns a :class:`~repro.delivery.plan.TransferReport`.
+
+Observability: the client adopts its transport's
+:class:`~repro.obs.MetricsRegistry` (so one snapshot covers the client's
+``client_*`` histograms *and* the transport's byte/latency series) and
+accepts a :class:`~repro.obs.Tracer` — disabled by default, near-zero cost
+— that records one span tree per pull (``pull`` → ``plan_pull`` /
+``execute`` → per-batch ``fetch_batch`` children, attributed across the
+pipeline's pool threads via explicit parent hand-off).
 """
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
@@ -33,6 +42,8 @@ from repro.core.cdmt import (CDMT, CDMTParams, DEFAULT_PARAMS,
                              iter_missing_leaves)
 from repro.core.errors import DeliveryError
 from repro.core.store import DedupStore, Recipe
+from repro.obs import (LATENCY_BUCKETS, MetricsRegistry, NULL_TRACER,
+                       Tracer)
 
 from . import wire
 from .plan import PullPlan, TransferReport
@@ -57,7 +68,9 @@ class ImageClient:
                  cdc_params: cdc.CDCParams = cdc.DEFAULT_PARAMS,
                  cdmt_params: CDMTParams = DEFAULT_PARAMS,
                  directory: Optional[str] = None,
-                 batch_chunks: int = 64, pipeline_depth: int = 4):
+                 batch_chunks: int = 64, pipeline_depth: int = 4,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Tracer = NULL_TRACER):
         self.transport = transport
         self.store = store if store is not None \
             else DedupStore(directory, cdc_params)
@@ -72,6 +85,27 @@ class ImageClient:
         self.batch_chunks = max(1, batch_chunks)
         self.pipeline_depth = max(1, pipeline_depth)
         self.log: List[TransferReport] = []
+        # adopt the transport's registry so client_* series land next to
+        # transport_* ones; an explicit `metrics` overrides, a transportless
+        # client gets its own
+        if metrics is None:
+            metrics = getattr(transport, "metrics", None)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        tname = transport.name if transport is not None else "none"
+        self._m_pull = self.metrics.histogram(
+            "client_pull_seconds", "end-to-end pull execution latency",
+            ("transport",), buckets=LATENCY_BUCKETS).labels(tname)
+        self._m_push = self.metrics.histogram(
+            "client_push_seconds", "end-to-end push latency",
+            ("transport",), buckets=LATENCY_BUCKETS).labels(tname)
+        self._m_pull_chunks = self.metrics.counter(
+            "client_chunks_pulled_total", "chunks moved by pulls",
+            ("transport",)).labels(tname)
+        self._m_pull_bytes = self.metrics.counter(
+            "client_wire_bytes_total",
+            "total wire bytes across pulls and pushes",
+            ("transport",)).labels(tname)
 
     def bind(self, transport: Transport) -> "ImageClient":
         """A client over ``transport`` sharing this client's local state."""
@@ -80,7 +114,8 @@ class ImageClient:
                            cdc_params=self.store.cdc_params,
                            cdmt_params=self.cdmt_params,
                            batch_chunks=self.batch_chunks,
-                           pipeline_depth=self.pipeline_depth)
+                           pipeline_depth=self.pipeline_depth,
+                           tracer=self.tracer)
 
     def _require_transport(self) -> Transport:
         if self.transport is None:
@@ -136,6 +171,14 @@ class ImageClient:
     def plan_pull(self, lineage: str, tag: str) -> PullPlan:
         """Decide a pull without transferring a chunk (Algorithm 2 + local
         store dedup).  ``execute`` runs the resulting plan."""
+        with self.tracer.span("plan_pull", lineage=lineage, tag=tag) as sp:
+            plan = self._plan_pull(lineage, tag)
+            sp.annotate(chunks_missing=len(plan.missing),
+                        already_local=plan.already_local,
+                        expected_wire_bytes=plan.expected_wire_bytes)
+            return plan
+
+    def _plan_pull(self, lineage: str, tag: str) -> PullPlan:
         transport = self._require_transport()
         index, index_bytes = transport.get_index(lineage, tag)
         recipe, recipe_bytes = transport.get_recipe(lineage, tag)
@@ -194,6 +237,7 @@ class ImageClient:
             raise DeliveryError(
                 f"plan was made for transport {plan.transport!r}, "
                 f"executing on {transport.name!r}")
+        t0 = time.perf_counter()
         report = TransferReport(op="pull", lineage=plan.lineage, tag=plan.tag,
                                 transport=transport.name,
                                 chunks_total=plan.chunks_total,
@@ -206,32 +250,53 @@ class ImageClient:
         # lineage's pull) between plan and execute
         to_fetch = [fp for fp in plan.missing
                     if not self.store.chunks.has(fp)]
-        with ThreadPoolExecutor(max_workers=self.pipeline_depth) as pool:
-            pending: "deque" = deque()
-            for start in range(0, len(to_fetch), self.batch_chunks):
-                batch = to_fetch[start:start + self.batch_chunks]
-                # bounded pipeline: never more than pipeline_depth batches
-                # in flight — drain the oldest *before* submitting the next
-                while len(pending) >= self.pipeline_depth:
-                    self._drain(pending.popleft(), received, report)
-                pending.append(pool.submit(transport.fetch_chunks,
-                                           plan.lineage, plan.tag, batch))
-            while pending:
-                self._drain(pending.popleft(), received, report)
+        with self.tracer.span("execute", lineage=plan.lineage, tag=plan.tag,
+                              transport=transport.name,
+                              chunks=len(to_fetch)) as exec_sp:
+            # batches run on pool threads: capture the submitting thread's
+            # span and attach each batch's child explicitly
+            parent = self.tracer.current()
 
-        undelivered = [fp for fp in to_fetch if fp not in received]
-        if undelivered:
-            raise DeliveryError(
-                f"pull {plan.lineage}:{plan.tag}: no source could serve "
-                f"{len(undelivered)} requested chunk(s) "
-                f"(first: {undelivered[0].hex()[:12]})")
-        # transports that hash payloads on decode skip the second hash here
-        self.store.ingest_chunks(f"{plan.lineage}:{plan.tag}",
-                                 plan.recipe.fps, received, plan.recipe.sizes,
-                                 verify=not transport.verifies_payloads)
-        self.indexes[plan.lineage] = plan.index
-        self.tag_trees[f"{plan.lineage}:{plan.tag}"] = plan.index
-        transport.notify_pulled(plan.lineage, plan.tag)
+            def fetch(batch, n):
+                with self.tracer.span("fetch_batch", parent=parent,
+                                      batch=n, chunks=len(batch)):
+                    return transport.fetch_chunks(plan.lineage, plan.tag,
+                                                  batch)
+
+            with ThreadPoolExecutor(max_workers=self.pipeline_depth) as pool:
+                pending: "deque" = deque()
+                for i, start in enumerate(
+                        range(0, len(to_fetch), self.batch_chunks)):
+                    batch = to_fetch[start:start + self.batch_chunks]
+                    # bounded pipeline: never more than pipeline_depth
+                    # batches in flight — drain the oldest *before*
+                    # submitting the next
+                    while len(pending) >= self.pipeline_depth:
+                        self._drain(pending.popleft(), received, report)
+                    pending.append(pool.submit(fetch, batch, i))
+                while pending:
+                    self._drain(pending.popleft(), received, report)
+
+            undelivered = [fp for fp in to_fetch if fp not in received]
+            if undelivered:
+                raise DeliveryError(
+                    f"pull {plan.lineage}:{plan.tag}: no source could serve "
+                    f"{len(undelivered)} requested chunk(s) "
+                    f"(first: {undelivered[0].hex()[:12]})")
+            # transports hashing payloads on decode skip the 2nd hash here
+            with self.tracer.span("ingest", chunks=len(received)):
+                self.store.ingest_chunks(
+                    f"{plan.lineage}:{plan.tag}", plan.recipe.fps, received,
+                    plan.recipe.sizes,
+                    verify=not transport.verifies_payloads)
+            self.indexes[plan.lineage] = plan.index
+            self.tag_trees[f"{plan.lineage}:{plan.tag}"] = plan.index
+            transport.notify_pulled(plan.lineage, plan.tag)
+            exec_sp.annotate(chunks_moved=report.chunks_moved,
+                             wire_bytes=report.total_wire_bytes)
+        self._m_pull.observe(time.perf_counter() - t0)
+        self._m_pull_chunks.inc(report.chunks_moved)
+        self._m_pull_bytes.inc(report.total_wire_bytes)
         self.log.append(report)
         return report
 
@@ -245,7 +310,8 @@ class ImageClient:
 
     def pull(self, lineage: str, tag: str) -> TransferReport:
         """Plan + execute in one call (the common case)."""
-        return self.execute(self.plan_pull(lineage, tag))
+        with self.tracer.span("pull", lineage=lineage, tag=tag):
+            return self.execute(self.plan_pull(lineage, tag))
 
     def upgrade(self, lineage: str) -> TransferReport:
         """Pull the lineage head (rolling-upgrade entry point)."""
@@ -260,6 +326,17 @@ class ImageClient:
              parent_version: Optional[int] = None) -> TransferReport:
         """Push a committed version: Algorithm 2 against the registry head,
         presence-check the diff, ship only chunks the backend lacks."""
+        t0 = time.perf_counter()
+        with self.tracer.span("push", lineage=lineage, tag=tag) as sp:
+            report = self._push(lineage, tag, parent_version)
+            sp.annotate(chunks_moved=report.chunks_moved,
+                        wire_bytes=report.total_wire_bytes)
+        self._m_push.observe(time.perf_counter() - t0)
+        self._m_pull_bytes.inc(report.total_wire_bytes)
+        return report
+
+    def _push(self, lineage: str, tag: str,
+              parent_version: Optional[int] = None) -> TransferReport:
         transport = self._require_transport()
         recipe = self.store.recipes[f"{lineage}:{tag}"]
         local_idx = self.index_for_tag(lineage, tag)

@@ -41,8 +41,9 @@ Concurrency contract
     ``SocketRegistryServer`` runs one daemon thread per connection plus the
     acceptor; every request is answered through the wrapped
     ``RegistryServer``'s handlers, which serialize registry mutations
-    behind ``_registry_lock`` and meter stats behind ``_stats_lock`` — so
-    any number of connections may pull, push, and ship concurrently.
+    behind ``_registry_lock`` and meter everything through the shared
+    ``MetricsRegistry`` lock — so any number of connections may pull,
+    push, and ship concurrently.
     ``SocketTransport`` is thread-safe: pooled connections are checked out
     per exchange (``ImageClient.execute``'s pipelined batches genuinely
     overlap on the network), and a connection whose stream state is in
@@ -68,17 +69,20 @@ from __future__ import annotations
 import dataclasses
 import socket
 import threading
+import time
 from typing import BinaryIO, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError, JournalError
 from repro.core.registry import PushRejected, Registry, record_chunk_fps
 from repro.core.store import Recipe
+from repro.obs import MetricsRegistry, MetricsSnapshot
 
 from . import wire
 from .plan import SourceLeg
 from .server import RegistryServer
-from .transport import REGISTRY_SOURCE, FetchResult, PushOutcome
+from .transport import (REGISTRY_SOURCE, FetchResult, PushOutcome,
+                        TransportMeter)
 
 __all__ = ["JournalFollower", "SocketRegistryServer", "SocketServerStats",
            "SocketTransport"]
@@ -137,7 +141,13 @@ def _read_frame(f: BinaryIO) -> Tuple[bytes, int]:
 class SocketServerStats:
     """Socket-level accounting (the frame-level meters live on the wrapped
     :class:`~repro.delivery.server.ServerStats`; the difference between the
-    two is exactly the envelope overhead)."""
+    two is exactly the envelope overhead).
+
+    An adapter view: the numbers live in the server's
+    :class:`~repro.obs.MetricsRegistry` (``socket_*`` series), which closes
+    the old read-modify-write hazard of unsynchronized ``+=`` across
+    connection threads — every increment goes through the registry's lock.
+    """
     connections: int = 0
     requests: int = 0
     errors: int = 0                # requests answered with an ERROR frame
@@ -166,8 +176,26 @@ class SocketRegistryServer:
         # header byte arrives the rest must follow within this window, so a
         # stalled or hostile client cannot pin a connection thread forever
         self.io_timeout = io_timeout
-        self.stats = SocketServerStats()
-        self._stats_lock = threading.Lock()
+        # socket_* series land in the wrapped server's registry, so one
+        # Op.METRICS scrape covers envelope accounting, frame-level server
+        # meters, cache behavior, and replication state together
+        self.metrics = server.metrics
+        m = self.metrics
+        self._m_connections = m.counter(
+            "socket_connections_total", "TCP connections accepted").labels()
+        self._m_open = m.gauge(
+            "socket_open_connections", "currently open connections").labels()
+        self._m_requests = m.counter(
+            "socket_requests_total", "request envelopes served").labels()
+        self._m_errors = m.counter(
+            "socket_errors_total",
+            "requests answered with an ERROR frame").labels()
+        self._m_ingress = m.counter(
+            "socket_ingress_bytes_total",
+            "request envelope bytes read off sockets").labels()
+        self._m_egress = m.counter(
+            "socket_egress_bytes_total",
+            "response envelope bytes written to sockets").labels()
         self._closing = False
         self._conns: Dict[int, socket.socket] = {}
         self._threads: set = set()
@@ -224,9 +252,19 @@ class SocketRegistryServer:
         for t in threads:
             t.join(timeout=5)
 
+    @property
+    def stats(self) -> SocketServerStats:
+        """Adapter view over the ``socket_*`` metric series — field names
+        unchanged from the original counter dataclass."""
+        return SocketServerStats(
+            connections=self._m_connections.value(),
+            requests=self._m_requests.value(),
+            errors=self._m_errors.value(),
+            ingress_bytes=self._m_ingress.value(),
+            egress_bytes=self._m_egress.value())
+
     def snapshot(self) -> SocketServerStats:
-        with self._stats_lock:
-            return self.stats.snapshot()
+        return self.stats
 
     # ------------------------------------------------------------- acceptor
 
@@ -239,8 +277,8 @@ class SocketRegistryServer:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             with self._conns_lock:
                 self._conns[id(conn)] = conn
-            with self._stats_lock:
-                self.stats.connections += 1
+            self._m_connections.inc()
+            self._m_open.inc()
             t = threading.Thread(target=self._serve, args=(conn,),
                                  name="socket-registry-conn", daemon=True)
             with self._conns_lock:
@@ -257,17 +295,15 @@ class SocketRegistryServer:
                 if req is None:
                     return                   # clean EOF between requests
                 op, lineage, tag, frames, req_bytes = req
-                with self._stats_lock:
-                    self.stats.requests += 1
-                    self.stats.ingress_bytes += req_bytes
+                self._m_requests.inc()
+                self._m_ingress.inc(req_bytes)
                 self._answer(conn, op, lineage, tag, frames)
         except (_ConnectionClosed, OSError):
             return                           # peer vanished / we are closing
         except wire.WireError as e:
             # malformed request envelope: the stream offset is unknowable,
             # so answer best-effort with an ERROR frame and drop the conn
-            with self._stats_lock:
-                self.stats.errors += 1
+            self._m_errors.inc()
             try:
                 self._send(conn, wire.encode_response(
                     wire.STATUS_ERROR,
@@ -287,6 +323,7 @@ class SocketRegistryServer:
             with self._conns_lock:
                 self._conns.pop(id(conn), None)
                 self._threads.discard(threading.current_thread())
+            self._m_open.dec()
 
     def _read_request(self, conn: socket.socket, rfile: BinaryIO
                       ) -> Optional[Tuple[wire.Op, str, str,
@@ -324,8 +361,7 @@ class SocketRegistryServer:
 
     def _send(self, conn: socket.socket, data: bytes) -> None:
         conn.sendall(data)
-        with self._stats_lock:
-            self.stats.egress_bytes += len(data)
+        self._m_egress.inc(len(data))
 
     def _answer(self, conn: socket.socket, op: wire.Op, lineage: str,
                 tag: str, frames: List[bytes]) -> None:
@@ -356,8 +392,7 @@ class SocketRegistryServer:
                     if isinstance(e, DeliveryError)
                     else wire.ErrorCode.INTERNAL)
             msg = str(e) or type(e).__name__
-            with self._stats_lock:
-                self.stats.errors += 1
+            self._m_errors.inc()
             self._send(conn, wire.encode_response(
                 wire.STATUS_ERROR, [wire.encode_error(code, msg)]))
             return
@@ -392,6 +427,9 @@ class SocketRegistryServer:
         if op is wire.Op.INFO:
             self._expect_frames(op, frames, 0)
             return [wire.encode_info(self.server.max_batch_chunks)]
+        if op is wire.Op.METRICS:
+            self._expect_frames(op, frames, 0)
+            return [self.server.handle_metrics()]
         if op is wire.Op.JOURNAL_SHIP:
             self._expect_frames(op, frames, 1)
             return self.server.handle_ship(frames[0])
@@ -451,7 +489,8 @@ class SocketTransport:
     verifies_payloads = True       # decode_chunk_batch hashes every payload
 
     def __init__(self, address: Tuple[str, int], batch_chunks: int = 64,
-                 timeout: float = DEFAULT_TIMEOUT, pool_size: int = 8):
+                 timeout: float = DEFAULT_TIMEOUT, pool_size: int = 8,
+                 metrics: Optional[MetricsRegistry] = None):
         self.address = (address[0], int(address[1]))
         self.batch_chunks = max(1, batch_chunks)
         self.timeout = timeout
@@ -459,8 +498,12 @@ class SocketTransport:
         self._pool: List[_Conn] = []
         self._pool_lock = threading.Lock()
         self._closed = False
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._meter = TransportMeter(self.metrics, self.name)
         # one control exchange: the server's response split, so pull plans
         # quote the streamed CHUNK_BATCH framing (and its envelope) exactly
+        # (unmetered, like scrape_metrics — neither contributes to any
+        # TransferReport, so metered bytes stay report-exact)
         _, frames, _ = self._exchange(wire.Op.INFO, "", "")
         self.response_batch_chunks = wire.decode_info(frames[0])
 
@@ -552,18 +595,24 @@ class SocketTransport:
     # ------------------------------------------------------------ transport
 
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.INDEX, lineage, tag)
+        self._meter.rec("index", t0, index=req_b + resp_b)
         return wire.decode_index(frames[0]), req_b + resp_b
 
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.LATEST_INDEX,
                                                lineage, "")
+        self._meter.rec("index", t0, index=req_b + resp_b)
         if not frames:
             return None, req_b + resp_b
         return wire.decode_index(frames[0]), req_b + resp_b
 
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.RECIPE, lineage, tag)
+        self._meter.rec("recipe", t0, recipe=req_b + resp_b)
         return wire.decode_recipe(frames[0]), req_b + resp_b
 
     def fetch_chunks(self, lineage: str, tag: str,
@@ -571,6 +620,7 @@ class SocketTransport:
         """One WANT exchange; response frames are decoded *as they arrive*,
         so with pipelined batches (several pooled connections in flight) the
         hash-verify of one batch overlaps the socket reads of the next."""
+        t0 = time.perf_counter()
         want = wire.encode_want(fps)
         req = wire.encode_request(wire.Op.WANT, lineage, tag, [want])
         conn = self._checkout()
@@ -603,6 +653,7 @@ class SocketTransport:
         leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
                         chunk_bytes=resp_bytes, want_bytes=len(req),
                         rounds=1)
+        self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
     def push(self, lineage: str, tag: str, recipe: Recipe,
@@ -610,6 +661,7 @@ class SocketTransport:
              parent_version: Optional[int] = None,
              claimed_root: Optional[bytes] = None,
              claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        t0 = time.perf_counter()
         hdr = wire.encode_push_header(wire.PushHeader(
             lineage=lineage, tag=tag, root=claimed_root,
             parent_version=parent_version, params=claimed_params))
@@ -629,25 +681,43 @@ class SocketTransport:
         recipe_share = wire.uvarint_len(len(recipe_frame)) + len(recipe_frame)
         chunk_share = sum(wire.uvarint_len(len(f)) + len(f)
                           for f in chunk_frames)
-        return PushOutcome(
+        outcome = PushOutcome(
             receipt=receipt,
             header_bytes=req_b - recipe_share - chunk_share + resp_b,
             recipe_bytes=recipe_share,
             chunk_bytes=chunk_share,
             rounds=1 if chunks else 0)
+        self._meter.rec("push", t0, index=outcome.header_bytes,
+                        recipe=outcome.recipe_bytes,
+                        chunk=outcome.chunk_bytes)
+        return outcome
 
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.HAS, "", "",
                                                [wire.encode_has(fps)])
+        self._meter.rec("has", t0, want=req_b + resp_b)
         return wire.decode_missing(frames[0]), req_b + resp_b
 
     def tags(self, lineage: str) -> List[str]:
+        t0 = time.perf_counter()
         _, frames, _ = self._exchange(wire.Op.TAGS, lineage, "",
                                       [wire.encode_tags_request(lineage)])
+        self._meter.rec("tags", t0)
         return wire.decode_tag_list(frames[0])
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
+
+    # ------------------------------------------------------------- scraping
+
+    def scrape_metrics(self) -> MetricsSnapshot:
+        """One ``Op.METRICS`` exchange: the live server's full metrics
+        snapshot, decoded.  Scrape traffic is deliberately unmetered on the
+        client side so ``transport_bytes_total`` stays report-exact."""
+        _, frames, _ = self._exchange(wire.Op.METRICS, "", "")
+        payload = wire.decode_metrics(frames[0])
+        return MetricsSnapshot.from_json(payload.decode("utf-8"))
 
     # ---------------------------------------------------------- replication
 
@@ -742,6 +812,19 @@ class JournalFollower:
         self.last_error: Optional[BaseException] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # follower counters land in the standby registry's metrics, next to
+        # its replication_apply_seconds histogram — one scrape of a standby
+        # shows records applied, duplicates skipped, and chunk backfill
+        m = registry.metrics
+        self._m_applied = m.counter(
+            "replication_records_applied_total",
+            "shipped records applied by this standby").labels()
+        self._m_dupes = m.counter(
+            "replication_duplicates_skipped_total",
+            "shipped records skipped as already applied").labels()
+        self._m_chunks = m.counter(
+            "replication_chunks_fetched_total",
+            "chunk payloads backfilled over WANT before replay").labels()
 
     # ----------------------------------------------------------------- sync
 
@@ -775,8 +858,10 @@ class JournalFollower:
                                                   raw=raw):
                     applied += 1
                     self.records_applied += 1
+                    self._m_applied.inc()
                 else:
                     self.duplicates_skipped += 1
+                    self._m_dupes.inc()
             new_head = log.head()
             self.primary.ack_journal(self.name, epoch, new_head)
             if new_head >= head:
@@ -804,6 +889,7 @@ class JournalFollower:
         for fp, data in got.items():
             self.registry.store.chunks.put(fp, data)
         self.chunks_fetched += len(got)
+        self._m_chunks.inc(len(got))
 
     # ------------------------------------------------------------ background
 

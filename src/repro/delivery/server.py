@@ -20,6 +20,17 @@ Wraps a ``repro.core.registry.Registry`` behind the wire format:
     (Unknown fingerprints in a WANT are still silently omitted; the session
     layer decides whether absence is an error.)
 
+Accounting is metrics-first: every handler increments ``registry_*`` series
+in the server's :class:`~repro.obs.MetricsRegistry` (request counts and
+latency histograms by ``op``, egress/ingress byte counters, an in-flight
+gauge, per-replica standby lag — catalog in ``docs/OBSERVABILITY.md``), and
+:class:`ServerStats` / :meth:`RegistryServer.snapshot` are *adapters* built
+from those same series, field-compatible with the original ad-hoc
+dataclass.  The metrics registry is internally locked, which also closes
+the old unsynchronized-increment hazard under the threaded socket server.
+:meth:`RegistryServer.handle_metrics` serves the whole registry (server +
+cache + core) as one METRICS frame for the ``Op.METRICS`` scrape.
+
 When the wrapped registry is directory-backed, an accepted ``handle_push``
 is durable before the receipt returns (chunk fsync + journaled commit — see
 :mod:`repro.core.registry`).
@@ -27,16 +38,23 @@ is durable before the receipt returns (chunk fsync + journaled commit — see
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.errors import DeliveryError
 from repro.core.registry import PushReceipt, Registry
 from repro.core.store import Recipe
+from repro.obs import MetricsRegistry
 
 from . import wire
 from .cache import DEFAULT_CAPACITY, TieredChunkCache
+
+# every request op the frontend answers (labels of registry_requests_total)
+_OPS = ("index", "recipe", "want", "has", "tags", "ship", "repl_ack",
+        "push", "metrics")
 
 
 @dataclasses.dataclass
@@ -79,20 +97,75 @@ class RegistryServer:
                  cache_bytes: int = DEFAULT_CAPACITY,
                  max_batch_chunks: int = 64,
                  warm_start: bool = True,
-                 warm_scan_limit: int = 50_000):
+                 warm_scan_limit: int = 50_000,
+                 metrics: Optional[MetricsRegistry] = None):
         self.registry = registry
-        self.cache = TieredChunkCache(registry.store.chunks, cache_bytes)
+        # one registry per server by default: the core Registry's own
+        # metrics, so a scrape covers commit latency + frontend + cache in
+        # a single snapshot.  Independent servers over different registries
+        # therefore never share counters.
+        if metrics is None:
+            metrics = getattr(registry, "metrics", None)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.cache = TieredChunkCache(registry.store.chunks, cache_bytes,
+                                      metrics=self.metrics)
         self.max_batch_chunks = max_batch_chunks
-        self.stats = ServerStats()
-        self._stats_lock = threading.Lock()
+        self._stats_lock = threading.Lock()       # legacy name; unused fields
         self._registry_lock = threading.RLock()   # Registry itself is not MT-safe
         self._inflight: Dict[bytes, _InFlight] = {}
         self._inflight_lock = threading.Lock()
         # replica name -> last acked replication offset (observability: a
         # primary can report standby lag without polling the standbys)
         self.replica_offsets: Dict[str, int] = {}
+        m = self.metrics
+        req = m.counter("registry_requests_total",
+                        "requests answered by the registry frontend",
+                        ("op",))
+        lat = m.histogram("registry_request_seconds",
+                          "registry frontend request latency", ("op",))
+        self._m_req = {op: req.labels(op) for op in _OPS}
+        self._m_lat = {op: lat.labels(op) for op in _OPS}
+        self._m_egress = m.counter(
+            "registry_egress_bytes_total",
+            "serialized frame bytes out (index/recipe/chunks)").labels()
+        self._m_ingress = m.counter(
+            "registry_ingress_bytes_total",
+            "serialized frame bytes in (wants/pushes)").labels()
+        self._m_chunks = m.counter(
+            "registry_chunks_served_total", "chunk payloads served").labels()
+        self._m_chunk_bytes = m.counter(
+            "registry_chunk_bytes_served_total",
+            "chunk payload bytes served").labels()
+        self._m_store_reads = m.counter(
+            "registry_store_reads_total",
+            "chunk reads that reached cache/store").labels()
+        self._m_coalesced = m.counter(
+            "registry_coalesced_reads_total",
+            "reads piggy-backed on an identical in-flight read").labels()
+        self._m_records_shipped = m.counter(
+            "registry_records_shipped_total",
+            "journal records streamed to standbys").labels()
+        self._m_inflight_gauge = m.gauge(
+            "registry_inflight_requests",
+            "requests currently being answered").labels()
+        self._m_lag = m.gauge(
+            "replication_standby_lag",
+            "primary log head minus the replica's last acked offset "
+            "(records)", ("replica",))
         if warm_start and registry.store.chunks.directory is not None:
-            self.stats.warmed_chunks = self._warm_from_store(warm_scan_limit)
+            self._warm_from_store(warm_scan_limit)
+
+    @contextlib.contextmanager
+    def _track(self, op: str):
+        """Meter one request: count by op, time it, track in-flight."""
+        self._m_inflight_gauge.inc()
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._m_lat[op].observe(time.perf_counter() - t0)
+            self._m_req[op].inc()
+            self._m_inflight_gauge.dec()
 
     def _warm_from_store(self, scan_limit: int) -> int:
         """Pre-load the memory tier from the recovered chunk index so a
@@ -112,7 +185,7 @@ class RegistryServer:
                          key=lambda e: e[1], reverse=True)  # offset desc
         warmed = 0
         for fp, _off, size in entries[:max(0, scan_limit)]:
-            free = self.cache.capacity_bytes - self.cache.stats.resident_bytes
+            free = self.cache.capacity_bytes - self.cache.resident_bytes
             if free <= 0:
                 break
             if size > free:
@@ -127,13 +200,12 @@ class RegistryServer:
         """Serialized INDEX frame for ``lineage:tag``.  An unknown lineage or
         tag raises the protocol-level :class:`repro.core.errors.DeliveryError`
         (never a bare ``KeyError``), so wire clients see a clean error."""
-        with self._registry_lock:
-            idx = self.registry.index_for_tag(lineage, tag)
-            frame = wire.encode_index(idx)
-        with self._stats_lock:
-            self.stats.index_requests += 1
-            self.stats.egress_bytes += len(frame)
-        return frame
+        with self._track("index"):
+            with self._registry_lock:
+                idx = self.registry.index_for_tag(lineage, tag)
+                frame = wire.encode_index(idx)
+            self._m_egress.inc(len(frame))
+            return frame
 
     def get_latest_index(self, lineage: str) -> Optional[bytes]:
         """Serialized INDEX frame of the lineage head, or None (new lineage)."""
@@ -141,19 +213,18 @@ class RegistryServer:
             idx = self.registry.latest_index(lineage)
             frame = wire.encode_index(idx) if idx is not None else None
         if frame is not None:
-            with self._stats_lock:
-                self.stats.index_requests += 1
-                self.stats.egress_bytes += len(frame)
+            with self._track("index"):
+                self._m_egress.inc(len(frame))
         return frame
 
     def get_recipe(self, lineage: str, tag: str) -> bytes:
         """Serialized RECIPE frame; :class:`DeliveryError` when unknown."""
-        with self._registry_lock:
-            frame = wire.encode_recipe(self.registry.recipe_for(lineage, tag))
-        with self._stats_lock:
-            self.stats.recipe_requests += 1
-            self.stats.egress_bytes += len(frame)
-        return frame
+        with self._track("recipe"):
+            with self._registry_lock:
+                frame = wire.encode_recipe(
+                    self.registry.recipe_for(lineage, tag))
+            self._m_egress.inc(len(frame))
+            return frame
 
     # ----------------------------------------------------------------- chunks
 
@@ -176,46 +247,45 @@ class RegistryServer:
         write each CHUNK_BATCH as it is built, overlapping store reads with
         the client's decode of earlier batches."""
         fps = wire.decode_want(want_frame)
-        with self._stats_lock:
-            self.stats.want_requests += 1
-            self.stats.ingress_bytes += len(want_frame)
+        self._m_ingress.inc(len(want_frame))
         n_frames = max(1, -(-len(fps) // self.max_batch_chunks))
         return n_frames, self._want_frames(fps)
 
     def _want_frames(self, fps: Sequence[bytes]) -> Iterable[bytes]:
-        produced = False
-        for start in range(0, len(fps), self.max_batch_chunks):
-            batch: Dict[bytes, bytes] = {}
-            for fp in fps[start:start + self.max_batch_chunks]:
-                data = self._read_chunk(fp)
-                if data is not None:
-                    batch[fp] = data
-            frame = wire.encode_chunk_batch(batch)
-            produced = True
-            with self._stats_lock:
-                self.stats.egress_bytes += len(frame)
-                self.stats.chunks_served += len(batch)
-                self.stats.chunk_bytes_served += sum(len(v) for v in batch.values())
-            yield frame
-        if not produced:                     # empty WANT still gets an answer
-            frame = wire.encode_chunk_batch({})
-            with self._stats_lock:
-                self.stats.egress_bytes += len(frame)
-            yield frame
+        # the request is metered around actual frame production, so the
+        # latency histogram covers the store reads a streamed WANT overlaps
+        # with the client's decode
+        with self._track("want"):
+            produced = False
+            for start in range(0, len(fps), self.max_batch_chunks):
+                batch: Dict[bytes, bytes] = {}
+                for fp in fps[start:start + self.max_batch_chunks]:
+                    data = self._read_chunk(fp)
+                    if data is not None:
+                        batch[fp] = data
+                frame = wire.encode_chunk_batch(batch)
+                produced = True
+                self._m_egress.inc(len(frame))
+                self._m_chunks.inc(len(batch))
+                self._m_chunk_bytes.inc(sum(len(v) for v in batch.values()))
+                yield frame
+            if not produced:                 # empty WANT still gets an answer
+                frame = wire.encode_chunk_batch({})
+                self._m_egress.inc(len(frame))
+                yield frame
 
     def handle_has(self, has_frame: bytes) -> bytes:
         """Answer a HAS presence query with a MISSING frame — the fps the
         registry does *not* hold.  A pusher then ships exactly these,
         getting cross-lineage server-side dedup for free."""
-        fps = wire.decode_has(has_frame)
-        with self._registry_lock:
-            missing = self.registry.has_chunks(fps)
-        resp = wire.encode_missing(missing)
-        with self._stats_lock:
-            self.stats.has_requests += 1
-            self.stats.ingress_bytes += len(has_frame)
-            self.stats.egress_bytes += len(resp)
-        return resp
+        with self._track("has"):
+            fps = wire.decode_has(has_frame)
+            with self._registry_lock:
+                missing = self.registry.has_chunks(fps)
+            resp = wire.encode_missing(missing)
+            self._m_ingress.inc(len(has_frame))
+            self._m_egress.inc(len(resp))
+            return resp
 
     def handle_tags(self, tags_frame: bytes) -> bytes:
         """Answer a TAGS listing query with a TAG_LIST frame.
@@ -223,14 +293,13 @@ class RegistryServer:
         Tag names are control-plane *protocol data*: routing them through a
         frame (instead of a Python attribute reach into the registry) keeps
         them metered and makes the query answerable over a socket."""
-        lineage = wire.decode_tags_request(tags_frame)
-        with self._registry_lock:
-            resp = wire.encode_tag_list(self.registry.tags(lineage))
-        with self._stats_lock:
-            self.stats.tags_requests += 1
-            self.stats.ingress_bytes += len(tags_frame)
-            self.stats.egress_bytes += len(resp)
-        return resp
+        with self._track("tags"):
+            lineage = wire.decode_tags_request(tags_frame)
+            with self._registry_lock:
+                resp = wire.encode_tag_list(self.registry.tags(lineage))
+            self._m_ingress.inc(len(tags_frame))
+            self._m_egress.inc(len(resp))
+            return resp
 
     # ------------------------------------------------------------ replication
 
@@ -245,26 +314,25 @@ class RegistryServer:
         epoch are meaningless and replaying across one would corrupt the
         standby.
         """
-        replica, epoch, start, limit = wire.decode_ship(ship_frame)
-        log = self.registry.replication
-        with self._registry_lock:
-            if limit and epoch != log.epoch:
-                raise DeliveryError(
-                    f"replication epoch mismatch: primary is at epoch "
-                    f"{log.epoch}, {replica or 'standby'} asked for epoch "
-                    f"{epoch} — the standby must full-resync from an empty "
-                    f"directory")
-            records = log.records_from(start, limit) if limit else []
-            head = log.head()
-            cur_epoch = log.epoch
-        frames = [wire.encode_repl_ack("", cur_epoch, head)]
-        frames += [wire.encode_record_frame(r) for r in records]
-        with self._stats_lock:
-            self.stats.ship_requests += 1
-            self.stats.records_shipped += len(records)
-            self.stats.ingress_bytes += len(ship_frame)
-            self.stats.egress_bytes += sum(len(f) for f in frames)
-        return frames
+        with self._track("ship"):
+            replica, epoch, start, limit = wire.decode_ship(ship_frame)
+            log = self.registry.replication
+            with self._registry_lock:
+                if limit and epoch != log.epoch:
+                    raise DeliveryError(
+                        f"replication epoch mismatch: primary is at epoch "
+                        f"{log.epoch}, {replica or 'standby'} asked for "
+                        f"epoch {epoch} — the standby must full-resync from "
+                        f"an empty directory")
+                records = log.records_from(start, limit) if limit else []
+                head = log.head()
+                cur_epoch = log.epoch
+            frames = [wire.encode_repl_ack("", cur_epoch, head)]
+            frames += [wire.encode_record_frame(r) for r in records]
+            self._m_records_shipped.inc(len(records))
+            self._m_ingress.inc(len(ship_frame))
+            self._m_egress.inc(sum(len(f) for f in frames))
+            return frames
 
     def handle_repl_ack(self, ack_frame: bytes) -> bytes:
         """Record a standby's applied offset; reply with the primary's
@@ -274,19 +342,20 @@ class RegistryServer:
         carries a meaningless offset: it is dropped — and any offset the
         replica reported under the old epoch is forgotten — so the lag
         table never mixes offsets across epochs."""
-        replica, epoch, offset = wire.decode_repl_ack(ack_frame)
-        log = self.registry.replication
-        with self._registry_lock:
-            if epoch == log.epoch:
-                self.replica_offsets[replica] = offset
-            else:
-                self.replica_offsets.pop(replica, None)
-            resp = wire.encode_repl_ack(replica, log.epoch, log.head())
-        with self._stats_lock:
-            self.stats.repl_acks += 1
-            self.stats.ingress_bytes += len(ack_frame)
-            self.stats.egress_bytes += len(resp)
-        return resp
+        with self._track("repl_ack"):
+            replica, epoch, offset = wire.decode_repl_ack(ack_frame)
+            log = self.registry.replication
+            with self._registry_lock:
+                head = log.head()
+                if epoch == log.epoch:
+                    self.replica_offsets[replica] = offset
+                    self._m_lag.labels(replica).set(max(0, head - offset))
+                else:
+                    self.replica_offsets.pop(replica, None)
+                resp = wire.encode_repl_ack(replica, log.epoch, head)
+            self._m_ingress.inc(len(ack_frame))
+            self._m_egress.inc(len(resp))
+            return resp
 
     def _read_chunk(self, fp: bytes) -> Optional[bytes]:
         """Cache/store read with request coalescing."""
@@ -301,8 +370,7 @@ class RegistryServer:
                 try:
                     try:
                         slot.value = self.cache.get(fp)
-                        with self._stats_lock:
-                            self.stats.store_reads += 1
+                        self._m_store_reads.inc()
                     except KeyError:
                         slot.value = None    # registry does not have it
                     except BaseException as e:
@@ -316,8 +384,7 @@ class RegistryServer:
             slot.event.wait()
             if slot.error is not None:       # leader failed (I/O error etc.)
                 continue                     # retry as a fresh leader
-            with self._stats_lock:
-                self.stats.coalesced_reads += 1
+            self._m_coalesced.inc()
             return slot.value
 
     # ------------------------------------------------------------------- push
@@ -332,39 +399,69 @@ class RegistryServer:
         Ingress is metered up-front: the frames crossed the wire whether or
         not the push is ultimately accepted.
         """
-        nbytes = (len(header_frame) + len(recipe_frame)
-                  + sum(len(f) for f in chunk_frames))
-        with self._stats_lock:
-            self.stats.ingress_bytes += nbytes
-        hdr = wire.decode_push_header(header_frame)
-        recipe = wire.decode_recipe(recipe_frame)
-        if hdr.root is None and recipe.fps:
-            # only an empty artifact may omit the root — otherwise omission
-            # would bypass the registry's index verification
-            raise wire.WireError(
-                f"push {hdr.lineage}:{hdr.tag}: non-empty recipe with no "
-                f"claimed root")
-        chunks: Dict[bytes, bytes] = {}
-        for f in chunk_frames:
-            chunks.update(wire.decode_chunk_batch(f))   # hashes every payload
-        with self._registry_lock:
-            receipt = self.registry.receive_push(
-                hdr.lineage, hdr.tag, recipe, chunks,
-                parent_version=hdr.parent_version, claimed_root=hdr.root,
-                claimed_params=hdr.params, chunks_verified=True)
-        for fp, data in chunks.items():
-            self.cache.put(fp, data)         # warm the cache for pullers
-        with self._stats_lock:
-            self.stats.pushes += 1
-        return receipt
+        with self._track("push"):
+            nbytes = (len(header_frame) + len(recipe_frame)
+                      + sum(len(f) for f in chunk_frames))
+            self._m_ingress.inc(nbytes)
+            hdr = wire.decode_push_header(header_frame)
+            recipe = wire.decode_recipe(recipe_frame)
+            if hdr.root is None and recipe.fps:
+                # only an empty artifact may omit the root — otherwise
+                # omission would bypass the registry's index verification
+                raise wire.WireError(
+                    f"push {hdr.lineage}:{hdr.tag}: non-empty recipe with "
+                    f"no claimed root")
+            chunks: Dict[bytes, bytes] = {}
+            for f in chunk_frames:
+                chunks.update(wire.decode_chunk_batch(f))  # hashes payloads
+            with self._registry_lock:
+                receipt = self.registry.receive_push(
+                    hdr.lineage, hdr.tag, recipe, chunks,
+                    parent_version=hdr.parent_version, claimed_root=hdr.root,
+                    claimed_params=hdr.params, chunks_verified=True)
+            for fp, data in chunks.items():
+                self.cache.put(fp, data)     # warm the cache for pullers
+            return receipt
+
+    # ---------------------------------------------------------------- metrics
+
+    def handle_metrics(self) -> bytes:
+        """One METRICS frame: the whole registry (frontend + cache + core)
+        serialized as a JSON snapshot — the ``Op.METRICS`` scrape body."""
+        with self._track("metrics"):
+            frame = wire.encode_metrics(
+                self.metrics.snapshot().to_json().encode("utf-8"))
+            self._m_egress.inc(len(frame))
+            return frame
 
     # ------------------------------------------------------------- accounting
 
+    @property
+    def stats(self) -> ServerStats:
+        """Adapter: the legacy stats dataclass, read from the metric
+        children (field names unchanged, values always current)."""
+        cache_stats = self.cache.stats
+        return ServerStats(
+            egress_bytes=self._m_egress.value(),
+            ingress_bytes=self._m_ingress.value(),
+            index_requests=self._m_req["index"].value(),
+            recipe_requests=self._m_req["recipe"].value(),
+            want_requests=self._m_req["want"].value(),
+            has_requests=self._m_req["has"].value(),
+            tags_requests=self._m_req["tags"].value(),
+            ship_requests=self._m_req["ship"].value(),
+            records_shipped=self._m_records_shipped.value(),
+            repl_acks=self._m_req["repl_ack"].value(),
+            chunks_served=self._m_chunks.value(),
+            chunk_bytes_served=self._m_chunk_bytes.value(),
+            store_reads=self._m_store_reads.value(),
+            coalesced_reads=self._m_coalesced.value(),
+            pushes=self._m_req["push"].value(),
+            warmed_chunks=cache_stats.warmed,
+            warm_hits=cache_stats.warm_hits)
+
     def snapshot(self) -> ServerStats:
-        warm_hits = self.cache.stats.warm_hits
-        with self._stats_lock:
-            self.stats.warm_hits = warm_hits
-            return self.stats.snapshot()
+        return self.stats
 
     def cache_hit_rate(self) -> float:
         return self.cache.stats.hit_rate

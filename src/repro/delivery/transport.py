@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Dict, List, Optional, Protocol, Sequence, Set, Tuple,\
     runtime_checkable
 
@@ -35,12 +36,61 @@ from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError
 from repro.core.registry import PushReceipt, Registry
 from repro.core.store import Recipe
+from repro.obs import MetricsRegistry, MetricsSnapshot
 
 from . import wire
 from .plan import SourceLeg
 from .server import RegistryServer
 
 REGISTRY_SOURCE = "registry"
+
+# client-side transport operations (labels of transport_op_seconds)
+_METER_OPS = ("index", "recipe", "fetch", "push", "has", "tags")
+# byte categories — chosen to mirror TransferReport exactly: after one pull
+# on a fresh transport, index == report.index_bytes, recipe ==
+# report.recipe_bytes, want == report.want_bytes, chunk ==
+# report.chunk_bytes (the conformance test in tests/test_transport.py
+# asserts this per transport)
+_METER_CATEGORIES = ("index", "recipe", "want", "chunk")
+
+
+class TransportMeter:
+    """Pre-bound instrument set one transport instance records into.
+
+    Byte accounting is taken from the same values the client folds into its
+    :class:`~repro.delivery.plan.TransferReport` (returned frame lengths,
+    source-leg want/chunk bytes), so per-transport metric totals and report
+    totals agree to the byte.  Only successful operations are metered —
+    a failed call contributed no report bytes either.
+    """
+
+    def __init__(self, metrics: MetricsRegistry, transport_name: str):
+        lat = metrics.histogram(
+            "transport_op_seconds",
+            "client-side transport operation latency",
+            ("transport", "op"))
+        byt = metrics.counter(
+            "transport_bytes_total",
+            "wire bytes by TransferReport category",
+            ("transport", "category"))
+        self._lat = {op: lat.labels(transport_name, op)
+                     for op in _METER_OPS}
+        self._bytes = {cat: byt.labels(transport_name, cat)
+                       for cat in _METER_CATEGORIES}
+
+    def rec(self, op: str, t0: float, **categories: int) -> None:
+        """Record one completed op: latency since ``t0`` plus any byte
+        deltas (``index=``/``recipe=``/``want=``/``chunk=``)."""
+        self._lat[op].observe(time.perf_counter() - t0)
+        for cat, n in categories.items():
+            if n:
+                self._bytes[cat].inc(n)
+
+    def rec_legs(self, t0: float, legs: Sequence[SourceLeg]) -> None:
+        """Record one completed ``fetch_chunks`` from its source legs."""
+        self.rec("fetch", t0,
+                 want=sum(l.want_bytes for l in legs),
+                 chunk=sum(l.chunk_bytes for l in legs))
 
 
 @dataclasses.dataclass
@@ -122,28 +172,42 @@ class LocalTransport:
     name = "local"
     verifies_payloads = False      # payloads come straight off local storage
 
-    def __init__(self, registry: Registry):
+    def __init__(self, registry: Registry,
+                 metrics: Optional[MetricsRegistry] = None):
         self.registry = registry
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._meter = TransportMeter(self.metrics, self.name)
 
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        t0 = time.perf_counter()
         idx = self.registry.index_for_tag(lineage, tag)
-        return idx, wire.index_wire_bytes(idx)
+        nbytes = wire.index_wire_bytes(idx)
+        self._meter.rec("index", t0, index=nbytes)
+        return idx, nbytes
 
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        t0 = time.perf_counter()
         idx = self.registry.latest_index(lineage)
-        return idx, wire.index_wire_bytes(idx) if idx is not None else 0
+        nbytes = wire.index_wire_bytes(idx) if idx is not None else 0
+        self._meter.rec("index", t0, index=nbytes)
+        return idx, nbytes
 
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        t0 = time.perf_counter()
         recipe = self.registry.recipe_for(lineage, tag)
-        return recipe, wire.recipe_wire_bytes(recipe)
+        nbytes = wire.recipe_wire_bytes(recipe)
+        self._meter.rec("recipe", t0, recipe=nbytes)
+        return recipe, nbytes
 
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
+        t0 = time.perf_counter()
         chunks = self.registry.serve_chunks(fps)
         leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
                         chunk_bytes=(wire.chunk_batch_wire_bytes(chunks)
                                      if chunks else 0),
                         rounds=1)
+        self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
     def push(self, lineage: str, tag: str, recipe: Recipe,
@@ -151,22 +215,33 @@ class LocalTransport:
              parent_version: Optional[int] = None,
              claimed_root: Optional[bytes] = None,
              claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        t0 = time.perf_counter()
         receipt = self.registry.receive_push(
             lineage, tag, recipe, chunks, parent_version=parent_version,
             claimed_root=claimed_root, claimed_params=claimed_params)
         idx = self.registry.index_for_tag(lineage, tag)
-        return PushOutcome(
+        outcome = PushOutcome(
             receipt=receipt,
             header_bytes=wire.index_wire_bytes(idx),   # index upload
             recipe_bytes=wire.recipe_wire_bytes(recipe),
             chunk_bytes=wire.chunk_batch_wire_bytes(chunks) if chunks else 0,
             rounds=1 if chunks else 0)
+        self._meter.rec("push", t0, index=outcome.header_bytes,
+                        recipe=outcome.recipe_bytes,
+                        chunk=outcome.chunk_bytes)
+        return outcome
 
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
-        return self.registry.has_chunks(fps), 0
+        t0 = time.perf_counter()
+        missing = self.registry.has_chunks(fps)
+        self._meter.rec("has", t0)
+        return missing, 0
 
     def tags(self, lineage: str) -> List[str]:
-        return self.registry.tags(lineage)
+        t0 = time.perf_counter()
+        out = self.registry.tags(lineage)
+        self._meter.rec("tags", t0)
+        return out
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
@@ -190,29 +265,40 @@ class WireTransport:
     name = "wire"
     verifies_payloads = True
 
-    def __init__(self, server: RegistryServer, batch_chunks: int = 64):
+    def __init__(self, server: RegistryServer, batch_chunks: int = 64,
+                 metrics: Optional[MetricsRegistry] = None):
         self.server = server
         self.batch_chunks = max(1, batch_chunks)   # push CHUNK_BATCH framing
         # the server splits each WANT into frames of at most this many
         # chunks — pull plans use it to quote response framing exactly
         self.response_batch_chunks = server.max_batch_chunks
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._meter = TransportMeter(self.metrics, self.name)
 
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        t0 = time.perf_counter()
         frame = self.server.get_index(lineage, tag)
+        self._meter.rec("index", t0, index=len(frame))
         return wire.decode_index(frame), len(frame)
 
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
+        t0 = time.perf_counter()
         frame = self.server.get_latest_index(lineage)
+        self._meter.rec("index", t0,
+                        index=len(frame) if frame is not None else 0)
         if frame is None:
             return None, 0
         return wire.decode_index(frame), len(frame)
 
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
+        t0 = time.perf_counter()
         frame = self.server.get_recipe(lineage, tag)
+        self._meter.rec("recipe", t0, recipe=len(frame))
         return wire.decode_recipe(frame), len(frame)
 
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
+        t0 = time.perf_counter()
         want = wire.encode_want(fps)
         frames = self.server.handle_want(want)
         chunks: Dict[bytes, bytes] = {}
@@ -222,6 +308,7 @@ class WireTransport:
             chunks.update(wire.decode_chunk_batch(f))
         leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
                         chunk_bytes=nbytes, want_bytes=len(want), rounds=1)
+        self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
     def push(self, lineage: str, tag: str, recipe: Recipe,
@@ -229,6 +316,7 @@ class WireTransport:
              parent_version: Optional[int] = None,
              claimed_root: Optional[bytes] = None,
              claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
+        t0 = time.perf_counter()
         hdr = wire.encode_push_header(wire.PushHeader(
             lineage=lineage, tag=tag, root=claimed_root,
             parent_version=parent_version, params=claimed_params))
@@ -242,22 +330,38 @@ class WireTransport:
         receipt = self.server.handle_push(hdr, recipe_frame, chunk_frames)
         # the registry rebuilds the index from the recipe, so no INDEX frame
         # is uploaded — the claimed root rides in the header
-        return PushOutcome(receipt=receipt, header_bytes=len(hdr),
-                           recipe_bytes=len(recipe_frame),
-                           chunk_bytes=sum(len(f) for f in chunk_frames),
-                           rounds=len(chunk_frames))
+        outcome = PushOutcome(receipt=receipt, header_bytes=len(hdr),
+                              recipe_bytes=len(recipe_frame),
+                              chunk_bytes=sum(len(f) for f in chunk_frames),
+                              rounds=len(chunk_frames))
+        self._meter.rec("push", t0, index=outcome.header_bytes,
+                        recipe=outcome.recipe_bytes,
+                        chunk=outcome.chunk_bytes)
+        return outcome
 
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
+        t0 = time.perf_counter()
         req = wire.encode_has(fps)
         resp = self.server.handle_has(req)
+        self._meter.rec("has", t0, want=len(req) + len(resp))
         return wire.decode_missing(resp), len(req) + len(resp)
 
     def tags(self, lineage: str) -> List[str]:
         # control-plane query, but still protocol data: a TAGS frame in, a
         # TAG_LIST frame back, both metered by the server — the same frames
         # the socket path sends, so no byte silently skips the meters
+        t0 = time.perf_counter()
         resp = self.server.handle_tags(wire.encode_tags_request(lineage))
+        self._meter.rec("tags", t0)
         return wire.decode_tag_list(resp)
+
+    def scrape_metrics(self) -> MetricsSnapshot:
+        """The server's live metrics as a decoded
+        :class:`repro.obs.MetricsSnapshot` (in-process analogue of the
+        socket path's ``Op.METRICS`` scrape)."""
+        frame = self.server.handle_metrics()
+        return MetricsSnapshot.from_json(
+            wire.decode_metrics(frame).decode("utf-8"))
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
@@ -305,17 +409,23 @@ class SwarmTransport:
     verifies_payloads = True
 
     def __init__(self, node, tracker, server,
-                 max_peers: int = 4, batch_chunks: int = 64):
+                 max_peers: int = 4, batch_chunks: int = 64,
+                 metrics: Optional[MetricsRegistry] = None):
         self.node = node
         self.tracker = tracker
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._meter = TransportMeter(self.metrics, self.name)
         # `server` is either a RegistryServer (historical form, wrapped in a
         # WireTransport) or any ready registry-facing Transport — e.g. a
         # SocketTransport, putting the swarm's fallback on a real socket.
         # `batch_chunks` only shapes the wrapper built here; a ready
-        # transport keeps the framing it was constructed with.
+        # transport keeps the framing it was constructed with.  A wrapper
+        # built here shares this transport's metrics registry (its own
+        # series land under transport="wire"), so one snapshot shows the
+        # swarm level and its registry fallback side by side.
         if isinstance(server, RegistryServer):
             self.registry_transport = WireTransport(
-                server, batch_chunks=batch_chunks)
+                server, batch_chunks=batch_chunks, metrics=self.metrics)
         else:
             self.registry_transport = server
         self.max_peers = max_peers
@@ -323,29 +433,50 @@ class SwarmTransport:
     # registry-delegated control plane --------------------------------------
 
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
-        return self.registry_transport.get_index(lineage, tag)
+        t0 = time.perf_counter()
+        tree, nbytes = self.registry_transport.get_index(lineage, tag)
+        self._meter.rec("index", t0, index=nbytes)
+        return tree, nbytes
 
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
-        return self.registry_transport.get_latest_index(lineage)
+        t0 = time.perf_counter()
+        tree, nbytes = self.registry_transport.get_latest_index(lineage)
+        self._meter.rec("index", t0, index=nbytes)
+        return tree, nbytes
 
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
-        return self.registry_transport.get_recipe(lineage, tag)
+        t0 = time.perf_counter()
+        recipe, nbytes = self.registry_transport.get_recipe(lineage, tag)
+        self._meter.rec("recipe", t0, recipe=nbytes)
+        return recipe, nbytes
 
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], **kw) -> PushOutcome:
-        return self.registry_transport.push(lineage, tag, recipe, chunks,
-                                            **kw)
+        t0 = time.perf_counter()
+        outcome = self.registry_transport.push(lineage, tag, recipe, chunks,
+                                               **kw)
+        self._meter.rec("push", t0, index=outcome.header_bytes,
+                        recipe=outcome.recipe_bytes,
+                        chunk=outcome.chunk_bytes)
+        return outcome
 
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
-        return self.registry_transport.has_chunks(fps)
+        t0 = time.perf_counter()
+        missing, nbytes = self.registry_transport.has_chunks(fps)
+        self._meter.rec("has", t0, want=nbytes)
+        return missing, nbytes
 
     def tags(self, lineage: str) -> List[str]:
-        return self.registry_transport.tags(lineage)
+        t0 = time.perf_counter()
+        out = self.registry_transport.tags(lineage)
+        self._meter.rec("tags", t0)
+        return out
 
     # peer-first data plane --------------------------------------------------
 
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
+        t0 = time.perf_counter()
         chunks: Dict[bytes, bytes] = {}
         legs: List[SourceLeg] = []
         wanted = list(fps)
@@ -380,6 +511,7 @@ class SwarmTransport:
             res = self.registry_transport.fetch_chunks(lineage, tag, wanted)
             chunks.update(res.chunks)
             legs.extend(res.legs)
+        self._meter.rec_legs(t0, legs)
         return FetchResult(chunks=chunks, legs=legs)
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
@@ -437,7 +569,8 @@ class ReplicatedTransport:
     # the replicas instead of all electing the same first choice
     _stagger = itertools.count()
 
-    def __init__(self, replicas: Sequence[Transport], primary: int = 0):
+    def __init__(self, replicas: Sequence[Transport], primary: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
         if not replicas:
             raise ValueError("ReplicatedTransport needs at least one replica")
         if not 0 <= primary < len(replicas):
@@ -454,6 +587,14 @@ class ReplicatedTransport:
         self._rr = next(ReplicatedTransport._stagger)
         self.promotions = 0        # primaries replaced after death
         self.stale_detected = 0    # stale replica probes/fetches absorbed
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._meter = TransportMeter(self.metrics, self.name)
+        self._m_promotions = self.metrics.counter(
+            "replicated_promotions_total",
+            "dead primaries replaced by a standby").labels()
+        self._m_stale = self.metrics.counter(
+            "replicated_stale_detected_total",
+            "stale replica probes/fetches absorbed").labels()
 
     # ------------------------------------------------------------- lifecycle
 
@@ -489,6 +630,7 @@ class ReplicatedTransport:
         with self._lock:
             self._stale.setdefault(key, set()).add(idx)
             self.stale_detected += 1
+        self._m_stale.inc()
 
     def _probe_alive(self, idx: int) -> bool:
         """Distinguish a dead replica from a live one returning a protocol
@@ -532,6 +674,11 @@ class ReplicatedTransport:
             if self._primary in self._dead:
                 self._primary = best
                 self.promotions += 1
+                promoted = True
+            else:
+                promoted = False
+        if promoted:
+            self._m_promotions.inc()
 
     def _on_primary(self, fn):
         """Run ``fn(primary_transport)``; a dead primary is replaced by the
@@ -552,31 +699,50 @@ class ReplicatedTransport:
     # --------------------------------------------- control plane (primary)
 
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
+        t0 = time.perf_counter()
         tree, nbytes = self._on_primary(lambda t: t.get_index(lineage, tag))
         with self._lock:
             self._roots[(lineage, tag)] = tree.root
+        self._meter.rec("index", t0, index=nbytes)
         return tree, nbytes
 
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
-        return self._on_primary(lambda t: t.get_latest_index(lineage))
+        t0 = time.perf_counter()
+        tree, nbytes = self._on_primary(lambda t: t.get_latest_index(lineage))
+        self._meter.rec("index", t0, index=nbytes)
+        return tree, nbytes
 
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
-        return self._on_primary(lambda t: t.get_recipe(lineage, tag))
+        t0 = time.perf_counter()
+        recipe, nbytes = self._on_primary(lambda t: t.get_recipe(lineage, tag))
+        self._meter.rec("recipe", t0, recipe=nbytes)
+        return recipe, nbytes
 
     def tags(self, lineage: str) -> List[str]:
-        return self._on_primary(lambda t: t.tags(lineage))
+        t0 = time.perf_counter()
+        out = self._on_primary(lambda t: t.tags(lineage))
+        self._meter.rec("tags", t0)
+        return out
 
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
-        return self._on_primary(lambda t: t.has_chunks(fps))
+        t0 = time.perf_counter()
+        missing, nbytes = self._on_primary(lambda t: t.has_chunks(fps))
+        self._meter.rec("has", t0, want=nbytes)
+        return missing, nbytes
 
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], *,
              parent_version: Optional[int] = None,
              claimed_root: Optional[bytes] = None,
              claimed_params: Optional[CDMTParams] = None) -> PushOutcome:
-        return self._on_primary(lambda t: t.push(
+        t0 = time.perf_counter()
+        outcome = self._on_primary(lambda t: t.push(
             lineage, tag, recipe, chunks, parent_version=parent_version,
             claimed_root=claimed_root, claimed_params=claimed_params))
+        self._meter.rec("push", t0, index=outcome.header_bytes,
+                        recipe=outcome.recipe_bytes,
+                        chunk=outcome.chunk_bytes)
+        return outcome
 
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
@@ -624,6 +790,7 @@ class ReplicatedTransport:
 
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
+        t0 = time.perf_counter()
         key = (lineage, tag)
         chunks: Dict[bytes, bytes] = {}
         legs: List[SourceLeg] = []
@@ -687,6 +854,7 @@ class ReplicatedTransport:
                 leg.source = REGISTRY_SOURCE
             legs.extend(res.legs)
             chunks.update(res.chunks)
+        self._meter.rec_legs(t0, legs)
         return FetchResult(chunks=chunks, legs=legs)
 
     # -------------------------------------------------------------- quoting

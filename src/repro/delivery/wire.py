@@ -37,6 +37,10 @@ frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
                    by a standby to report applied progress, and returned by
                    the primary (as a ship-response header and as the ack
                    reply) to publish its current epoch and log head.
+  ``METRICS``      a live metrics scrape: one UTF-8 JSON document in the
+                   ``repro.obs.MetricsSnapshot`` shape, so any client can
+                   read a server's counters/gauges/histograms over the
+                   same socket that moves chunks.
 
 All decoders raise :class:`WireError` on truncation, bad magic, trailing
 garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
@@ -86,6 +90,7 @@ class FrameType(enum.IntEnum):
     SHIP = 13
     RECORD = 14
     REPL_ACK = 15
+    METRICS = 16
 
 
 class Op(enum.IntEnum):
@@ -100,6 +105,7 @@ class Op(enum.IntEnum):
     INFO = 8           # -> INFO frame
     JOURNAL_SHIP = 9   # SHIP frame -> REPL_ACK frame + RECORD frames
     REPL_ACK = 10      # REPL_ACK frame -> REPL_ACK frame (primary's head)
+    METRICS = 11       # -> METRICS frame (JSON metrics snapshot)
 
 
 class ErrorCode(enum.IntEnum):
@@ -595,6 +601,25 @@ def decode_info(buf: bytes) -> int:
     if off != len(payload):
         raise WireError("trailing bytes in INFO payload")
     return val
+
+
+# ----------------------------------------------------------------- METRICS
+#
+# A live metrics scrape: the payload is one UTF-8 JSON document — the
+# ``repro.obs.MetricsSnapshot.to_json`` form (``{"v": 1, "families":
+# [...]}``).  Keeping the payload opaque JSON (rather than a binary schema)
+# means the metric catalog can grow without a wire version bump; the frame
+# header + length still make it a normal self-delimiting frame on the
+# socket, and ``Op.METRICS`` answers with exactly one of these.
+
+def encode_metrics(snapshot_json: bytes) -> bytes:
+    return encode_frame(FrameType.METRICS, snapshot_json)
+
+
+def decode_metrics(buf: bytes) -> bytes:
+    """The snapshot JSON bytes (decode with
+    :meth:`repro.obs.MetricsSnapshot.from_json`)."""
+    return _decode_single(buf, FrameType.METRICS)
 
 
 # ------------------------------------------- SHIP / RECORD / REPL_ACK

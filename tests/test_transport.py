@@ -816,3 +816,110 @@ class TestWarmStart:
             assert srv.snapshot().warmed_chunks > 0
         finally:
             reg.close()
+
+
+# --------------------------------------------------- metrics conformance
+
+class TestMetricsConformance:
+    """Per-transport metric byte totals must equal the TransferReport for
+    the same traffic, byte for byte — the metrics layer is an alternative
+    view of the same measurement points, not a second estimate."""
+
+    def _categories(self, transport):
+        snap = transport.metrics.snapshot()
+
+        def val(cat):
+            return snap.value("transport_bytes_total",
+                              {"transport": transport.name, "category": cat})
+        return {cat: val(cat) for cat in ("index", "recipe", "want", "chunk")}
+
+    @pytest.mark.parametrize("kind", TRANSPORTS)
+    def test_pull_bytes_match_report_exactly(self, kind):
+        versions = _versions(4, seed=61)
+        reg = _seed_registry(versions)
+        cl = _fresh_client(kind, reg, provisioned_tags=("v1",))
+        try:
+            rep = cl.pull("app", "v2")
+            got = self._categories(cl.transport)
+            assert got == {"index": rep.index_bytes,
+                           "recipe": rep.recipe_bytes,
+                           "want": rep.want_bytes,
+                           "chunk": rep.chunk_bytes}
+            assert sum(got.values()) == rep.total_wire_bytes
+        finally:
+            _cleanup_client(cl)
+
+    @pytest.mark.parametrize("kind", TRANSPORTS)
+    def test_push_bytes_match_report_exactly(self, kind):
+        versions = _versions(3, seed=62)
+        reg = _seed_registry(versions)
+        cl = _fresh_client(kind, reg)
+        try:
+            data = versions[-1] + _rand(5000, seed=63)
+            cl.commit("app", "v9", data)
+            rep = cl.push("app", "v9")
+            got = self._categories(cl.transport)
+            assert got == {"index": rep.index_bytes,
+                           "recipe": rep.recipe_bytes,
+                           "want": rep.want_bytes,
+                           "chunk": rep.chunk_bytes}
+        finally:
+            _cleanup_client(cl)
+
+    def test_client_adopts_transport_registry(self):
+        reg = _seed_registry(_versions(2, seed=64))
+        cl = _fresh_client("local", reg)
+        assert cl.metrics is cl.transport.metrics
+        cl.pull("app", "v1")
+        snap = cl.metrics.snapshot()
+        h = snap.histogram("client_pull_seconds", {"transport": "local"})
+        assert h is not None and h.count == 1
+
+
+class TestMetricsScrape:
+    """``Op.METRICS`` over a live socket: the scraped snapshot must match
+    the in-process one (same registry, same numbers)."""
+
+    def test_scrape_matches_in_process_snapshot(self):
+        versions = _versions(3, seed=65)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        with SocketRegistryServer(srv) as sock_srv, \
+                SocketTransport(sock_srv.address) as transport:
+            cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+            cl.pull("app", "v2")
+            scraped = transport.scrape_metrics()
+            local = srv.metrics.snapshot()
+            # request-latency histogram: same op counts over the wire
+            for op in ("index", "recipe", "want"):
+                got = scraped.histogram("registry_request_seconds",
+                                        {"op": op})
+                want = local.histogram("registry_request_seconds",
+                                       {"op": op})
+                assert got is not None and got.count == want.count
+            # counters and cache numbers identical (a scrape adds only
+            # "metrics"-op and socket-level series, counted after snapshot)
+            assert scraped.value("registry_requests_total", {"op": "want"}) \
+                == local.value("registry_requests_total", {"op": "want"})
+            assert scraped.value("cache_hits_total", {}) \
+                == local.value("cache_hits_total", {})
+            assert scraped.value("cache_misses_total", {}) \
+                == local.value("cache_misses_total", {})
+            # socket envelope series ride in the same scrape
+            assert scraped.value("socket_requests_total", {}) >= 1
+
+    def test_scrape_reports_standby_lag(self):
+        versions = _versions(3, seed=66)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        with SocketRegistryServer(srv) as sock_srv, \
+                SocketTransport(sock_srv.address) as transport:
+            standby = Registry(cdmt_params=P)
+            try:
+                JournalFollower(standby, transport, name="s0").sync_once()
+                scraped = transport.scrape_metrics()
+                lag = scraped.value("replication_standby_lag",
+                                    {"replica": "s0"}, default=None)
+                assert lag == 0            # fully caught up and acked
+            finally:
+                standby.close()

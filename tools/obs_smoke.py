@@ -1,0 +1,120 @@
+"""End-to-end observability smoke — the CI gate for the metrics pipeline.
+
+One real socket rollout with metrics + tracing enabled, then every
+observability surface is exercised and checked:
+
+  1. a live ``Op.METRICS`` scrape off the running ``SocketRegistryServer``;
+  2. the scraped snapshot must carry the expected series (request-latency
+     histograms per op, cache hits/misses, socket envelope accounting) and
+     agree with the in-process snapshot;
+  3. its Prometheus exposition must round-trip through the parser;
+  4. a second scrape, after more traffic, must be monotonically ≥ the
+     first on every counter (``check_monotonic``);
+  5. client-side metric byte totals must equal the pull's
+     ``TransferReport`` byte for byte;
+  6. the tracer must have recorded one span tree per pull, printable by
+     ``tools/trace_dump.py``.
+
+Exits non-zero with a message on the first violated check.
+
+Usage:  PYTHONPATH=$PWD/src python tools/obs_smoke.py
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams
+from repro.core.registry import Registry
+from repro.delivery import (ImageClient, LocalTransport, RegistryServer,
+                            SocketRegistryServer, SocketTransport)
+from repro.obs import (Tracer, check_monotonic, parse_prometheus_text,
+                       to_prometheus_text)
+
+CDC_PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+CDMT_PARAMS = CDMTParams(window=4, rule_bits=2)
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def check(cond: bool, msg: str) -> None:
+    if not cond:
+        fail(msg)
+    print(f"ok: {msg}")
+
+
+def main() -> int:
+    reg = Registry(cdmt_params=CDMT_PARAMS)
+    pub = ImageClient(LocalTransport(reg), cdc_params=CDC_PARAMS,
+                      cdmt_params=CDMT_PARAMS)
+    blob = bytes(range(256)) * 3000
+    pub.commit("app", "v1", blob)
+    pub.push("app", "v1")
+    pub.commit("app", "v2", blob + b"delta" * 800)
+    pub.push("app", "v2")
+
+    srv = RegistryServer(reg)
+    tracer = Tracer(enabled=True)
+    with SocketRegistryServer(srv) as sock_srv, \
+            SocketTransport(sock_srv.address) as transport:
+        cl = ImageClient(transport, cdc_params=CDC_PARAMS,
+                         cdmt_params=CDMT_PARAMS, tracer=tracer)
+        rep1 = cl.pull("app", "v1")
+
+        # -- first scrape: schema + agreement with the in-process snapshot
+        scraped = transport.scrape_metrics()
+        local = srv.metrics.snapshot()
+        for name in ("registry_requests_total", "registry_request_seconds",
+                     "registry_egress_bytes_total", "cache_hits_total",
+                     "cache_misses_total", "socket_requests_total",
+                     "socket_egress_bytes_total"):
+            check(scraped.family(name) is not None,
+                  f"scrape carries {name}")
+        for op in ("index", "recipe", "want"):
+            got = scraped.histogram("registry_request_seconds", {"op": op})
+            want = got is not None and got.count >= 1
+            check(want, f"request-latency histogram has {op} samples")
+        check(scraped.value("cache_misses_total", {})
+              == local.value("cache_misses_total", {}),
+              "scraped cache counters equal in-process snapshot")
+
+        # -- exposition round-trips
+        text = to_prometheus_text(scraped)
+        parsed = parse_prometheus_text(text)
+        check(len(parsed) > 50, f"prometheus exposition parses "
+                                f"({len(parsed)} samples)")
+
+        # -- more traffic, second scrape: counters are monotonic
+        rep2 = cl.pull("app", "v2")
+        scraped2 = transport.scrape_metrics()
+        violations = check_monotonic(scraped, scraped2)
+        check(violations == [],
+              f"counters monotonic across scrapes {violations or ''}")
+
+        # -- client metric bytes equal the reports, to the byte
+        snap = cl.metrics.snapshot()
+        total = snap.value("client_wire_bytes_total",
+                           {"transport": "socket"})
+        check(total == rep1.total_wire_bytes + rep2.total_wire_bytes,
+              "client byte counters equal TransferReport totals")
+
+    # -- tracing captured both pulls; the dump tool renders them
+    roots = tracer.take()
+    check(len(roots) == 2, f"one span tree per pull ({len(roots)})")
+    check(roots[0].name == "pull" and roots[0].children,
+          "span tree rooted at 'pull' with children")
+    import json
+
+    from trace_dump import dump  # sibling script; sys.path[0] is tools/
+    n = dump(json.dumps([sp.to_dict() for sp in roots]))
+    check(n == 2, "trace_dump renders the recorded trees")
+    print("obs smoke: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Pretty-print recorded pull-trace span trees.
+
+Input is the JSON shape ``Span.to_dict`` produces — either a single span
+object or a list of them — read from a file or stdin.  Output is one
+indented tree per root span with durations, self-time, and attributes::
+
+    pull  5.7ms  (self 0.1ms)  lineage=app tag=v2
+      plan_pull  1.2ms  chunks_missing=141 ...
+      execute  4.5ms  (self 0.5ms)  transport=socket ...
+        fetch_batch  1.6ms  batch=0 chunks=64
+        ...
+
+``--demo`` runs a small in-process traced pull and dumps it — a smoke test
+for the tracing pipeline that needs no prior capture.
+
+Usage:  PYTHONPATH=$PWD/src python tools/trace_dump.py trace.json
+        ... | PYTHONPATH=$PWD/src python tools/trace_dump.py -
+        PYTHONPATH=$PWD/src python tools/trace_dump.py --demo
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+from repro.obs import Span
+
+
+def _fmt_ms(seconds: float) -> str:
+    return f"{seconds * 1e3:.2f}ms"
+
+
+def _fmt_attrs(attrs: dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in sorted(attrs.items()))
+
+
+def render(span: Span, indent: int = 0, out=sys.stdout) -> None:
+    self_time = span.duration - sum(c.duration for c in span.children)
+    parts = ["  " * indent + span.name, _fmt_ms(span.duration)]
+    if span.children:
+        parts.append(f"(self {_fmt_ms(max(0.0, self_time))})")
+    if span.attrs:
+        parts.append(_fmt_attrs(span.attrs))
+    print("  ".join(parts), file=out)
+    for child in span.children:
+        render(child, indent + 1, out)
+
+
+def load_spans(text: str) -> List[Span]:
+    obj = json.loads(text)
+    if isinstance(obj, dict):
+        obj = [obj]
+    if not isinstance(obj, list):
+        raise ValueError("expected a span object or a list of them")
+    return [Span.from_dict(entry) for entry in obj]
+
+
+def dump(text: str, out=sys.stdout) -> int:
+    spans = load_spans(text)
+    for i, span in enumerate(spans):
+        if i:
+            print(file=out)
+        render(span, out=out)
+    return len(spans)
+
+
+def _demo() -> str:
+    """A real traced socket pull, serialized — what a capture looks like."""
+    from repro.core import cdc
+    from repro.core.cdmt import CDMTParams
+    from repro.core.registry import Registry
+    from repro.delivery import (ImageClient, LocalTransport, RegistryServer,
+                                SocketRegistryServer, SocketTransport)
+    from repro.obs import Tracer
+
+    params = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+    tree_params = CDMTParams(window=4, rule_bits=2)
+    reg = Registry(cdmt_params=tree_params)
+    pub = ImageClient(LocalTransport(reg), cdc_params=params,
+                      cdmt_params=tree_params)
+    blob = bytes(range(256)) * 2000
+    pub.commit("demo", "v1", blob)
+    pub.push("demo", "v1")
+    pub.commit("demo", "v2", blob + b"tail" * 600)
+    pub.push("demo", "v2")
+
+    tracer = Tracer(enabled=True)
+    with SocketRegistryServer(RegistryServer(reg)) as sock_srv, \
+            SocketTransport(sock_srv.address) as transport:
+        cl = ImageClient(transport, cdc_params=params,
+                         cdmt_params=tree_params, tracer=tracer)
+        cl.pull("demo", "v1")
+        cl.pull("demo", "v2")
+    return json.dumps([sp.to_dict() for sp in tracer.take()])
+
+
+def main(argv: List[str]) -> int:
+    if "--demo" in argv:
+        dump(_demo())
+        return 0
+    if not argv or argv[0] == "-":
+        text = sys.stdin.read()
+    else:
+        with open(argv[0]) as f:
+            text = f.read()
+    if not dump(text):
+        print("no spans in input", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
