@@ -1,0 +1,70 @@
+"""Static-analysis gate cost: what the `analyze` CI job pays per run.
+
+The gate is on the critical path of every PR, so its runtime is a budget
+we track like any other: per-analyzer wall time over the real source
+trees (guarded-by lint, lock-order analyzer, wire-drift checker), with
+the work each one did (files, fields, accesses, locks, edges, codec
+round-trips, sizing identities) and — the invariant — zero violations.
+
+Emits ``BENCH_analysis.json`` for CI diffing.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+
+from repro.analysis import guarded, lockorder, wiredrift
+
+from benchmarks.common import Report, Timer, write_json
+
+REPS = 5
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WIRE_DOC = os.path.join(ROOT, "docs", "WIRE_PROTOCOL.md")
+
+
+def _scan_paths() -> list:
+    out = []
+    for sub in ("core", "delivery", "obs"):
+        out.extend(sorted(glob.glob(
+            os.path.join(ROOT, "src", "repro", sub, "*.py"))))
+    return out
+
+
+def _best(fn):
+    best, result = None, None
+    for _ in range(REPS):
+        with Timer() as t:
+            result = fn()
+        best = t.s if best is None else min(best, t.s)
+    return best * 1e3, result
+
+
+def run() -> Report:
+    rep = Report("analysis")
+    paths = _scan_paths()
+
+    ms, (g_findings, g_stats) = _best(lambda: guarded.check_files(paths))
+    rep.add(analyzer="guarded_by", ms=ms, files=g_stats["files"],
+            classes=g_stats["classes"],
+            guarded_fields=g_stats["guarded_fields"],
+            external_fields=g_stats["external_fields"],
+            accesses_checked=g_stats["accesses_checked"],
+            violations=len(g_findings))
+
+    ms, lo = _best(lambda: lockorder.analyze_files(paths))
+    rep.add(analyzer="lock_order", ms=ms, files=len(paths),
+            classes=lo.stats["classes"],
+            locks=len(lo.nodes), edges=len(lo.edges),
+            violations=len(lo.findings))
+
+    ms, (w_findings, w_stats) = _best(lambda: wiredrift.check_all(WIRE_DOC))
+    rep.add(analyzer="wire_drift", ms=ms,
+            doc_rows=w_stats["doc_rows"],
+            enum_members=w_stats["enum_members"],
+            round_trips=w_stats["round_trips"],
+            sizing_checks=w_stats["sizing_checks"],
+            violations=len(w_findings))
+
+    write_json("BENCH_analysis.json", [rep])
+    return rep

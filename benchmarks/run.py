@@ -6,12 +6,13 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (bench_build_time, bench_cdmt_ablation,
-                        bench_cdmt_vs_merkle, bench_checkpoint_delivery,
-                        bench_comparison_ratio, bench_dedup_ratio,
-                        bench_delivery_scale, bench_global_dedup,
-                        bench_kernels, bench_push_incremental,
-                        bench_pushpull_io, roofline)
+from benchmarks import (bench_analysis, bench_build_time,
+                        bench_cdmt_ablation, bench_cdmt_vs_merkle,
+                        bench_checkpoint_delivery, bench_comparison_ratio,
+                        bench_dedup_ratio, bench_delivery_scale,
+                        bench_global_dedup, bench_kernels,
+                        bench_push_incremental, bench_pushpull_io,
+                        roofline)
 
 ALL = {
     "fig6_dedup_ratio": bench_dedup_ratio.run,
@@ -30,6 +31,7 @@ ALL = {
     "push_incremental": bench_push_incremental.run,
     "kernels": bench_kernels.run,
     "roofline": roofline.run,
+    "analysis": bench_analysis.run,
 }
 
 

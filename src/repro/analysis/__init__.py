@@ -1,0 +1,25 @@
+"""Repo-specific static analysis: the machine-checked half of our
+concurrency and wire-protocol contracts.
+
+Three analyzers, one CLI (``tools/analyze.py``), run in CI as a hard gate:
+
+- :mod:`repro.analysis.guarded` — guarded-by lint.  Shared attributes are
+  declared with trailing ``# guarded-by: _lock`` comments (or in the
+  ``GUARDED_FIELDS`` registry); any access outside a ``with self._lock:``
+  block is a finding.
+- :mod:`repro.analysis.lockorder` — lock-order analyzer.  Extracts the
+  lock-acquisition graph across ``core/`` + ``delivery/`` + ``obs/``,
+  detects potential-deadlock cycles, and checks every discovered edge
+  against the documented rank hierarchy (``LOCK_RANKS``), which is also
+  emitted into ``docs/CONCURRENCY.md``.
+- :mod:`repro.analysis.wiredrift` — wire-spec drift checker.  Cross-checks
+  ``repro.delivery.wire`` (enums, codecs, sizing functions) against the
+  normative tables in ``docs/WIRE_PROTOCOL.md`` in both directions.
+
+:mod:`repro.analysis.runtime` holds the opt-in ``DebugLock`` runtime
+companion used by the concurrency stress tests.
+"""
+
+from .report import Finding
+
+__all__ = ["Finding"]

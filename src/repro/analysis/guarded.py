@@ -1,0 +1,253 @@
+"""Guarded-by lint: prove field accesses happen under their declared lock.
+
+Declaration grammar (all machine-read from source comments):
+
+- ``self.field = ... # guarded-by: _lock`` — every read or write of
+  ``self.field`` in this class must be lexically inside a
+  ``with self._lock:`` block (or in a method that declares it holds the
+  lock, see below).  ``__init__`` is exempt: the object is not shared
+  before its constructor returns.
+- ``self.field = ... # guarded-by: external(<who serializes access>)`` —
+  declared shared state whose synchronization lives outside the class
+  (e.g. the ``Journal`` single-writer contract behind
+  ``RegistryServer._registry_lock``).  Recorded for documentation and
+  coverage stats, not enforced lexically.
+- ``def helper(self): # requires-lock: _lock`` — the method body is
+  analyzed as if the lock were held (caller-holds-lock contract, e.g.
+  ``TieredChunkCache._admit``).
+- a trailing ``# unguarded-ok: <reason>`` on an access line allowlists
+  that single line (documented lock-free fast paths, e.g. reading
+  ``SwarmNode.alive`` inside ``serve_want``).
+
+Fields that cannot carry a trailing comment (``__slots__`` hot-path
+classes, dynamically created attributes) are declared centrally in
+``GUARDED_FIELDS`` keyed by ``(module stem, class name)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Finding
+
+# Declarations for classes whose field definitions cannot carry a trailing
+# comment.  The metrics children use __slots__ so their per-field state is
+# declared here; they all share the owning MetricsRegistry's lock, passed
+# in as the ``lock`` constructor argument and stored as ``self._lock``.
+GUARDED_FIELDS: Dict[Tuple[str, str], Dict[str, str]] = {
+    ("metrics", "_Counter"): {"_value": "_lock"},
+    ("metrics", "_Gauge"): {"_value": "_lock"},
+    ("metrics", "_Histogram"): {"_counts": "_lock", "_sum": "_lock",
+                                "_count": "_lock"},
+    ("metrics", "_Family"): {"_children": "_lock"},
+}
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*(.+?)\s*$")
+_REQUIRES_RE = re.compile(r"#\s*requires-lock:\s*(?:self\.)?(\w+)")
+_UNGUARDED_OK_RE = re.compile(r"#\s*unguarded-ok\b")
+_EXTERNAL_RE = re.compile(r"^external\((.*)\)$", re.DOTALL)
+
+EXTERNAL = "<external>"
+
+
+class ClassDecls:
+    """Declared guarded fields of one class."""
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.guarded: Dict[str, str] = {}    # field -> lock attr
+        self.external: Dict[str, str] = {}   # field -> who serializes
+
+
+def _parse_lock_spec(spec: str) -> Tuple[str, str]:
+    """Return ("lock", attr) or ("external", who)."""
+    m = _EXTERNAL_RE.match(spec)
+    if m:
+        return EXTERNAL, m.group(1).strip()
+    attr = spec.strip()
+    if attr.startswith("self."):
+        attr = attr[len("self."):]
+    return "lock", attr
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """Attribute name if node is ``self.<name>``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def collect_declarations(tree: ast.Module, lines: List[str],
+                         module_stem: str) -> Dict[str, ClassDecls]:
+    """Scan class bodies for ``self.x = ... # guarded-by:`` declarations."""
+    out: Dict[str, ClassDecls] = {}
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        decls = ClassDecls(cls.name)
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            line = lines[node.lineno - 1]
+            m = _GUARDED_RE.search(line)
+            if not m:
+                continue
+            kind, detail = _parse_lock_spec(m.group(1))
+            for tgt in targets:
+                field = _self_attr(tgt)
+                if field is None:
+                    continue
+                if kind == EXTERNAL:
+                    decls.external[field] = detail
+                else:
+                    decls.guarded[field] = detail
+        for field, spec in GUARDED_FIELDS.get((module_stem, cls.name),
+                                              {}).items():
+            kind, detail = _parse_lock_spec(spec)
+            if kind == EXTERNAL:
+                decls.external[field] = detail
+            else:
+                decls.guarded[field] = detail
+        if decls.guarded or decls.external:
+            out[cls.name] = decls
+    return out
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walk one method body tracking which ``self.<lock>`` locks are
+    lexically held, flagging guarded-field accesses outside them."""
+
+    def __init__(self, scan: "_ClassScan", method: str,
+                 held: Set[str]) -> None:
+        self.scan = scan
+        self.method = method
+        self.held = set(held)
+
+    # -- lock tracking -------------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        acquired = []
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr is not None and attr not in self.held:
+                acquired.append(attr)
+            # context managers that are calls (e.g. self._track(op)) are
+            # not lock acquisitions; their arguments still get checked.
+            self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        self.held.update(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held.difference_update(acquired)
+
+    # -- nested callables run later (thread targets, callbacks): they
+    # -- cannot assume the enclosing lock is still held.
+    def _visit_nested(self, node: ast.AST) -> None:
+        checker = _MethodChecker(self.scan, self.method, set())
+        for child in ast.iter_child_nodes(node):
+            checker.visit(child)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_nested(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_nested(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_nested(node)
+
+    # -- accesses ------------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        field = _self_attr(node)
+        if field is not None:
+            self.scan.check_access(field, node, self.method, self.held)
+        self.generic_visit(node)
+
+
+class _ClassScan:
+    def __init__(self, path: str, lines: List[str], decls: ClassDecls,
+                 stats: Dict[str, int]) -> None:
+        self.path = path
+        self.lines = lines
+        self.decls = decls
+        self.stats = stats
+        self.findings: List[Finding] = []
+
+    def check_access(self, field: str, node: ast.AST, method: str,
+                     held: Set[str]) -> None:
+        lock = self.decls.guarded.get(field)
+        if field in self.decls.external:
+            self.stats["accesses_checked"] += 1
+            return
+        if lock is None:
+            return
+        self.stats["accesses_checked"] += 1
+        if lock in held:
+            return
+        if _UNGUARDED_OK_RE.search(self.lines[node.lineno - 1]):
+            return
+        self.findings.append(Finding(
+            "guarded-by", self.path, node.lineno,
+            f"{self.decls.name}.{field} (guarded by '{lock}') accessed "
+            f"outside 'with self.{lock}:' in {method}()"))
+
+    def run(self, cls: ast.ClassDef) -> None:
+        for node in cls.body:
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if node.name == "__init__":
+                continue
+            held: Set[str] = set()
+            for lineno in range(max(1, node.lineno - 1),
+                                node.body[0].lineno):
+                m = _REQUIRES_RE.search(self.lines[lineno - 1])
+                if m:
+                    held.add(m.group(1))
+            checker = _MethodChecker(self, node.name, held)
+            for stmt in node.body:
+                checker.visit(stmt)
+
+
+def check_file(path: str, source: Optional[str] = None,
+               stats: Optional[Dict[str, int]] = None) -> List[Finding]:
+    if source is None:
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+    if stats is None:
+        stats = new_stats()
+    lines = source.splitlines()
+    tree = ast.parse(source, filename=path)
+    module_stem = path.rsplit("/", 1)[-1].removesuffix(".py")
+    decls = collect_declarations(tree, lines, module_stem)
+    findings: List[Finding] = []
+    stats["files"] += 1
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        if cls.name not in decls:
+            continue
+        stats["classes"] += 1
+        stats["guarded_fields"] += len(decls[cls.name].guarded)
+        stats["external_fields"] += len(decls[cls.name].external)
+        scan = _ClassScan(path, lines, decls[cls.name], stats)
+        scan.run(cls)
+        findings.extend(scan.findings)
+    return findings
+
+
+def check_files(paths: List[str]) -> Tuple[List[Finding], Dict[str, int]]:
+    stats = new_stats()
+    findings: List[Finding] = []
+    for path in paths:
+        findings.extend(check_file(path, stats=stats))
+    return findings, stats
+
+
+def new_stats() -> Dict[str, int]:
+    return {"files": 0, "classes": 0, "guarded_fields": 0,
+            "external_fields": 0, "accesses_checked": 0}

@@ -1,0 +1,467 @@
+"""Lock-order analyzer: extract the lock-acquisition graph, prove it acyclic,
+and check it against the documented rank hierarchy.
+
+The analyzer walks every class in the scanned files and records an edge
+``A -> B`` whenever lock ``B`` can be acquired while ``A`` is held — either
+directly (``with self.a: ... with self.b:``) or through a resolvable call
+chain (``with self._registry_lock: self.registry.receive_push(...)`` where
+``receive_push`` acquires ``ReplicationLog._lock``).  Call resolution is
+deliberately simple and static:
+
+- ``self.method(...)`` — same-class summary;
+- ``self.attr.method(...)`` / chains — via type bindings inferred from
+  ``__init__`` (``self.x = ClassName(...)``, annotated parameters) plus
+  ``MANUAL_BINDINGS``;
+- local aliases (``log = self.registry.replication``) within a method;
+- any call on a ``self._m_*`` attribute (the pre-bound metric-child
+  convention) — counts as acquiring ``MetricsRegistry._lock``, since every
+  metric child shares its registry's single lock (see ``ALIASES``).
+
+Nested functions (thread targets) are analyzed with an *empty* held set:
+they run later, on another thread.  Unresolvable calls contribute nothing —
+a documented soundness gap, mitigated by the runtime ``DebugLock`` check in
+the stress tests.
+
+``LOCK_RANKS`` is the normative hierarchy: every discovered edge must go
+strictly rank-increasing, every discovered lock must be ranked, and the
+table is emitted into ``docs/CONCURRENCY.md`` (``tools/analyze.py
+--write-docs``) so the documentation cannot drift from the code.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Finding
+
+# The documented lock hierarchy: acquisitions must go strictly rank-upward.
+# Locks that never nest with each other may share a rank.
+LOCK_RANKS: Dict[str, int] = {
+    "RegistryServer._registry_lock": 10,
+    "RegistryServer._stats_lock": 12,      # legacy; kept ranked for safety
+    "RegistryServer._inflight_lock": 20,
+    "SocketRegistryServer._conns_lock": 20,
+    "SocketTransport._pool_lock": 20,
+    "JournalFollower._lifecycle_lock": 20,
+    "SwarmTracker._lock": 20,
+    "SwarmNode._lock": 22,
+    "ReplicatedTransport._lock": 20,
+    "ReplicationLog._lock": 30,
+    "TieredChunkCache._lock": 30,
+    "MetricsRegistry._lock": 40,
+    "Tracer._lock": 45,
+}
+
+# Lock attributes that are aliases of another class's lock (the metric
+# children are constructed with the owning registry's lock).
+ALIASES: Dict[str, str] = {
+    "_Counter._lock": "MetricsRegistry._lock",
+    "_Gauge._lock": "MetricsRegistry._lock",
+    "_Histogram._lock": "MetricsRegistry._lock",
+    "_Family._lock": "MetricsRegistry._lock",
+}
+
+# Type bindings the simple inference cannot see (duck-typed parameters).
+MANUAL_BINDINGS: Dict[Tuple[str, str], str] = {
+    ("RegistryServer", "metrics"): "MetricsRegistry",
+    ("Registry", "metrics"): "MetricsRegistry",
+}
+
+METRICS_NODE = "MetricsRegistry._lock"
+_METRIC = "<metric-child>"
+_METRIC_FACTORIES = {"counter", "gauge", "histogram", "labels"}
+
+
+@dataclasses.dataclass
+class _ClassInfo:
+    name: str
+    path: str
+    lock_attrs: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # lock attr -> "Lock" | "RLock"
+    bindings: Dict[str, str] = dataclasses.field(default_factory=dict)
+    methods: Dict[str, ast.FunctionDef] = dataclasses.field(
+        default_factory=dict)
+
+
+@dataclasses.dataclass
+class LockOrderResult:
+    findings: List[Finding]
+    nodes: Dict[str, Tuple[str, int]]          # lock -> discovery site
+    edges: Dict[Tuple[str, str], Tuple[str, int]]  # (a, b) -> first site
+    lock_kinds: Dict[str, str]                 # lock -> "Lock" | "RLock"
+    stats: Dict[str, int]
+
+
+def _ann_class(node: Optional[ast.AST]) -> Optional[str]:
+    """Extract a class name from an annotation (handles Optional[X], "X")."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Subscript):
+        base = node.value
+        if isinstance(base, ast.Name) and base.id == "Optional":
+            return _ann_class(node.slice)
+    return None
+
+
+class _Analyzer:
+    def __init__(self, ranks: Optional[Dict[str, int]],
+                 check_ranks: bool) -> None:
+        self.ranks = ranks or {}
+        self.check_ranks = check_ranks
+        self.classes: Dict[str, _ClassInfo] = {}
+        self.nodes: Dict[str, Tuple[str, int]] = {}
+        self.edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+        self.lock_kinds: Dict[str, str] = {}
+        self.findings: List[Finding] = []
+        self._summaries: Dict[Tuple[str, str], Set[str]] = {}
+        self._in_progress: Set[Tuple[str, str]] = set()
+        self.stats = {"files": 0, "classes": 0, "locks": 0, "edges": 0}
+
+    # ---------------- pass 1: collect classes ----------------
+    def load(self, path: str, source: str) -> None:
+        tree = ast.parse(source, filename=path)
+        self.stats["files"] += 1
+        for cls in [n for n in ast.walk(tree)
+                    if isinstance(n, ast.ClassDef)]:
+            info = _ClassInfo(cls.name, path)
+            for node in cls.body:
+                if isinstance(node, ast.FunctionDef):
+                    info.methods[node.name] = node
+            init = info.methods.get("__init__")
+            if init is not None:
+                self._collect_init(info, init)
+            for key, target in MANUAL_BINDINGS.items():
+                if key[0] == cls.name:
+                    info.bindings[key[1]] = target
+            self.classes[cls.name] = info
+            self.stats["classes"] += 1
+
+    def _collect_init(self, info: _ClassInfo, init: ast.FunctionDef) -> None:
+        params: Dict[str, str] = {}
+        for arg in init.args.args + init.args.kwonlyargs:
+            cls = _ann_class(arg.annotation)
+            if cls:
+                params[arg.arg] = cls
+        for node in ast.walk(init):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            attr, value = tgt.attr, node.value
+            kind = self._lock_ctor(value)
+            if kind is not None:
+                info.lock_attrs[attr] = kind
+                node_name = self._canonical(f"{info.name}.{attr}")
+                self.nodes.setdefault(node_name, (info.path, node.lineno))
+                self.lock_kinds.setdefault(node_name, kind)
+                continue
+            bound = self._bind_value(value, params)
+            if bound is not None:
+                info.bindings.setdefault(attr, bound)
+
+    @staticmethod
+    def _lock_ctor(value: ast.AST) -> Optional[str]:
+        if (isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Attribute)
+                and isinstance(value.func.value, ast.Name)
+                and value.func.value.id == "threading"
+                and value.func.attr in ("Lock", "RLock")):
+            return value.func.attr
+        return None
+
+    def _bind_value(self, value: ast.AST,
+                    params: Dict[str, str]) -> Optional[str]:
+        if isinstance(value, ast.BoolOp):
+            for operand in value.values:
+                bound = self._bind_value(operand, params)
+                if bound is not None:
+                    return bound
+            return None
+        if isinstance(value, ast.Call) and isinstance(value.func, ast.Name):
+            return value.func.id
+        if isinstance(value, ast.Name):
+            return params.get(value.id)
+        return None
+
+    def _canonical(self, node_name: str) -> str:
+        return ALIASES.get(node_name, node_name)
+
+    # ---------------- pass 2: acquisition summaries ----------------
+    def summarize_all(self) -> None:
+        for cls in self.classes.values():
+            for meth in cls.methods:
+                self._acquired(cls.name, meth)
+
+    def _acquired(self, cls_name: str, meth: str) -> Set[str]:
+        key = (cls_name, meth)
+        if key in self._summaries:
+            return self._summaries[key]
+        if key in self._in_progress:
+            return set()  # recursion: fixpoint approximated by empty set
+        cls = self.classes.get(cls_name)
+        if cls is None or meth not in cls.methods:
+            return set()
+        self._in_progress.add(key)
+        acquired: Set[str] = set()
+        node = cls.methods[meth]
+        env: Dict[str, str] = {}
+        for stmt in node.body:
+            self._walk(cls, stmt, set(), acquired, env)
+        self._in_progress.discard(key)
+        self._summaries[key] = acquired
+        return acquired
+
+    # -- graph recording
+    def _acquire(self, cls: _ClassInfo, lock: str, held: Set[str],
+                 acquired: Set[str], site: Tuple[str, int]) -> None:
+        self.nodes.setdefault(lock, site)
+        for h in held:
+            if h == lock:
+                continue
+            self.edges.setdefault((h, lock), site)
+        acquired.add(lock)
+
+    def _call_summary(self, cls: _ClassInfo, target_cls: str, meth: str,
+                      held: Set[str], acquired: Set[str],
+                      site: Tuple[str, int]) -> None:
+        for lock in self._acquired(target_cls, meth):
+            self._acquire(cls, lock, held, acquired, site)
+
+    # -- expression/statement walker
+    def _walk(self, cls: _ClassInfo, node: ast.AST, held: Set[str],
+              acquired: Set[str], env: Dict[str, str]) -> None:
+        if isinstance(node, ast.With):
+            newly: List[str] = []
+            for item in node.items:
+                ctx = item.context_expr
+                lock = self._as_own_lock(cls, ctx)
+                if lock is not None:
+                    site = (cls.path, ctx.lineno)
+                    self._acquire(cls, lock, held | set(newly),
+                                  acquired, site)
+                    if lock not in held:
+                        newly.append(lock)
+                else:
+                    self._walk(cls, ctx, held, acquired, env)
+            inner = held | set(newly)
+            for stmt in node.body:
+                self._walk(cls, stmt, inner, acquired, env)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # Runs later, possibly on another thread: empty held set, and
+            # its acquisitions do not become part of this method's summary.
+            nested_acquired: Set[str] = set()
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for stmt in body:
+                self._walk(cls, stmt, set(), nested_acquired, dict(env))
+            return
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            bound = self._resolve(cls, env, node.value)
+            if bound is not None and bound != _METRIC:
+                env[node.targets[0].id] = bound
+            self._walk(cls, node.value, held, acquired, env)
+            return
+        if isinstance(node, ast.Call):
+            self._resolve_call(cls, env, node, held, acquired)
+            for child in ast.iter_child_nodes(node):
+                self._walk(cls, child, held, acquired, env)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._walk(cls, child, held, acquired, env)
+
+    def _as_own_lock(self, cls: _ClassInfo, expr: ast.AST) -> Optional[str]:
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"
+                and expr.attr in cls.lock_attrs):
+            return self._canonical(f"{cls.name}.{expr.attr}")
+        return None
+
+    def _resolve_call(self, cls: _ClassInfo, env: Dict[str, str],
+                      call: ast.Call, held: Set[str],
+                      acquired: Set[str]) -> None:
+        func = call.func
+        if not isinstance(func, ast.Attribute):
+            return
+        site = (cls.path, call.lineno)
+        base = self._resolve(cls, env, func.value)
+        if base == _METRIC:
+            self._acquire(cls, METRICS_NODE, held, acquired, site)
+        elif base is not None and base in self.classes:
+            if func.attr in self.classes[base].methods:
+                self._call_summary(cls, base, func.attr, held, acquired,
+                                   site)
+            elif base == "MetricsRegistry" and \
+                    func.attr in _METRIC_FACTORIES:
+                self._acquire(cls, METRICS_NODE, held, acquired, site)
+
+    def _resolve(self, cls: _ClassInfo, env: Dict[str, str],
+                 expr: ast.AST) -> Optional[str]:
+        """Resolve an expression to a class name or the metric marker."""
+        if isinstance(expr, ast.Name):
+            if expr.id == "self":
+                return cls.name
+            return env.get(expr.id)
+        if isinstance(expr, ast.Attribute):
+            base = self._resolve(cls, env, expr.value)
+            if base == _METRIC:
+                return _METRIC
+            if base is None:
+                return None
+            if expr.attr.startswith("_m_"):
+                return _METRIC
+            info = self.classes.get(base)
+            if info is not None:
+                return info.bindings.get(expr.attr)
+            return None
+        if isinstance(expr, ast.Subscript):
+            return self._resolve(cls, env, expr.value)
+        if isinstance(expr, ast.Call):
+            func = expr.func
+            if isinstance(func, ast.Attribute) and \
+                    func.attr in _METRIC_FACTORIES:
+                base = self._resolve(cls, env, func.value)
+                if base in (_METRIC, "MetricsRegistry"):
+                    return _METRIC
+            if isinstance(func, ast.Name) and func.id in self.classes:
+                return func.id
+            return None
+        return None
+
+    # ---------------- pass 3: checks ----------------
+    def check(self) -> None:
+        self.stats["locks"] = len(self.nodes)
+        self.stats["edges"] = len(self.edges)
+        for (a, b), (path, line) in sorted(self.edges.items()):
+            if a == b:
+                if self.lock_kinds.get(a) != "RLock":
+                    self.findings.append(Finding(
+                        "lock-order", path, line,
+                        f"'{a}' re-acquired while already held and is not "
+                        f"an RLock (self-deadlock)"))
+                continue
+            if not self.check_ranks:
+                continue
+            ra, rb = self.ranks.get(a), self.ranks.get(b)
+            if ra is not None and rb is not None and ra >= rb:
+                self.findings.append(Finding(
+                    "lock-order", path, line,
+                    f"acquisition '{a}' -> '{b}' contradicts the "
+                    f"documented hierarchy (rank {ra} >= {rb}); see "
+                    f"docs/CONCURRENCY.md"))
+        if self.check_ranks:
+            for node, (path, line) in sorted(self.nodes.items()):
+                if node not in self.ranks:
+                    self.findings.append(Finding(
+                        "lock-order", path, line,
+                        f"lock '{node}' is not ranked in "
+                        f"repro.analysis.lockorder.LOCK_RANKS — rank it "
+                        f"and regenerate docs/CONCURRENCY.md"))
+        self._check_cycles()
+
+    def _check_cycles(self) -> None:
+        adj: Dict[str, List[str]] = {}
+        for (a, b) in self.edges:
+            if a != b:
+                adj.setdefault(a, []).append(b)
+        index: Dict[str, int] = {}
+        low: Dict[str, int] = {}
+        on_stack: Set[str] = set()
+        stack: List[str] = []
+        counter = [0]
+        sccs: List[List[str]] = []
+
+        def strongconnect(v: str) -> None:
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on_stack.add(v)
+            for w in adj.get(v, ()):
+                if w not in index:
+                    strongconnect(w)
+                    low[v] = min(low[v], low[w])
+                elif w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if low[v] == index[v]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    scc.append(w)
+                    if w == v:
+                        break
+                sccs.append(scc)
+
+        for v in list(adj) + [b for bs in adj.values() for b in bs]:
+            if v not in index:
+                strongconnect(v)
+        for scc in sccs:
+            if len(scc) < 2:
+                continue
+            cyc = sorted(scc)
+            path, line = self.edges.get(
+                (cyc[0], cyc[1]), next(iter(self.edges.values())))
+            self.findings.append(Finding(
+                "lock-order", path, line,
+                "potential deadlock cycle: " + " -> ".join(
+                    cyc + [cyc[0]])))
+
+
+def analyze_files(paths: List[str], *,
+                  ranks: Optional[Dict[str, int]] = None,
+                  check_ranks: bool = True) -> LockOrderResult:
+    """Run the lock-order analysis over ``paths``.
+
+    ``ranks=None`` with ``check_ranks=True`` uses the repo's normative
+    ``LOCK_RANKS``; pass ``check_ranks=False`` to only detect cycles (used
+    for the broken-fixture self-test).
+    """
+    an = _Analyzer(LOCK_RANKS if ranks is None else ranks, check_ranks)
+    for path in paths:
+        with open(path, "r", encoding="utf-8") as f:
+            an.load(path, f.read())
+    an.summarize_all()
+    an.check()
+    return LockOrderResult(an.findings, an.nodes, an.edges,
+                           an.lock_kinds, an.stats)
+
+
+def hierarchy_markdown(result: LockOrderResult,
+                       ranks: Optional[Dict[str, int]] = None) -> str:
+    """Render the documented hierarchy + discovered edges as markdown.
+
+    Deterministic, so ``tools/analyze.py --strict`` can diff it against the
+    generated section of ``docs/CONCURRENCY.md``.
+    """
+    ranks = LOCK_RANKS if ranks is None else ranks
+    out = ["| rank | lock | kind | acquires while held |",
+           "|------|------|------|---------------------|"]
+    succ: Dict[str, List[str]] = {}
+    for (a, b) in result.edges:
+        if a != b:
+            succ.setdefault(a, []).append(b)
+    for lock, rank in sorted(ranks.items(), key=lambda kv: (kv[1], kv[0])):
+        kind = result.lock_kinds.get(lock, "Lock")
+        nxt = ", ".join(f"`{b}`" for b in sorted(succ.get(lock, [])))
+        out.append(f"| {rank} | `{lock}` | {kind} | {nxt or '—'} |")
+    out.append("")
+    out.append("Discovered acquisition edges (site of the inner "
+               "acquisition):")
+    out.append("")
+    for (a, b), (path, line) in sorted(result.edges.items()):
+        if a != b:
+            out.append(f"- `{a}` → `{b}` — {path}:{line}")
+    if not any(a != b for (a, b) in result.edges):
+        out.append("- (none)")
+    return "\n".join(out) + "\n"

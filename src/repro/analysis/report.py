@@ -1,0 +1,38 @@
+"""Finding type shared by the analyzers.
+
+Findings render as ``path:line: [analyzer] message`` — the same shape
+compilers use, so terminals and CI annotations make them clickable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    analyzer: str  # "guarded-by" | "lock-order" | "wire-drift"
+    path: str      # repo-relative where possible
+    line: int
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.analyzer}] {self.message}"
+
+
+def relpath(path: str, root: str) -> str:
+    """Repo-relative path for findings (falls back to the input)."""
+    try:
+        rel = os.path.relpath(path, root)
+    except ValueError:
+        return path
+    return path if rel.startswith("..") else rel
+
+
+def render(findings: Iterable[Finding]) -> List[str]:
+    return [str(f) for f in findings]

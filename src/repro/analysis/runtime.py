@@ -1,0 +1,194 @@
+"""Opt-in runtime lock-order checking: ``DebugLock`` + object-graph
+instrumentation.
+
+The static analyzer (:mod:`repro.analysis.lockorder`) proves what it can
+resolve; ``DebugLock`` closes the soundness gap at runtime.  The stress
+tests build a real server stack, call :func:`instrument` on the root
+objects to swap every ``threading.Lock``/``RLock`` they own for a ranked
+``DebugLock``, hammer the stack from N threads, and assert that
+``ViolationLog`` stayed empty — i.e. no thread ever acquired a lock whose
+documented rank (``LOCK_RANKS``) was not strictly above everything it
+already held.
+
+Instrument *before* any traffic: swapping a lock attribute while another
+thread holds the old lock instance would let two threads briefly use
+different locks.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .lockorder import ALIASES, LOCK_RANKS
+
+_LOCK_TYPES = (type(threading.Lock()), type(threading.RLock()))
+_RLOCK_TYPE = type(threading.RLock())
+
+
+class LockOrderViolation(AssertionError):
+    pass
+
+
+class ViolationLog:
+    """Thread-safe collector of runtime ordering violations.
+
+    ``raise_immediately=True`` turns the first violation into a
+    ``LockOrderViolation`` at the acquisition site (handy when debugging);
+    the default collects, so a stress test can run to completion and
+    assert ``log.violations == []`` at the end.
+    """
+
+    def __init__(self, raise_immediately: bool = False) -> None:
+        self.raise_immediately = raise_immediately
+        self.violations: List[str] = []
+        self._lock = threading.Lock()  # plain lock: never instrumented
+
+    def record(self, message: str) -> None:
+        with self._lock:
+            self.violations.append(message)
+        if self.raise_immediately:
+            raise LockOrderViolation(message)
+
+
+_held = threading.local()
+
+
+def _held_stack() -> List["DebugLock"]:
+    stack = getattr(_held, "stack", None)
+    if stack is None:
+        stack = _held.stack = []
+    return stack
+
+
+class DebugLock:
+    """Drop-in ``threading.Lock``/``RLock`` wrapper asserting rank order.
+
+    Acquiring a lock whose rank is not strictly greater than every
+    currently-held rank (reentrant re-acquisition of the same RLock
+    excepted) records a violation.  Unranked locks are violations too —
+    the hierarchy must stay total over the locks we actually take.
+    """
+
+    def __init__(self, name: str, rank: Optional[int],
+                 inner: Any, log: ViolationLog) -> None:
+        self.name = name
+        self.rank = rank
+        self.reentrant = isinstance(inner, _RLOCK_TYPE)
+        self._inner = inner
+        self._log = log
+
+    # -- checks --------------------------------------------------------
+    def _check_order(self) -> None:
+        stack = _held_stack()
+        if self.rank is None:
+            self._log.record(
+                f"lock '{self.name}' has no rank in LOCK_RANKS")
+            return
+        for held in stack:
+            if held is self and self.reentrant:
+                continue
+            if held.rank is None or held.rank >= self.rank:
+                self._log.record(
+                    f"acquired '{self.name}' (rank {self.rank}) while "
+                    f"holding '{held.name}' (rank {held.rank}) — order "
+                    f"must be strictly increasing")
+                return
+
+    # -- lock protocol -------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._check_order()
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            _held_stack().append(self)
+        return got
+
+    def release(self) -> None:
+        stack = _held_stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is self:
+                del stack[i]
+                break
+        self._inner.release()
+
+    def __enter__(self) -> "DebugLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+
+def _attr_names(obj: Any) -> Iterable[str]:
+    if hasattr(obj, "__dict__"):
+        return list(vars(obj).keys())
+    names = []
+    for klass in type(obj).__mro__:
+        names.extend(getattr(klass, "__slots__", ()))
+    return names
+
+
+def instrument(*roots: Any, log: ViolationLog,
+               ranks: Optional[Dict[str, int]] = None) -> int:
+    """Walk ``roots`` and replace every owned Lock/RLock with a DebugLock.
+
+    Recurses through attributes of ``repro.*`` objects and through
+    dict/list/tuple/set containers reached from them, so pre-bound metric
+    children and registry families get wrapped too.  A lock instance
+    shared between several holders (the metrics registry hands its lock
+    to every child) gets exactly one wrapper: ranks are looked up under
+    every alias name via ``lockorder.ALIASES``.  Returns the number of
+    attribute sites rewritten.
+    """
+    ranks = LOCK_RANKS if ranks is None else ranks
+    wrappers: Dict[int, DebugLock] = {}
+    seen: set = set()
+    count = 0
+
+    def wrap(name: str, lock: Any) -> DebugLock:
+        existing = wrappers.get(id(lock))
+        if existing is not None:
+            if existing.rank is None:
+                existing.rank = ranks.get(ALIASES.get(name, name))
+            return existing
+        canonical = ALIASES.get(name, name)
+        dbg = DebugLock(canonical, ranks.get(canonical), lock, log)
+        wrappers[id(lock)] = dbg
+        return dbg
+
+    def visit(obj: Any) -> None:
+        nonlocal count
+        if id(obj) in seen:
+            return
+        seen.add(id(obj))
+        if isinstance(obj, dict):
+            for v in list(obj.values()):
+                visit(v)
+            return
+        if isinstance(obj, (list, tuple, set, frozenset)):
+            for v in list(obj):
+                visit(v)
+            return
+        module = getattr(type(obj), "__module__", "") or ""
+        if not module.startswith("repro."):
+            return
+        cls_name = type(obj).__name__
+        for attr in _attr_names(obj):
+            try:
+                value = getattr(obj, attr)
+            except AttributeError:
+                continue
+            if isinstance(value, _LOCK_TYPES):
+                setattr(obj, attr, wrap(f"{cls_name}.{attr}", value))
+                count += 1
+            elif isinstance(value, DebugLock):
+                continue
+            else:
+                visit(value)
+
+    for root in roots:
+        visit(root)
+    return count

@@ -1,0 +1,360 @@
+"""Wire-spec drift checker: ``repro.delivery.wire`` vs
+``docs/WIRE_PROTOCOL.md``, checked in both directions.
+
+The doc's §2/§3/§5 tables are *normative*: every ``FrameType``/``Op``/
+``ErrorCode`` member must appear with the matching numeric value, and
+every documented row must exist in the enums — so a PR 6-style addition
+(``Op.METRICS``, ``FrameType.METRICS``) can never land undocumented, and
+a documented frame can never silently lose its implementation.
+
+Beyond the tables:
+
+- every ``FrameType`` must have a registered round-trip exemplar in
+  ``EXEMPLARS`` (encode → decode → equality, plus the frame-header type
+  byte).  Adding a frame type without registering an exemplar is itself
+  a finding — the drift gate grows with the protocol by construction.
+- the §8 exact-sizing identities are spot-verified by executing them
+  against generated frames (``uvarint_len``, ``recipe_wire_bytes``,
+  ``chunk_batch_frame_lens``, envelope sizes, ...).
+- the magic strings the doc quotes (``"CW"``, ``"CQ"``, ``"CR"``,
+  ``"CL"``) must match the module constants.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import hashing
+from repro.core.cdmt import CDMT, CDMTParams
+from repro.core.registry import PushReceipt
+from repro.core.store import Recipe
+from repro.delivery import wire
+
+from .report import Finding
+
+# Doc section heading (substring match) -> enum it documents.
+_TABLES: List[Tuple[str, str]] = [
+    ("Frames", "FrameType"),
+    ("Request envelopes", "Op"),
+    ("Error codes", "ErrorCode"),
+]
+
+_ROW_RE = re.compile(r"^\|\s*(\d+)\s*\|\s*`(\w+)`\s*\|")
+_HEADING_RE = re.compile(r"^##+\s+(.*)$")
+
+
+def parse_doc_tables(doc_text: str) -> Dict[str, Dict[int, Tuple[str, int]]]:
+    """Extract ``{enum name: {value: (NAME, doc line)}}`` from the doc."""
+    tables: Dict[str, Dict[int, Tuple[str, int]]] = {
+        enum: {} for _, enum in _TABLES}
+    current: Optional[str] = None
+    for lineno, line in enumerate(doc_text.splitlines(), start=1):
+        m = _HEADING_RE.match(line)
+        if m:
+            current = None
+            for key, enum in _TABLES:
+                if key in m.group(1):
+                    current = enum
+            continue
+        if current is None:
+            continue
+        m = _ROW_RE.match(line)
+        if m:
+            tables[current][int(m.group(1))] = (m.group(2), lineno)
+    return tables
+
+
+# ------------------------------------------------------- frame exemplars
+
+def _fps(n: int) -> List[bytes]:
+    return [bytes([i + 1]) * hashing.DIGEST_SIZE for i in range(n)]
+
+
+def _index_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    t = CDMT.build(_fps(8), CDMTParams(window=2, rule_bits=1, max_fanout=4))
+    buf = wire.encode_index(t)
+
+    def ok(b: bytes) -> bool:
+        back = wire.decode_index(b)
+        return back.root == t.root and back.levels == t.levels
+    return buf, ok
+
+
+def _recipe_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    r = Recipe("layer0", _fps(3), [10, 200, 70000])
+    buf = wire.encode_recipe(r)
+
+    def ok(b: bytes) -> bool:
+        back = wire.decode_recipe(b)
+        return (back.name, back.fps, back.sizes) == (r.name, r.fps, r.sizes)
+    return buf, ok
+
+
+def _chunk_batch_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    chunks = {hashing.chunk_fingerprint(d): d
+              for d in (b"alpha", b"beta" * 40, b"")}
+    buf = wire.encode_chunk_batch(chunks)
+    return buf, lambda b: wire.decode_chunk_batch(b) == chunks
+
+
+def _fp_list_pair(enc: Callable, dec: Callable
+                  ) -> Tuple[bytes, Callable[[bytes], bool]]:
+    fps = _fps(4)
+    return enc(fps), lambda b: dec(b) == fps
+
+
+def _push_hdr_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    h = wire.PushHeader("lin", "v1@3", root=_fps(1)[0], parent_version=2,
+                        params=CDMTParams(window=2, rule_bits=1,
+                                          max_fanout=4))
+    buf = wire.encode_push_header(h)
+
+    def ok(b: bytes) -> bool:
+        back = wire.decode_push_header(b)
+        return (back.lineage, back.tag, back.root, back.parent_version,
+                back.params) == (h.lineage, h.tag, h.root,
+                                 h.parent_version, h.params)
+    return buf, ok
+
+
+def _tags_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_tags_request("lin")
+    return buf, lambda b: wire.decode_tags_request(b) == "lin"
+
+
+def _tag_list_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    tags = ["v1", "v2", "v10"]
+    buf = wire.encode_tag_list(tags)
+    return buf, lambda b: wire.decode_tag_list(b) == tags
+
+
+def _error_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_error(wire.ErrorCode.WIRE, "boom")
+    return buf, lambda b: wire.decode_error(b) == (wire.ErrorCode.WIRE,
+                                                   "boom")
+
+
+def _receipt_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    r = PushReceipt(lineage="lin", tag="v1", version=3, chunks_received=7,
+                    bytes_received=4096, index_bytes=512, root=_fps(1)[0],
+                    nodes_created=5, nodes_hashed=9, hash_calls=21,
+                    deduplicated=False)
+    buf = wire.encode_receipt(r)
+
+    def ok(b: bytes) -> bool:
+        back = wire.decode_receipt(b)
+        return back == r
+    return buf, ok
+
+
+def _info_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_info(64)
+    return buf, lambda b: wire.decode_info(b) == 64
+
+
+def _ship_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_ship("replica-1", 3, 17, 100)
+    return buf, lambda b: wire.decode_ship(b) == ("replica-1", 3, 17, 100)
+
+
+def _record_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    raw = wire.encode_record(1, b"journal payload")
+    buf = wire.encode_record_frame(raw)
+
+    def ok(b: bytes) -> bool:
+        rtype, payload, verbatim = wire.decode_record_frame(b)
+        return rtype == 1 and payload == b"journal payload" \
+            and verbatim == raw
+    return buf, ok
+
+
+def _repl_ack_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_repl_ack("replica-1", 2, 9)
+    return buf, lambda b: wire.decode_repl_ack(b) == ("replica-1", 2, 9)
+
+
+def _metrics_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    doc = b'{"v": 1, "families": []}'
+    buf = wire.encode_metrics(doc)
+    return buf, lambda b: wire.decode_metrics(b) == doc
+
+
+# FrameType -> exemplar factory returning (encoded frame, decode check).
+EXEMPLARS: Dict[wire.FrameType, Callable[
+        [], Tuple[bytes, Callable[[bytes], bool]]]] = {
+    wire.FrameType.INDEX: _index_pair,
+    wire.FrameType.RECIPE: _recipe_pair,
+    wire.FrameType.CHUNK_BATCH: _chunk_batch_pair,
+    wire.FrameType.WANT:
+        lambda: _fp_list_pair(wire.encode_want, wire.decode_want),
+    wire.FrameType.PUSH_HDR: _push_hdr_pair,
+    wire.FrameType.HAS:
+        lambda: _fp_list_pair(wire.encode_has, wire.decode_has),
+    wire.FrameType.MISSING:
+        lambda: _fp_list_pair(wire.encode_missing, wire.decode_missing),
+    wire.FrameType.TAGS: _tags_pair,
+    wire.FrameType.TAG_LIST: _tag_list_pair,
+    wire.FrameType.ERROR: _error_pair,
+    wire.FrameType.RECEIPT: _receipt_pair,
+    wire.FrameType.INFO: _info_pair,
+    wire.FrameType.SHIP: _ship_pair,
+    wire.FrameType.RECORD: _record_pair,
+    wire.FrameType.REPL_ACK: _repl_ack_pair,
+    wire.FrameType.METRICS: _metrics_pair,
+}
+
+_WIRE_PATH = "src/repro/delivery/wire.py"
+
+
+def _wire_line(obj) -> int:
+    try:
+        return obj.__code__.co_firstlineno
+    except AttributeError:
+        return 1
+
+
+def check_doc(doc_path: str, doc_text: Optional[str] = None
+              ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Cross-check the doc tables against the wire enums, both ways."""
+    if doc_text is None:
+        with open(doc_path, "r", encoding="utf-8") as f:
+            doc_text = f.read()
+    findings: List[Finding] = []
+    tables = parse_doc_tables(doc_text)
+    stats = {"enums": 0, "enum_members": 0, "doc_rows": 0}
+    for _, enum_name in _TABLES:
+        enum = getattr(wire, enum_name)
+        rows = tables[enum_name]
+        stats["enums"] += 1
+        stats["doc_rows"] += len(rows)
+        for member in enum:
+            stats["enum_members"] += 1
+            row = rows.get(int(member))
+            if row is None:
+                findings.append(Finding(
+                    "wire-drift", _WIRE_PATH, 1,
+                    f"{enum_name}.{member.name} = {int(member)} has no "
+                    f"row in the normative table of {doc_path}"))
+            elif row[0] != member.name:
+                findings.append(Finding(
+                    "wire-drift", doc_path, row[1],
+                    f"documented {enum_name} value {int(member)} is named "
+                    f"`{row[0]}` but the enum member is {member.name}"))
+        values = {int(m) for m in enum}
+        for value, (name, lineno) in sorted(rows.items()):
+            if value not in values:
+                findings.append(Finding(
+                    "wire-drift", doc_path, lineno,
+                    f"documented {enum_name} row {value} `{name}` has no "
+                    f"matching enum member in repro.delivery.wire"))
+    for magic in (wire.MAGIC, wire.REQUEST_MAGIC, wire.RESPONSE_MAGIC,
+                  wire.RECORD_MAGIC):
+        token = f'`"{magic.decode()}"`'
+        if token not in doc_text and f'"{magic.decode()}"' not in doc_text:
+            findings.append(Finding(
+                "wire-drift", doc_path, 1,
+                f"magic {magic!r} from repro.delivery.wire is not quoted "
+                f"anywhere in the doc"))
+    return findings, stats
+
+
+def check_codecs() -> Tuple[List[Finding], Dict[str, int]]:
+    """Round-trip a representative frame per FrameType and verify the
+    frame-header type byte; a FrameType without an exemplar is a finding."""
+    findings: List[Finding] = []
+    stats = {"frame_types": 0, "round_trips": 0}
+    for ftype in wire.FrameType:
+        stats["frame_types"] += 1
+        factory = EXEMPLARS.get(ftype)
+        if factory is None:
+            findings.append(Finding(
+                "wire-drift", _WIRE_PATH, 1,
+                f"FrameType.{ftype.name} has no round-trip exemplar — "
+                f"register one in repro.analysis.wiredrift.EXEMPLARS"))
+            continue
+        try:
+            buf, ok = factory()
+            got, _payload, off = wire.decode_frame(buf)
+            if got is not ftype:
+                raise wire.WireError(
+                    f"frame encodes type {got.name}, not {ftype.name}")
+            if off != len(buf):
+                raise wire.WireError("trailing bytes after frame")
+            if not ok(buf):
+                raise wire.WireError("decode did not round-trip")
+            stats["round_trips"] += 1
+        except Exception as exc:  # findings, not crashes
+            findings.append(Finding(
+                "wire-drift", _WIRE_PATH, 1,
+                f"FrameType.{ftype.name} exemplar failed: {exc}"))
+    return findings, stats
+
+
+def check_sizing() -> Tuple[List[Finding], Dict[str, int]]:
+    """Execute the §8 exact-sizing identities against generated frames."""
+    findings: List[Finding] = []
+    checks = 0
+
+    def expect(cond: bool, fn, what: str) -> None:
+        nonlocal checks
+        checks += 1
+        if not cond:
+            findings.append(Finding(
+                "wire-drift", _WIRE_PATH, _wire_line(fn),
+                f"sizing identity violated: {what}"))
+
+    for n in (0, 1, 0x7F, 0x80, 300, 70000, 1 << 40):
+        expect(wire.uvarint_len(n) == len(wire.encode_uvarint(n)),
+               wire.uvarint_len, f"uvarint_len({n})")
+
+    t = CDMT.build(_fps(8), CDMTParams(window=2, rule_bits=1, max_fanout=4))
+    expect(wire.index_wire_bytes(t) == len(wire.encode_index(t)),
+           wire.index_wire_bytes, "index_wire_bytes(t)")
+
+    r = Recipe("layer0", _fps(5), [0, 1, 127, 128, 99999])
+    expect(wire.recipe_wire_bytes(r) == len(wire.encode_recipe(r)),
+           wire.recipe_wire_bytes, "recipe_wire_bytes(r)")
+
+    datas = [b"x" * s for s in (0, 1, 100, 5000)]
+    chunks = {hashing.chunk_fingerprint(d): d for d in datas}
+    expect(wire.chunk_batch_wire_bytes(chunks)
+           == len(wire.encode_chunk_batch(chunks)),
+           wire.chunk_batch_wire_bytes, "chunk_batch_wire_bytes(chunks)")
+
+    sizes = [len(d) for d in chunks.values()]
+    for bc in (1, 3, 16):
+        items = list(chunks.items())
+        frames = [wire.encode_chunk_batch(dict(items[i:i + bc]))
+                  for i in range(0, len(items), bc)]
+        expect(wire.chunk_batch_frame_lens(sizes, bc)
+               == [len(f) for f in frames],
+               wire.chunk_batch_frame_lens,
+               f"chunk_batch_frame_lens(sizes, {bc})")
+        expect(wire.chunk_batches_wire_bytes(sizes, bc)
+               == sum(len(f) for f in frames),
+               wire.chunk_batches_wire_bytes,
+               f"chunk_batches_wire_bytes(sizes, {bc})")
+
+    body = [wire.encode_want(_fps(2))]
+    req = wire.encode_request(wire.Op.WANT, "lin", "v1", body)
+    expect(wire.request_envelope_bytes("lin", "v1",
+                                       [len(f) for f in body]) == len(req),
+           wire.request_envelope_bytes, "request_envelope_bytes(...)")
+
+    resp_frames = [wire.encode_info(64), wire.encode_tag_list(["v1"])]
+    resp = wire.encode_response(wire.STATUS_OK, resp_frames)
+    expect(wire.response_envelope_bytes(
+               [len(f) for f in resp_frames]) == len(resp),
+           wire.response_envelope_bytes, "response_envelope_bytes(...)")
+
+    return findings, {"sizing_checks": checks}
+
+
+def check_all(doc_path: str) -> Tuple[List[Finding], Dict[str, int]]:
+    findings: List[Finding] = []
+    stats: Dict[str, int] = {}
+    for fs, st in (check_doc(doc_path), check_codecs(), check_sizing()):
+        findings.extend(fs)
+        stats.update(st)
+    return findings, stats

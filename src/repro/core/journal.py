@@ -116,9 +116,9 @@ class Journal:
         if self.torn_bytes_discarded:
             with open(path, "r+b") as f:
                 f.truncate(good_end)
-        self._pending: List[Tuple[int, bytes]] = records
-        self._f = open(path, "ab")
-        self._size = good_end
+        self._pending: List[Tuple[int, bytes]] = records  # guarded-by: external(single-writer: registry commit path behind RegistryServer._registry_lock)
+        self._f = open(path, "ab")  # guarded-by: external(single-writer: registry commit path)
+        self._size = good_end  # guarded-by: external(single-writer: registry commit path)
         self._m_append = metrics.histogram(
             "journal_append_seconds",
             "journal record append latency (fsync included)").labels()
@@ -195,10 +195,25 @@ class ReplicationLog:
     """
 
     def __init__(self):
-        self.epoch = 0
-        self._base = 0                     # seq of _records[0] (future trim)
-        self._records: List[bytes] = []
+        self._epoch = 0  # guarded-by: _lock
+        self._base = 0                     # guarded-by: _lock
+        self._records: List[bytes] = []    # guarded-by: _lock
         self._lock = threading.Lock()
+
+    @property
+    def epoch(self) -> int:
+        """Current epoch.  Read under the lock: ship handlers read it from
+        server threads while recovery/apply paths bump it via
+        :meth:`set_epoch` and GC via :meth:`rollover`."""
+        with self._lock:
+            return self._epoch
+
+    def set_epoch(self, epoch: int) -> None:
+        """Adopt a shipped/recovered epoch (standby catching up, or replay
+        of an epoch record).  Writes must go through here, not attribute
+        assignment — the guarded-by lint enforces it."""
+        with self._lock:
+            self._epoch = epoch
 
     def append(self, rtype: int, payload: bytes) -> int:
         """Record one committed ``(rtype, payload)``; returns its offset."""
@@ -258,10 +273,10 @@ class ReplicationLog:
         sweep; the caller re-seeds it from the retained state).  Returns the
         new epoch."""
         with self._lock:
-            self.epoch += 1
+            self._epoch += 1
             self._base = 0
             self._records = []
-            return self.epoch
+            return self._epoch
 
 
 def write_snapshot(path: str, records: Iterable[Tuple[int, bytes]]) -> None:

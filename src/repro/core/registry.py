@@ -104,9 +104,9 @@ class Registry:
                  metrics: Optional[MetricsRegistry] = None):
         self.store = DedupStore(directory)
         self.cdmt_params = cdmt_params
-        self.lineages: Dict[str, VersionedCDMT] = {}
-        self.recipes: Dict[Tuple[str, str], Recipe] = {}   # (lineage, tag)
-        self.metadata: Dict[Tuple[str, str], bytes] = {}   # small blobs (manifests)
+        self.lineages: Dict[str, VersionedCDMT] = {}  # guarded-by: external(Registry is not MT-safe; RegistryServer._registry_lock serializes served access)
+        self.recipes: Dict[Tuple[str, str], Recipe] = {}   # guarded-by: external(RegistryServer._registry_lock)
+        self.metadata: Dict[Tuple[str, str], bytes] = {}   # guarded-by: external(RegistryServer._registry_lock)
         self._journal: Optional[Journal] = None
         self._snap_path: Optional[str] = None
         # per-instance metrics: the delivery frontends adopt this registry's
@@ -159,7 +159,7 @@ class Registry:
         restart."""
         if rtype == _J_EPOCH:
             epoch, _ = _wire().decode_uvarint(payload, 0)
-            self.replication.epoch = epoch
+            self.replication.set_epoch(epoch)
             return
         if rtype == _J_COMPACT:
             return
@@ -278,6 +278,20 @@ class Registry:
         if version is None:
             raise DeliveryError(f"unknown tag {lineage}:{tag}")
         return lin.get_version(version)
+
+    def branch_root_at(self, lineage: str, branch: str,
+                       version: int) -> Optional[bytes]:
+        """Branch-at-version query: the CDMT root the branch head
+        ``branch`` (tags follow ``branch@rev``) held at ``version`` in
+        ``lineage``; ``None`` if the branch had no commit yet.
+
+        Answers survive restart and compaction: the backing
+        ``mod_history`` is rebuilt from journaled commit records during
+        recovery (see ``VersionedCDMT.branch_root_at``)."""
+        lin = self.lineages.get(lineage)
+        if lin is None:
+            raise DeliveryError(f"unknown lineage {lineage!r}")
+        return lin.branch_root_at(branch, version)
 
     def has_chunks(self, fps: Iterable[bytes]) -> List[bytes]:
         """Which of ``fps`` the registry is missing."""
@@ -653,7 +667,7 @@ class Registry:
         a newer-epoch primary."""
         if self._journal is not None:
             self._journal.append(_J_EPOCH, _wire().encode_uvarint(epoch))
-        self.replication.epoch = epoch
+        self.replication.set_epoch(epoch)
         self._m_repl_epoch.set(epoch)
 
     def _state_records(self) -> List[Tuple[int, bytes]]:

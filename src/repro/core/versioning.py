@@ -59,11 +59,14 @@ class VersionedCDMT:
 
     def __init__(self, params: CDMTParams = DEFAULT_PARAMS):
         self.params = params
-        self.node_store: Dict[bytes, CDMTNode] = {}
-        self.roots: List[VersionRecord] = []           # array of roots
-        self._by_tag: Dict[str, int] = {}
-        # layering modification history: slot-path -> sorted [(version, fp)]
-        self.mod_history: Dict[bytes, List[Tuple[int, bytes]]] = {}
+        self.node_store: Dict[bytes, CDMTNode] = {}  # guarded-by: external(lineages live inside a Registry; RegistryServer._registry_lock serializes access)
+        self.roots: List[VersionRecord] = []           # guarded-by: external(RegistryServer._registry_lock)
+        self._by_tag: Dict[str, int] = {}  # guarded-by: external(RegistryServer._registry_lock)
+        # layering modification history: slot-path -> sorted [(version, fp)].
+        # Rebuilt deterministically from journaled commit records on
+        # recovery, so branch-at-version queries survive restart (see
+        # resolve_at / Registry.branch_root_at and the durability tests).
+        self.mod_history: Dict[bytes, List[Tuple[int, bytes]]] = {}  # guarded-by: external(RegistryServer._registry_lock)
         # small cache of reconstructed trees; the head stays warm so the next
         # incremental commit never pays an O(n) reconstruction
         self._tree_cache: Dict[int, CDMT] = {}
@@ -195,6 +198,24 @@ class VersionedCDMT:
             return None
         idx = bisect.bisect_right(hist, (version, b"\xff" * 32)) - 1
         return hist[idx][1] if idx >= 0 else None
+
+    def branch_root_at(self, branch: str, version: int) -> Optional[bytes]:
+        """Branch-at-version query: the root the branch head ``branch`` had
+        at ``version`` (tags follow the ``branch@rev`` convention; the part
+        before ``@`` names the branch).  ``None`` if the branch had no
+        commit at or before ``version``.
+
+        Durable by construction: ``mod_history`` is re-derived from the
+        journaled commit records on recovery, so the answer is identical
+        before and after a restart or a snapshot compaction.
+        """
+        return self.resolve_at(b"root:" + branch.encode("utf-8"), version)
+
+    def branch_history(self, branch: str) -> List[Tuple[int, bytes]]:
+        """Full ``[(version, root)]`` evolution of one branch head, in
+        version order (a copy; safe to hold across later commits)."""
+        return list(self.mod_history.get(
+            b"root:" + branch.encode("utf-8"), []))
 
     def diff(self, old_version: Optional[int], new_version: int) -> Set[bytes]:
         """Leaf fps in ``new`` missing from ``old`` (Algorithm 2)."""

@@ -65,10 +65,10 @@ class TieredChunkCache:
                  metrics: Optional[MetricsRegistry] = None):
         self.backing = backing
         self.capacity_bytes = capacity_bytes
-        self._lru: "OrderedDict[bytes, bytes]" = OrderedDict()
-        self._resident = 0
+        self._lru: "OrderedDict[bytes, bytes]" = OrderedDict()  # guarded-by: _lock
+        self._resident = 0  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._warm: set = set()    # fps admitted via warm(), still resident
+        self._warm: set = set()    # guarded-by: _lock
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         m = self.metrics
         self._m_hits = m.counter(
@@ -142,12 +142,14 @@ class TieredChunkCache:
             self._lru[fp] = data
             self._resident += len(data)
             self._warm.add(fp)
-        self._m_warmed.inc()
-        self._m_resident.set(self._resident)
+            # meter inside the lock (like get/_admit): reading _resident
+            # after release can publish a stale gauge out of order with a
+            # concurrent put/eviction
+            self._m_warmed.inc()
+            self._m_resident.set(self._resident)
         return True
 
-    def _admit(self, fp: bytes, data: bytes) -> None:
-        # caller holds the lock
+    def _admit(self, fp: bytes, data: bytes) -> None:  # requires-lock: _lock
         if len(data) > self.capacity_bytes:
             return
         prev = self._lru.pop(fp, None)

@@ -196,9 +196,9 @@ class SocketRegistryServer:
         self._m_egress = m.counter(
             "socket_egress_bytes_total",
             "response envelope bytes written to sockets").labels()
-        self._closing = False
-        self._conns: Dict[int, socket.socket] = {}
-        self._threads: set = set()
+        self._closing = False  # guarded-by: external(single-writer stop(); lock-free reads are benign loop exits)
+        self._conns: Dict[int, socket.socket] = {}  # guarded-by: _conns_lock
+        self._threads: set = set()  # guarded-by: _conns_lock
         self._conns_lock = threading.Lock()
         self._listener = socket.create_server((host, port), backlog=backlog)
         self.address: Tuple[str, int] = self._listener.getsockname()[:2]
@@ -495,9 +495,9 @@ class SocketTransport:
         self.batch_chunks = max(1, batch_chunks)
         self.timeout = timeout
         self.pool_size = pool_size
-        self._pool: List[_Conn] = []
+        self._pool: List[_Conn] = []  # guarded-by: _pool_lock
         self._pool_lock = threading.Lock()
-        self._closed = False
+        self._closed = False  # guarded-by: _pool_lock
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._meter = TransportMeter(self.metrics, self.name)
         # one control exchange: the server's response split, so pull plans
@@ -510,8 +510,11 @@ class SocketTransport:
     # ------------------------------------------------------------ lifecycle
 
     def close(self) -> None:
-        self._closed = True
+        # the closed flag and the pool swap must be one atomic step: a
+        # concurrent _checkin that saw _closed=False must not be able to
+        # slip its connection into the pool after we drained it
         with self._pool_lock:
+            self._closed = True
             conns, self._pool = self._pool, []
         for c in conns:
             c.close()
@@ -525,9 +528,9 @@ class SocketTransport:
     # ----------------------------------------------------------------- pool
 
     def _checkout(self) -> _Conn:
-        if self._closed:
-            raise DeliveryError("socket transport is closed")
         with self._pool_lock:
+            if self._closed:
+                raise DeliveryError("socket transport is closed")
             if self._pool:
                 return self._pool.pop()
         try:
@@ -806,12 +809,13 @@ class JournalFollower:
         self.batch_records = max(1, batch_records)
         self.chunk_batch = max(1, chunk_batch)
         self.poll_interval = poll_interval
-        self.records_applied = 0
-        self.duplicates_skipped = 0
-        self.chunks_fetched = 0
-        self.last_error: Optional[BaseException] = None
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
+        self.records_applied = 0    # guarded-by: external(applier thread is the only writer; racy reads are progress hints)
+        self.duplicates_skipped = 0  # guarded-by: external(applier thread is the only writer)
+        self.chunks_fetched = 0     # guarded-by: external(applier thread is the only writer)
+        self.last_error: Optional[BaseException] = None  # guarded-by: external(atomic reference swap by the applier thread)
+        self._stop = threading.Event()  # guarded-by: _lifecycle_lock
+        self._thread: Optional[threading.Thread] = None  # guarded-by: _lifecycle_lock
+        self._lifecycle_lock = threading.Lock()
         # follower counters land in the standby registry's metrics, next to
         # its replication_apply_seconds histogram — one scrape of a standby
         # shows records applied, duplicates skipped, and chunk backfill
@@ -901,38 +905,50 @@ class JournalFollower:
         with its thread still draining a blocked exchange, ``follow``
         refuses rather than start a concurrent applier (standby registries
         are single-writer).  Each generation gets its own stop event, so a
-        lingering old thread can never be revived by a new start."""
-        if self._thread is not None and self._thread.is_alive():
-            if self._stop.is_set():
-                raise DeliveryError(
-                    "journal follower is still stopping (previous thread "
-                    "draining a blocked exchange) — retry after it exits")
-            return self
-        stop = threading.Event()
-        self._stop = stop
+        lingering old thread can never be revived by a new start.
 
-        def loop():
-            while not stop.is_set():
-                try:
-                    self.sync_once()
-                    self.last_error = None
-                except (DeliveryError, wire.WireError, JournalError,
-                        OSError) as e:
-                    # primary down / mid-restart / diverged: record and
-                    # retry — the thread must never die silently
-                    self.last_error = e
-                stop.wait(self.poll_interval)
+        The alive-check and the thread start are one atomic step under
+        ``_lifecycle_lock``: without it, two concurrent ``follow()`` calls
+        could both observe no live thread and both start appliers,
+        violating the single-writer contract."""
+        with self._lifecycle_lock:
+            if self._thread is not None and self._thread.is_alive():
+                if self._stop.is_set():
+                    raise DeliveryError(
+                        "journal follower is still stopping (previous "
+                        "thread draining a blocked exchange) — retry "
+                        "after it exits")
+                return self
+            stop = threading.Event()
+            self._stop = stop
 
-        self._thread = threading.Thread(target=loop, name="journal-follower",
-                                        daemon=True)
-        self._thread.start()
+            def loop():
+                while not stop.is_set():
+                    try:
+                        self.sync_once()
+                        self.last_error = None
+                    except (DeliveryError, wire.WireError, JournalError,
+                            OSError) as e:
+                        # primary down / mid-restart / diverged: record and
+                        # retry — the thread must never die silently
+                        self.last_error = e
+                    stop.wait(self.poll_interval)
+
+            self._thread = threading.Thread(target=loop,
+                                            name="journal-follower",
+                                            daemon=True)
+            self._thread.start()
         return self
 
     def stop(self) -> None:
-        self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=5)
-            if not self._thread.is_alive():
+        with self._lifecycle_lock:
+            self._stop.set()
+            thread = self._thread
+        if thread is None:
+            return
+        thread.join(timeout=5)
+        with self._lifecycle_lock:
+            if not thread.is_alive() and self._thread is thread:
                 self._thread = None   # else: keep it visible so follow()
                                       # refuses to double-start
 

@@ -112,11 +112,11 @@ class RegistryServer:
         self.max_batch_chunks = max_batch_chunks
         self._stats_lock = threading.Lock()       # legacy name; unused fields
         self._registry_lock = threading.RLock()   # Registry itself is not MT-safe
-        self._inflight: Dict[bytes, _InFlight] = {}
+        self._inflight: Dict[bytes, _InFlight] = {}  # guarded-by: _inflight_lock
         self._inflight_lock = threading.Lock()
         # replica name -> last acked replication offset (observability: a
         # primary can report standby lag without polling the standbys)
-        self.replica_offsets: Dict[str, int] = {}
+        self.replica_offsets: Dict[str, int] = {}  # guarded-by: _registry_lock
         m = self.metrics
         req = m.counter("registry_requests_total",
                         "requests answered by the registry frontend",

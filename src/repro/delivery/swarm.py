@@ -53,23 +53,24 @@ class SwarmNode:
         self.name = name
         self.client = Client(cdc_params=cdc_params, cdmt_params=cdmt_params)
         self.cache = TieredChunkCache(self.client.store.chunks, cache_bytes)
-        self.alive = True
-        self.served_bytes = 0
-        self.served_chunks = 0
+        self.alive = True       # guarded-by: _lock
+        self.served_bytes = 0   # guarded-by: _lock
+        self.served_chunks = 0  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._trackers: List["SwarmTracker"] = []   # who lists this node
+        self._trackers: List["SwarmTracker"] = []   # guarded-by: _lock
 
     def kill(self) -> None:
         """Take the node offline: subsequent ``serve_want`` calls raise, so
         pullers fail over to the next provider / the registry."""
-        self.alive = False
+        with self._lock:
+            self.alive = False
 
     def revive(self) -> None:
         """Come back online and re-register: every tracker that benched this
         node for repeated failures clears the backoff, so the node serves
         again without waiting to complete a fresh pull."""
-        self.alive = True
         with self._lock:
+            self.alive = True
             trackers = list(self._trackers)
         for t in trackers:
             t.revive(self)
@@ -86,7 +87,7 @@ class SwarmNode:
         CHUNK_BATCH frame; absent fps are omitted, the requester falls back
         to other peers / the registry for them).  A dead node raises
         :class:`DeliveryError` — the wire analogue of a connection refusal."""
-        if not self.alive:
+        if not self.alive:  # unguarded-ok: lock-free fast path — a stale flag costs at most one failed round
             raise DeliveryError(f"peer {self.name} is unreachable")
         fps = wire.decode_want(want_frame)
         batch: Dict[bytes, bytes] = {}
@@ -124,10 +125,10 @@ class SwarmTracker:
 
     def __init__(self, failure_threshold: int = 3):
         self.failure_threshold = max(1, failure_threshold)
-        self._providers: Dict[Tuple[str, str], List[SwarmNode]] = {}
-        self._failures: Dict[int, int] = {}   # id(node) -> consecutive fails
+        self._providers: Dict[Tuple[str, str], List[SwarmNode]] = {}  # guarded-by: _lock
+        self._failures: Dict[int, int] = {}   # guarded-by: _lock
         self._lock = threading.Lock()
-        self._rr = itertools.count()
+        self._rr = itertools.count()  # guarded-by: _lock
 
     def register(self, lineage: str, tag: str, node: SwarmNode) -> None:
         with self._lock:
@@ -176,7 +177,7 @@ class SwarmTracker:
 
             def ok(n: SwarmNode) -> bool:
                 return (n is not exclude
-                        and self._failures.get(id(n), 0) < thresh)
+                        and self._failures.get(id(n), 0) < thresh)  # unguarded-ok: closure only invoked inside the with-block above
 
             exact = [n for n in self._providers.get((lineage, tag), ())
                      if ok(n)]

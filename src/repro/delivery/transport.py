@@ -579,14 +579,14 @@ class ReplicatedTransport:
         self.verifies_payloads = all(t.verifies_payloads
                                      for t in self.replicas)
         self._lock = threading.Lock()
-        self._primary = primary
-        self._dead: Set[int] = set()
-        self._stale: Dict[Tuple[str, str], Set[int]] = {}
-        self._checked: Dict[Tuple[str, str], Set[int]] = {}
-        self._roots: Dict[Tuple[str, str], Optional[bytes]] = {}
-        self._rr = next(ReplicatedTransport._stagger)
-        self.promotions = 0        # primaries replaced after death
-        self.stale_detected = 0    # stale replica probes/fetches absorbed
+        self._primary = primary            # guarded-by: _lock
+        self._dead: Set[int] = set()       # guarded-by: _lock
+        self._stale: Dict[Tuple[str, str], Set[int]] = {}    # guarded-by: _lock
+        self._checked: Dict[Tuple[str, str], Set[int]] = {}  # guarded-by: _lock
+        self._roots: Dict[Tuple[str, str], Optional[bytes]] = {}  # guarded-by: _lock
+        self._rr = next(ReplicatedTransport._stagger)  # guarded-by: _lock
+        self.promotions = 0        # guarded-by: _lock
+        self.stale_detected = 0    # guarded-by: _lock
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._meter = TransportMeter(self.metrics, self.name)
         self._m_promotions = self.metrics.counter(

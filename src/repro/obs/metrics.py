@@ -233,7 +233,7 @@ class MetricsRegistry:
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._lock = threading.Lock()
-        self._families: Dict[str, _Family] = {}
+        self._families: Dict[str, _Family] = {}  # guarded-by: _lock
 
     # -------------------------------------------------------- registration
 

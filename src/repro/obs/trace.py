@@ -135,9 +135,9 @@ class Tracer:
     """Span factory + bounded recorder.  Disabled (free) until asked."""
 
     def __init__(self, enabled: bool = False, capacity: int = 256):
-        self.enabled = enabled
+        self.enabled = enabled  # guarded-by: external(benign bool flip; readers only ever see on/off)
         self._lock = threading.Lock()
-        self._roots: deque = deque(maxlen=max(1, capacity))
+        self._roots: deque = deque(maxlen=max(1, capacity))  # guarded-by: _lock
         self._local = threading.local()
 
     def _stack(self) -> List[Span]:

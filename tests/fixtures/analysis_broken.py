@@ -1,0 +1,43 @@
+"""Deliberately broken module: the static-analysis self-test target.
+
+Never imported by product code.  ``tools/analyze.py --self-test`` (and the
+``analyze`` CI job) runs the guarded-by lint and the lock-order analyzer
+over this file and fails if the seeded defects below are NOT caught — the
+gate must provably bite before it is allowed to gate anything.
+
+Seeded defects:
+  1. ``BrokenCounter.bump``    — writes a guarded field without the lock.
+  2. ``BrokenCounter.drain``   — reads a guarded field without the lock.
+  3. ``ab()`` vs ``ba()``      — opposite nesting of the same two locks:
+                                 a potential-deadlock cycle.
+"""
+
+import threading
+
+
+class BrokenCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._other = threading.Lock()
+        self.count = 0        # guarded-by: _lock
+        self.drained = 0      # guarded-by: _lock
+
+    def bump(self) -> None:
+        self.count += 1       # defect 1: unguarded write
+
+    def drain(self) -> int:
+        n = self.count        # defect 2: unguarded read
+        with self._lock:
+            self.drained += n
+            self.count = 0
+        return n
+
+    def ab(self) -> None:
+        with self._lock:
+            with self._other:
+                pass
+
+    def ba(self) -> None:
+        with self._other:
+            with self._lock:  # defect 3: inversion of ab()'s order
+                pass

@@ -1,0 +1,432 @@
+"""The static-analysis gate itself (`src/repro/analysis/`).
+
+Three properties, mirrored from `tools/analyze.py`:
+
+  * the **grammar** works — each annotation form (`guarded-by`,
+    `external(...)`, `requires-lock`, `unguarded-ok`, the
+    ``GUARDED_FIELDS`` registry) does what `docs/CONCURRENCY.md` says;
+  * the **repo is clean** — running all three analyzers over the real
+    source trees yields zero findings, which is exactly what the `analyze`
+    CI job gates on;
+  * the gate **provably bites** — the deliberately broken fixtures
+    (`tests/fixtures/analysis_broken.py`, `wire_spec_broken.md`) produce
+    the seeded findings, with `file:line` positions.
+"""
+
+import glob
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import guarded, lockorder, runtime, wiredrift
+from repro.obs.metrics import MetricsRegistry
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tests", "fixtures")
+
+
+def scan_paths():
+    out = []
+    for sub in ("core", "delivery", "obs"):
+        out.extend(sorted(glob.glob(
+            os.path.join(ROOT, "src", "repro", sub, "*.py"))))
+    return out
+
+
+def _check(source, path="mod.py"):
+    return guarded.check_file(path, source=textwrap.dedent(source))
+
+
+# ------------------------------------------------------- guarded-by grammar
+
+
+class TestGuardedGrammar:
+    def test_access_outside_lock_is_flagged_with_line(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def bad(self):
+                    return len(self.items)
+            """)
+        assert len(findings) == 1
+        assert findings[0].line == 9
+        assert "guarded by '_lock'" in findings[0].message
+        assert "mod.py:9:" in str(findings[0])
+
+    def test_access_under_the_declared_lock_is_clean(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def ok(self):
+                    with self._lock:
+                        self.items.append(1)
+                        return list(self.items)
+            """)
+        assert findings == []
+
+    def test_wrong_lock_does_not_satisfy_the_declaration(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._other = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def bad(self):
+                    with self._other:
+                        self.items.append(1)
+            """)
+        assert [f.line for f in findings] == [11]
+
+    def test_init_is_exempt(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+                    self.items.append(0)   # construction: not shared yet
+            """)
+        assert findings == []
+
+    def test_external_fields_are_documented_not_enforced(self):
+        findings = _check("""\
+            import threading
+
+            class J:
+                def __init__(self):
+                    self.pending = []  # guarded-by: external(single writer)
+
+                def add(self, x):
+                    self.pending.append(x)
+            """)
+        assert findings == []
+
+    def test_requires_lock_treats_body_as_held(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def _admit(self, x):  # requires-lock: _lock
+                    self.items.append(x)
+            """)
+        assert findings == []
+
+    def test_unguarded_ok_pragma_silences_one_line(self):
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.flag = False  # guarded-by: _lock
+
+                def fast(self):
+                    if self.flag:  # unguarded-ok: benign stale read
+                        return True
+                    return self.flag
+            """)
+        # only the line WITHOUT the pragma is flagged
+        assert [f.line for f in findings] == [11]
+
+    def test_closures_are_analyzed_with_empty_held_set(self):
+        """A nested def may outlive the with-block (thread target), so the
+        lock held at the definition site must NOT leak into its body."""
+        findings = _check("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def spawn(self):
+                    with self._lock:
+                        def worker():
+                            self.items.append(1)
+                        return worker
+            """)
+        assert [f.line for f in findings] == [11]
+
+    def test_guarded_fields_registry_covers_slots_classes(self):
+        """`metrics._Counter._value` is declared centrally (the class uses
+        __slots__ and cannot carry a trailing comment)."""
+        assert guarded.GUARDED_FIELDS[("metrics", "_Counter")] \
+            == {"_value": "_lock"}
+        findings = guarded.check_file("metrics.py", source=textwrap.dedent("""\
+            import threading
+
+            class _Counter:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._value = 0
+
+                def inc(self):
+                    self._value += 1
+            """))
+        assert [f.line for f in findings] == [9]
+
+    def test_stats_are_counted(self):
+        stats = guarded.new_stats()
+        guarded.check_file("mod.py", source=textwrap.dedent("""\
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.items = []  # guarded-by: _lock
+
+                def ok(self):
+                    with self._lock:
+                        return list(self.items)
+            """), stats=stats)
+        assert stats["classes"] == 1
+        assert stats["guarded_fields"] == 1
+        assert stats["accesses_checked"] >= 1
+
+
+# ---------------------------------------------------------------- lockorder
+
+
+class TestLockOrder:
+    def test_repo_edges_match_the_committed_hierarchy(self):
+        result = lockorder.analyze_files(scan_paths())
+        assert result.findings == []
+        # the three load-bearing edges the codebase actually has
+        edges = {(a, b) for (a, b) in result.edges}
+        assert ("RegistryServer._registry_lock",
+                "MetricsRegistry._lock") in edges
+        assert ("RegistryServer._registry_lock",
+                "ReplicationLog._lock") in edges
+        assert ("TieredChunkCache._lock",
+                "MetricsRegistry._lock") in edges
+
+    def test_every_discovered_lock_is_ranked(self):
+        result = lockorder.analyze_files(scan_paths())
+        for node in result.nodes:
+            assert node in lockorder.LOCK_RANKS, f"unranked lock {node}"
+
+    def test_inversion_cycle_is_detected(self):
+        fixture = os.path.join(FIXTURES, "analysis_broken.py")
+        result = lockorder.analyze_files([fixture], check_ranks=False)
+        msgs = [f.message for f in result.findings]
+        assert any("cycle" in m for m in msgs), msgs
+
+    def test_rank_violation_is_detected(self, tmp_path):
+        src = textwrap.dedent("""\
+            import threading
+
+            class Backwards:
+                def __init__(self):
+                    self._hi = threading.Lock()
+                    self._lo = threading.Lock()
+
+                def bad(self):
+                    with self._hi:
+                        with self._lo:
+                            pass
+            """)
+        p = tmp_path / "backwards.py"
+        p.write_text(src)
+        result = lockorder.analyze_files(
+            [str(p)], ranks={"Backwards._hi": 20, "Backwards._lo": 10})
+        assert any("rank" in f.message for f in result.findings)
+
+    def test_hierarchy_markdown_is_deterministic(self):
+        a = lockorder.hierarchy_markdown(lockorder.analyze_files(scan_paths()))
+        b = lockorder.hierarchy_markdown(lockorder.analyze_files(scan_paths()))
+        assert a == b
+        assert "| rank | lock | kind |" in a
+
+
+# ---------------------------------------------------------------- wiredrift
+
+
+class TestWireDrift:
+    def test_real_doc_and_codecs_are_clean(self):
+        findings, stats = wiredrift.check_all(
+            os.path.join(ROOT, "docs", "WIRE_PROTOCOL.md"))
+        assert findings == []
+        assert stats["round_trips"] >= 16
+        assert stats["sizing_checks"] >= 15
+
+    def test_every_frame_type_has_an_exemplar(self):
+        from repro.delivery import wire
+        assert set(wiredrift.EXEMPLARS) == set(wire.FrameType)
+
+    def test_broken_doc_yields_the_seeded_findings(self):
+        findings, _ = wiredrift.check_doc(
+            os.path.join(FIXTURES, "wire_spec_broken.md"))
+        msgs = [f.message for f in findings]
+        assert any("METRICS" in m and "no row" in m for m in msgs)
+        assert any("no matching enum member" in m for m in msgs)
+        assert any("but the enum member is" in m for m in msgs)
+
+    def test_codec_round_trips_and_sizing_identities(self):
+        assert wiredrift.check_codecs()[0] == []
+        assert wiredrift.check_sizing()[0] == []
+
+
+# --------------------------------------------------------- repo-wide clean
+
+
+class TestRepoClean:
+    def test_guarded_lint_is_clean_over_the_real_trees(self):
+        findings, stats = guarded.check_files(scan_paths())
+        assert findings == []
+        assert stats["guarded_fields"] >= 30
+        assert stats["accesses_checked"] >= 150
+
+    def test_broken_fixture_findings_carry_file_and_line(self):
+        fixture = os.path.join(FIXTURES, "analysis_broken.py")
+        findings = guarded.check_file(fixture)
+        assert [f.line for f in findings] == [26, 29]
+        for f in findings:
+            assert str(f).startswith(f.path)
+
+    def test_cli_strict_exits_zero_on_the_repo(self):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "analyze.py"),
+             "--strict"],
+            capture_output=True, text=True,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(ROOT, "src")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "analysis clean" in proc.stdout
+
+    def test_cli_self_test_catches_all_seeded_defects(self):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "analyze.py"),
+             "--self-test"],
+            capture_output=True, text=True,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(ROOT, "src")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------- DebugLock
+
+
+class TestDebugLock:
+    def test_rank_increasing_acquisition_is_clean(self):
+        log = runtime.ViolationLog()
+        lo = runtime.DebugLock("lo", 10, threading.Lock(), log)
+        hi = runtime.DebugLock("hi", 40, threading.Lock(), log)
+        with lo:
+            with hi:
+                pass
+        assert log.violations == []
+
+    def test_inversion_is_recorded(self):
+        log = runtime.ViolationLog()
+        lo = runtime.DebugLock("lo", 10, threading.Lock(), log)
+        hi = runtime.DebugLock("hi", 40, threading.Lock(), log)
+        with hi:
+            with lo:
+                pass
+        assert len(log.violations) == 1
+        assert "rank 40" in log.violations[0]
+
+    def test_equal_rank_nesting_is_a_violation(self):
+        """Ranks must be STRICTLY increasing along an acquisition path."""
+        log = runtime.ViolationLog()
+        a = runtime.DebugLock("a", 20, threading.Lock(), log)
+        b = runtime.DebugLock("b", 20, threading.Lock(), log)
+        with a:
+            with b:
+                pass
+        assert len(log.violations) == 1
+
+    def test_reentrant_rlock_is_allowed(self):
+        log = runtime.ViolationLog()
+        r = runtime.DebugLock("r", 10, threading.RLock(), log)
+        with r:
+            with r:
+                pass
+        assert log.violations == []
+
+    def test_unranked_lock_is_a_violation(self):
+        log = runtime.ViolationLog()
+        x = runtime.DebugLock("x", None, threading.Lock(), log)
+        with x:
+            pass
+        assert len(log.violations) == 1
+        assert "no rank" in log.violations[0]
+
+    def test_raise_immediately_mode(self):
+        log = runtime.ViolationLog(raise_immediately=True)
+        lo = runtime.DebugLock("lo", 10, threading.Lock(), log)
+        hi = runtime.DebugLock("hi", 40, threading.Lock(), log)
+        with pytest.raises(runtime.LockOrderViolation):
+            with hi:
+                with lo:
+                    pass
+        # the failed acquisition must not leave state behind
+        assert hi.locked() is False
+
+    def test_held_stack_is_per_thread(self):
+        log = runtime.ViolationLog()
+        hi = runtime.DebugLock("hi", 40, threading.Lock(), log)
+        lo = runtime.DebugLock("lo", 10, threading.Lock(), log)
+        errs = []
+
+        def other():
+            try:
+                with lo:      # fresh thread: empty held stack, no inversion
+                    pass
+            except Exception as e:   # pragma: no cover - diagnostic
+                errs.append(e)
+
+        with hi:
+            t = threading.Thread(target=other)
+            t.start()
+            t.join()
+        assert errs == []
+        assert log.violations == []
+
+
+class TestInstrument:
+    def test_metrics_children_share_one_wrapper(self):
+        """`_Counter._lock` IS the registry's lock: instrument() must wrap
+        the shared instance exactly once (identity, not per-attribute)."""
+        reg = MetricsRegistry()
+        c = reg.counter("x_total")
+        log = runtime.ViolationLog()
+        n = runtime.instrument(reg, log=log)
+        assert n >= 1
+        assert isinstance(reg._lock, runtime.DebugLock)
+        assert reg._lock is c._lock
+        assert reg._lock.rank == lockorder.LOCK_RANKS["MetricsRegistry._lock"]
+        # the instrumented registry still works
+        c.inc(3)
+        assert c.value() == 3
+        assert log.violations == []
+
+    def test_instrument_is_idempotent_on_debuglocks(self):
+        reg = MetricsRegistry()
+        log = runtime.ViolationLog()
+        runtime.instrument(reg, log=log)
+        wrapped = reg._lock
+        runtime.instrument(reg, log=log)
+        assert reg._lock is wrapped

@@ -1,0 +1,309 @@
+"""DebugLock-instrumented stress tier + regression tests for the races the
+guarded-by lint found.
+
+The stress test builds the full stack — primary registry behind a real TCP
+`SocketRegistryServer`, a standby applying the journal live through a
+`JournalFollower`, N puller threads and a metrics-scrape thread — with
+every lock swapped for a ranked `DebugLock` (`repro.analysis.runtime`),
+then asserts two things the static analyzer cannot: no thread ever
+acquired locks against the documented hierarchy (`docs/CONCURRENCY.md`),
+and the post-run state is consistent (byte-identical pulls, zero errors,
+follower fully caught up).
+
+The regression tests pin the concrete defects fixed in this change:
+
+  * `SocketTransport.close()` set `_closed` outside `_pool_lock`, so a
+    concurrent `_checkin` could repool a connection after close drained
+    the pool — leaking a live socket;
+  * two concurrent `JournalFollower.follow()` calls could both observe no
+    live thread and both start appliers, violating the standby's
+    single-writer contract;
+  * `ReplicationLog.epoch` was a bare attribute written without the log's
+    lock (now a locked property + `set_epoch`).
+"""
+
+import threading
+
+import pytest
+
+from repro.analysis import runtime
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams
+from repro.core.journal import ReplicationLog
+from repro.core.registry import Registry
+from repro.delivery import (ImageClient, JournalFollower, LocalTransport,
+                            RegistryServer, SocketRegistryServer,
+                            SocketTransport, WireTransport)
+
+PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+P = CDMTParams(window=4, rule_bits=2)
+
+
+def _rand(n, seed=0):
+    import numpy as np
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def _versions(n_versions=3, size=60_000, seed=0):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    data = bytearray(_rand(size, seed))
+    out = [bytes(data)]
+    for _ in range(n_versions - 1):
+        pos = rng.integers(0, len(data) - 200)
+        data[pos:pos + 64] = rng.bytes(64)
+        out.append(bytes(data))
+    return out
+
+
+def _seed_registry(versions, lineage="app"):
+    reg = Registry(cdmt_params=P)
+    pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS, cdmt_params=P)
+    for i, v in enumerate(versions):
+        pub.commit(lineage, f"v{i}", v)
+        pub.push(lineage, f"v{i}")
+    return reg, pub
+
+
+# ------------------------------------------------------------- stress tier
+
+
+class TestInstrumentedStress:
+    N_PULLERS = 4
+    ROUNDS = 3
+
+    def test_full_stack_hammer_respects_the_lock_hierarchy(self):
+        versions = _versions(3, seed=41)
+        reg, pub = _seed_registry(versions)
+        srv = RegistryServer(reg)
+
+        log = runtime.ViolationLog()
+        # Instrument BEFORE any traffic (and before the socket door opens
+        # accepts): swapping a lock another thread holds would split it.
+        wrapped = runtime.instrument(srv, log=log)
+        assert wrapped >= 4      # registry/stats/inflight/metrics at least
+
+        sock_srv = SocketRegistryServer(srv)
+        runtime.instrument(sock_srv, log=log)
+
+        sreg = Registry(cdmt_params=P)
+        fol_t = SocketTransport(sock_srv.address)
+        fol = JournalFollower(sreg, fol_t, name="stress-standby",
+                              poll_interval=0.005)
+        runtime.instrument(fol, sreg, log=log)
+        fol.follow()
+
+        stop = threading.Event()
+        errors = []
+        pulled = []
+
+        def puller(seed):
+            try:
+                with SocketTransport(sock_srv.address) as t:
+                    cl = ImageClient(t, cdc_params=PARAMS, cdmt_params=P)
+                    for r in range(self.ROUNDS):
+                        tag = f"v{(seed + r) % len(versions)}"
+                        cl.pull("app", tag)
+                        pulled.append(
+                            (tag, cl.materialize("app", tag)))
+            except Exception as e:   # pragma: no cover - diagnostic
+                errors.append(e)
+
+        def scraper():
+            try:
+                with SocketTransport(sock_srv.address) as t:
+                    while not stop.is_set():
+                        snap = t.scrape_metrics()
+                        assert snap.families is not None
+            except Exception as e:   # pragma: no cover - diagnostic
+                errors.append(e)
+
+        threads = [threading.Thread(target=puller, args=(i,))
+                   for i in range(self.N_PULLERS)]
+        threads.append(threading.Thread(target=scraper))
+        for t in threads:
+            t.start()
+        try:
+            # concurrent publishes drive the live follower while pulls run
+            pub.commit("app", "v3", versions[-1] + _rand(5_000, seed=42))
+            pub.push("app", "v3")
+            for t in threads[:-1]:
+                t.join(timeout=60)
+        finally:
+            stop.set()
+            threads[-1].join(timeout=10)
+
+        try:
+            assert errors == []
+            # 1. the documented hierarchy held under real contention
+            assert log.violations == []
+            # 2. every pull was byte-identical to what was pushed
+            assert len(pulled) == self.N_PULLERS * self.ROUNDS
+            for tag, data in pulled:
+                assert data == versions[int(tag[1:])]
+            # 3. the follower caught up with zero violations of its own
+            deadline = 200
+            while fol.lag() and deadline:
+                stop.wait(0.02)
+                deadline -= 1
+            assert fol.lag() == 0
+            assert fol.last_error is None
+            assert sreg.tags("app") == reg.tags("app")
+            for tag in reg.tags("app"):
+                assert (sreg.index_for_tag("app", tag).root
+                        == reg.index_for_tag("app", tag).root)
+            # 4. server-side counters are consistent after the dust settles
+            s = sock_srv.snapshot()
+            assert s.errors == 0
+            assert s.requests >= self.N_PULLERS * self.ROUNDS
+        finally:
+            fol.stop()
+            fol_t.close()
+            sock_srv.stop()
+
+
+# ------------------------------------------ regressions found by the lint
+
+
+class TestSocketTransportCloseRace:
+    """`close()` must flip `_closed` and drain the pool in ONE critical
+    section: a checkin that raced the old unlocked flag write could repool
+    a live connection after close() had already drained, leaking a socket
+    to the OS until process exit."""
+
+    def test_checkin_after_close_does_not_repool(self):
+        versions = _versions(2, seed=43)
+        reg, _ = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        with SocketRegistryServer(srv) as door:
+            t = SocketTransport(door.address)
+            conn = t._checkout()          # a live connection in flight
+            t.close()
+            t._checkin(conn)              # the racing return
+            assert t._pool == []          # must NOT be repooled
+            with pytest.raises(Exception):
+                t.get_index("app", "v0")  # closed transport stays closed
+
+    def test_concurrent_close_and_traffic_never_leaves_pooled_conns(self):
+        versions = _versions(2, seed=44)
+        reg, _ = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        with SocketRegistryServer(srv) as door:
+            for trial in range(8):
+                t = SocketTransport(door.address)
+                barrier = threading.Barrier(3)
+
+                def traffic():
+                    barrier.wait()
+                    try:
+                        t.get_index("app", "v1")
+                    except Exception:
+                        pass              # losing the race to close is fine
+
+                def closer():
+                    barrier.wait()
+                    t.close()
+
+                ths = [threading.Thread(target=traffic),
+                       threading.Thread(target=traffic),
+                       threading.Thread(target=closer)]
+                for th in ths:
+                    th.start()
+                for th in ths:
+                    th.join()
+                with t._pool_lock:
+                    assert t._pool == [] and t._closed
+
+
+class TestFollowerSingleWriter:
+    """Concurrent `follow()` calls must yield exactly ONE applier thread —
+    standby registries are single-writer; two concurrent appliers corrupt
+    the standby journal."""
+
+    def test_concurrent_follow_starts_exactly_one_applier(self):
+        versions = _versions(2, seed=45)
+        reg, _ = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv),
+                              poll_interval=0.01)
+        barrier = threading.Barrier(8)
+
+        def start():
+            barrier.wait()
+            fol.follow()
+
+        ths = [threading.Thread(target=start) for _ in range(8)]
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join()
+        try:
+            appliers = [th for th in threading.enumerate()
+                        if th.name == "journal-follower"]
+            assert len(appliers) == 1
+            deadline = 200
+            while fol.lag() and deadline:
+                threading.Event().wait(0.02)
+                deadline -= 1
+            assert fol.lag() == 0
+        finally:
+            fol.stop()
+        # exactly one applier ran: no record was double-applied
+        assert fol.records_applied == len(versions)
+        assert fol.duplicates_skipped == 0
+
+    def test_follow_after_stop_restarts_cleanly(self):
+        versions = _versions(2, seed=46)
+        reg, pub = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), poll_interval=0.01)
+        fol.follow()
+        fol.stop()
+        fol.follow()                      # new generation, new stop event
+        try:
+            pub.commit("app", "v2", versions[1] + _rand(2_000, seed=47))
+            pub.push("app", "v2")
+            deadline = 200
+            while fol.lag() and deadline:
+                threading.Event().wait(0.02)
+                deadline -= 1
+            assert fol.lag() == 0
+        finally:
+            fol.stop()
+
+
+class TestReplicationLogEpochLocking:
+    """`epoch` is now a locked property: writes go through `set_epoch` (or
+    `rollover`), bare attribute assignment is rejected, and concurrent
+    rollovers never lose an increment."""
+
+    def test_epoch_attribute_cannot_be_assigned(self):
+        log = ReplicationLog()
+        with pytest.raises(AttributeError):
+            log.epoch = 7
+
+    def test_set_epoch_and_property_round_trip(self):
+        log = ReplicationLog()
+        assert log.epoch == 0
+        log.set_epoch(5)
+        assert log.epoch == 5
+
+    def test_concurrent_rollovers_are_all_counted(self):
+        log = ReplicationLog()
+        per_thread, n_threads = 25, 4
+        barrier = threading.Barrier(n_threads)
+
+        def spin():
+            barrier.wait()
+            for _ in range(per_thread):
+                log.rollover()
+
+        ths = [threading.Thread(target=spin) for _ in range(n_threads)]
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join()
+        assert log.epoch == per_thread * n_threads

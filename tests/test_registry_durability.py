@@ -351,3 +351,82 @@ class TestMetadataAndErrors:
         with pytest.raises(DeliveryError):
             reg2.get_metadata("l", "missing")
         reg2.close()
+
+
+class TestBranchHistory:
+    """Branch-at-version queries (``Registry.branch_root_at``) answer from
+    ``VersionedCDMT.mod_history`` — state that exists only in memory, and
+    is rebuilt from journaled commit records.  The queries must therefore
+    give identical answers before a restart, after a restart, and after a
+    snapshot compaction (which rewrites the journal entirely)."""
+
+    def _seed(self, reg, versions):
+        """Tags follow the branch@rev convention: three commits advance
+        ``main``, one forks ``dev`` in between."""
+        cl = Client(cdc_params=PARAMS)
+        tags = ["main@1", "main@2", "dev@1", "main@3"]
+        for tag, v in zip(tags, versions):
+            cl.commit("app", tag, v)
+            cl.push(reg, "app", tag)
+        return tags
+
+    def _answers(self, reg):
+        lin = reg.lineages["app"]
+        return ([reg.branch_root_at("app", "main", v) for v in range(4)],
+                [reg.branch_root_at("app", "dev", v) for v in range(4)],
+                lin.branch_history("main"), lin.branch_history("dev"))
+
+    def test_branch_at_version_resolves_interleaved_branches(self, tmp_path):
+        versions = _versions(4, seed=21)
+        reg = Registry(str(tmp_path / "reg"))
+        tags = self._seed(reg, versions)
+        roots = {t: reg.index_for_tag("app", t).root for t in tags}
+        # main advanced at versions 0, 1, 3; dev forked at version 2
+        assert reg.branch_root_at("app", "main", 0) == roots["main@1"]
+        assert reg.branch_root_at("app", "main", 1) == roots["main@2"]
+        assert reg.branch_root_at("app", "main", 2) == roots["main@2"]
+        assert reg.branch_root_at("app", "main", 3) == roots["main@3"]
+        assert reg.branch_root_at("app", "dev", 1) is None
+        assert reg.branch_root_at("app", "dev", 2) == roots["dev@1"]
+        assert reg.branch_root_at("app", "dev", 3) == roots["dev@1"]
+        assert reg.lineages["app"].branch_history("main") == [
+            (0, roots["main@1"]), (1, roots["main@2"]),
+            (3, roots["main@3"])]
+        reg.close()
+
+    def test_answers_survive_restart(self, tmp_path):
+        versions = _versions(4, seed=22)
+        reg = Registry(str(tmp_path / "reg"))
+        self._seed(reg, versions)
+        before = self._answers(reg)
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert self._answers(reg2) == before
+        reg2.close()
+
+    def test_answers_survive_compaction_and_restart(self, tmp_path):
+        """Compaction replaces the journal with a snapshot; the snapshot
+        replay must rebuild the SAME mod_history, including entries for
+        versions committed after the compact."""
+        versions = _versions(5, seed=23)
+        reg = Registry(str(tmp_path / "reg"))
+        self._seed(reg, versions[:4])
+        reg.compact()
+        cl = Client(cdc_params=PARAMS)
+        cl.commit("app", "main@4", versions[4])
+        cl.push(reg, "app", "main@4")
+        before = self._answers(reg)
+        assert reg.branch_root_at("app", "main", 4) \
+            == reg.index_for_tag("app", "main@4").root
+        reg.close()
+        reg2 = Registry(str(tmp_path / "reg"))
+        assert self._answers(reg2) == before
+        assert reg2.branch_root_at("app", "main", 4) \
+            == reg2.index_for_tag("app", "main@4").root
+        reg2.close()
+
+    def test_unknown_lineage_raises(self, tmp_path):
+        reg = Registry(str(tmp_path / "reg"))
+        with pytest.raises(DeliveryError):
+            reg.branch_root_at("nope", "main", 0)
+        reg.close()

@@ -95,3 +95,28 @@ def test_layering_history_resolves_by_version():
         roots.append(rec.root)
     for i in range(5):
         assert v.resolve_at(b"root:r", i) == roots[i]
+
+
+def test_branch_root_at_is_resolve_at_on_the_root_slot():
+    v = VersionedCDMT(P)
+    roots = []
+    for i in range(4):
+        rec = v.commit(_fps(40, seed=20 + i), tag=f"main@{i}")
+        roots.append(rec.root)
+    for i in range(4):
+        assert v.branch_root_at("main", i) == roots[i]
+        assert v.branch_root_at("main", i) == v.resolve_at(b"root:main", i)
+    assert v.branch_root_at("other", 3) is None
+
+
+def test_branch_history_is_a_safe_copy_in_version_order():
+    v = VersionedCDMT(P)
+    v.commit(_fps(30, seed=30), tag="main@0")
+    v.commit(_fps(30, seed=31), tag="dev@0")
+    v.commit(_fps(30, seed=32), tag="main@1")
+    hist = v.branch_history("main")
+    assert [ver for ver, _ in hist] == [0, 2]
+    hist.append((99, b"x" * 16))            # mutating the copy…
+    assert len(v.branch_history("main")) == 2   # …never leaks back
+    assert v.branch_history("dev") == [(1, v.roots[1].root)]
+    assert v.branch_history("ghost") == []

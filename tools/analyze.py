@@ -1,0 +1,175 @@
+#!/usr/bin/env python
+"""Repo-specific static analysis gate: guarded-by lint, lock-order
+analyzer, wire-spec drift checker.
+
+Usage:
+    PYTHONPATH=src python tools/analyze.py              # report findings
+    PYTHONPATH=src python tools/analyze.py --strict     # + doc-sync check
+    PYTHONPATH=src python tools/analyze.py --write-docs # regen CONCURRENCY.md
+    PYTHONPATH=src python tools/analyze.py --self-test  # prove the gate bites
+
+Exit status: 0 when clean, 1 when any analyzer reports a finding (or the
+self-test fails to catch the seeded broken fixtures).  Findings print as
+``path:line: [analyzer] message`` so terminals and CI annotations link
+straight to the site.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis import guarded, lockorder, wiredrift  # noqa: E402
+from repro.analysis.report import Finding  # noqa: E402
+
+WIRE_DOC = "docs/WIRE_PROTOCOL.md"
+CONCURRENCY_DOC = "docs/CONCURRENCY.md"
+GEN_BEGIN = ("<!-- BEGIN GENERATED: lock-hierarchy "
+             "(tools/analyze.py --write-docs) -->")
+GEN_END = "<!-- END GENERATED: lock-hierarchy -->"
+
+
+def scan_paths() -> list:
+    paths = []
+    for pattern in ("src/repro/core/*.py", "src/repro/delivery/*.py",
+                    "src/repro/obs/*.py"):
+        paths.extend(glob.glob(pattern))
+    return sorted(paths)
+
+
+def generated_section(result) -> str:
+    return (GEN_BEGIN + "\n\n" + lockorder.hierarchy_markdown(result)
+            + "\n" + GEN_END)
+
+
+def check_doc_sync(result) -> list:
+    """The generated lock-hierarchy section of CONCURRENCY.md must match
+    what the analyzer derives from the code right now."""
+    if not os.path.exists(CONCURRENCY_DOC):
+        return [Finding("lock-order", CONCURRENCY_DOC, 1,
+                        "missing — run tools/analyze.py --write-docs")]
+    with open(CONCURRENCY_DOC, "r", encoding="utf-8") as f:
+        text = f.read()
+    begin, end = text.find(GEN_BEGIN), text.find(GEN_END)
+    if begin < 0 or end < 0:
+        return [Finding("lock-order", CONCURRENCY_DOC, 1,
+                        "generated lock-hierarchy markers missing — run "
+                        "tools/analyze.py --write-docs")]
+    current = text[begin:end + len(GEN_END)]
+    if current.strip() != generated_section(result).strip():
+        line = text[:begin].count("\n") + 1
+        return [Finding("lock-order", CONCURRENCY_DOC, line,
+                        "generated lock-hierarchy section is stale — run "
+                        "tools/analyze.py --write-docs and commit")]
+    return []
+
+
+def write_docs(result) -> None:
+    with open(CONCURRENCY_DOC, "r", encoding="utf-8") as f:
+        text = f.read()
+    begin, end = text.find(GEN_BEGIN), text.find(GEN_END)
+    if begin < 0 or end < 0:
+        raise SystemExit(f"{CONCURRENCY_DOC}: generated-section markers "
+                         f"not found")
+    new = text[:begin] + generated_section(result) + text[end + len(GEN_END):]
+    with open(CONCURRENCY_DOC, "w", encoding="utf-8") as f:
+        f.write(new)
+    print(f"{CONCURRENCY_DOC}: lock-hierarchy section regenerated")
+
+
+def run_analyzers(strict: bool):
+    paths = scan_paths()
+    g_findings, g_stats = guarded.check_files(paths)
+    lo = lockorder.analyze_files(paths)
+    w_findings, w_stats = wiredrift.check_all(WIRE_DOC)
+    findings = list(g_findings) + list(lo.findings) + list(w_findings)
+    if strict:
+        findings.extend(check_doc_sync(lo))
+    return findings, lo, g_stats, lo.stats, w_stats
+
+
+def self_test() -> int:
+    """The gate must bite: the seeded broken fixtures must be caught."""
+    failures = []
+
+    fixture = "tests/fixtures/analysis_broken.py"
+    g_findings = guarded.check_file(fixture)
+    if not any("outside" in f.message for f in g_findings):
+        failures.append(f"guarded-by lint missed the unguarded field in "
+                        f"{fixture}")
+    lo = lockorder.analyze_files([fixture], check_ranks=False)
+    if not any("cycle" in f.message for f in lo.findings):
+        failures.append(f"lock-order analyzer missed the inversion cycle "
+                        f"in {fixture}")
+
+    doc = "tests/fixtures/wire_spec_broken.md"
+    w_findings, _ = wiredrift.check_doc(doc)
+    messages = "\n".join(f.message for f in w_findings)
+    if "METRICS" not in messages:
+        failures.append(f"wire-drift checker missed the undocumented "
+                        f"METRICS frame in {doc}")
+    if "no matching enum member" not in messages:
+        failures.append(f"wire-drift checker missed the phantom frame row "
+                        f"in {doc}")
+    if "but the enum member is" not in messages:
+        failures.append(f"wire-drift checker missed the misnamed op row "
+                        f"in {doc}")
+
+    for f in g_findings + lo.findings + w_findings:
+        print(f"  caught: {f}")
+    if failures:
+        for msg in failures:
+            print(f"SELF-TEST FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("self-test OK: all seeded defects caught")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--strict", action="store_true",
+                        help="also fail when docs/CONCURRENCY.md's "
+                             "generated section is stale")
+    parser.add_argument("--write-docs", action="store_true",
+                        help="regenerate the lock-hierarchy section of "
+                             "docs/CONCURRENCY.md")
+    parser.add_argument("--self-test", action="store_true",
+                        help="verify the analyzers catch the seeded "
+                             "broken fixtures")
+    args = parser.parse_args(argv)
+    os.chdir(ROOT)
+
+    if args.self_test:
+        return self_test()
+
+    findings, lo, g_stats, lo_stats, w_stats = run_analyzers(args.strict)
+    if args.write_docs:
+        write_docs(lo)
+        findings = [f for f in findings if f.path != CONCURRENCY_DOC]
+    for f in findings:
+        print(f)
+    print(f"guarded-by: {g_stats['files']} files, "
+          f"{g_stats['classes']} classes, "
+          f"{g_stats['guarded_fields']} guarded + "
+          f"{g_stats['external_fields']} external fields, "
+          f"{g_stats['accesses_checked']} accesses checked")
+    print(f"lock-order: {lo_stats['locks']} locks, "
+          f"{lo_stats['edges']} acquisition edges")
+    print(f"wire-drift: {w_stats['enum_members']} enum members vs "
+          f"{w_stats['doc_rows']} doc rows, "
+          f"{w_stats['round_trips']} frame round-trips, "
+          f"{w_stats['sizing_checks']} sizing identities")
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("analysis clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
