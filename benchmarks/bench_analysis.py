@@ -2,9 +2,11 @@
 
 The gate is on the critical path of every PR, so its runtime is a budget
 we track like any other: per-analyzer wall time over the real source
-trees (guarded-by lint, lock-order analyzer, wire-drift checker), with
-the work each one did (files, fields, accesses, locks, edges, codec
-round-trips, sizing identities) and — the invariant — zero violations.
+trees (guarded-by lint, lock-order analyzer, wire-drift checker,
+layer-import analyzer, err-contract analyzer, durability lint), with the
+work each one did (files, fields, accesses, locks, edges, codec
+round-trips, sizing identities, import edges, api boundaries, rename
+sites) and — the invariant — zero violations.
 
 Emits ``BENCH_analysis.json`` for CI diffing.
 """
@@ -14,13 +16,15 @@ from __future__ import annotations
 import glob
 import os
 
-from repro.analysis import guarded, lockorder, wiredrift
+from repro.analysis import (durability, errcontract, guarded, layers,
+                            lockorder, wiredrift)
 
 from benchmarks.common import Report, Timer, write_json
 
 REPS = 5
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 WIRE_DOC = os.path.join(ROOT, "docs", "WIRE_PROTOCOL.md")
+ARCH_DOC = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
 
 
 def _scan_paths() -> list:
@@ -65,6 +69,31 @@ def run() -> Report:
             round_trips=w_stats["round_trips"],
             sizing_checks=w_stats["sizing_checks"],
             violations=len(w_findings))
+
+    ms, ly = _best(lambda: layers.analyze_paths(paths, doc=ARCH_DOC))
+    rep.add(analyzer="layers", ms=ms, files=ly.stats["files"],
+            modules=ly.stats["modules"], edges=ly.stats["edges"],
+            lazy_edges=ly.stats["lazy_edges"],
+            upward_edges=ly.stats["upward_edges"],
+            exceptions=ly.stats["exceptions"],
+            violations=len(ly.findings))
+
+    ms, (e_findings, e_stats) = _best(
+        lambda: errcontract.analyze_files(paths))
+    rep.add(analyzer="err_contract", ms=ms, files=e_stats["files"],
+            boundaries=e_stats["boundaries"],
+            raise_sites=e_stats["raise_sites"],
+            calls_resolved=e_stats["calls_resolved"],
+            pragmas=e_stats["pragmas"],
+            violations=len(e_findings))
+
+    ms, (d_findings, d_stats) = _best(lambda: durability.check_files(paths))
+    rep.add(analyzer="durability", ms=ms, files=d_stats["files"],
+            replace_sites=d_stats["replace_sites"],
+            commit_paths=d_stats["commit_paths"],
+            journaled_paths=d_stats["journaled_paths"],
+            pragmas=d_stats["pragmas"],
+            violations=len(d_findings))
 
     write_json("BENCH_analysis.json", [rep])
     return rep

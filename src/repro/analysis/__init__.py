@@ -1,7 +1,8 @@
 """Repo-specific static analysis: the machine-checked half of our
-concurrency and wire-protocol contracts.
+concurrency, wire-protocol, layering, error-taxonomy, and durability
+contracts.
 
-Three analyzers, one CLI (``tools/analyze.py``), run in CI as a hard gate:
+Six analyzers, one CLI (``tools/analyze.py``), run in CI as a hard gate:
 
 - :mod:`repro.analysis.guarded` — guarded-by lint.  Shared attributes are
   declared with trailing ``# guarded-by: _lock`` comments (or in the
@@ -15,9 +16,25 @@ Three analyzers, one CLI (``tools/analyze.py``), run in CI as a hard gate:
 - :mod:`repro.analysis.wiredrift` — wire-spec drift checker.  Cross-checks
   ``repro.delivery.wire`` (enums, codecs, sizing functions) against the
   normative tables in ``docs/WIRE_PROTOCOL.md`` in both directions.
+- :mod:`repro.analysis.layers` — layer-import analyzer.  Parses the L0–L5
+  table in ``docs/ARCHITECTURE.md``, builds the static-and-lazy import
+  graph, and rejects upward edges not on the ``LAYER_EXCEPTIONS``
+  allowlist (and allowlisted edges that are not lazy).  Emits the
+  generated layer-map section of ARCHITECTURE.md.
+- :mod:`repro.analysis.errcontract` — error-taxonomy analyzer.  Proves by
+  AST raise/escape analysis that every ``# api-boundary`` method can only
+  propagate the typed taxonomy (DeliveryError / PushRejected / WireError /
+  JournalError / ValueError), never a bare KeyError / OSError /
+  struct.error; ``# raises-ok: <reason>`` suppresses a deliberate site.
+- :mod:`repro.analysis.durability` — crash-ordering lint.  Checks
+  fsync-before-``os.replace`` plus directory fsync after, chunks-durable-
+  before-commit-record, and journal-append-before-in-memory-mutation on
+  the registry commit paths; ``# durability-ok: <reason>`` suppresses a
+  reasoned exception.
 
 :mod:`repro.analysis.runtime` holds the opt-in ``DebugLock`` runtime
-companion used by the concurrency stress tests.
+companion used by the concurrency stress tests.  Pragma grammar reference:
+``docs/CONTRACTS.md``.
 """
 
 from .report import Finding

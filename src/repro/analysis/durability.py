@@ -1,0 +1,276 @@
+"""Crash-ordering lint: the write-ordering disciplines behind every
+durability claim in ``core/store.py`` / ``core/journal.py`` /
+``core/registry.py``, machine-checked.
+
+Three checks, each over the statement order *within* one function (the
+disciplines are deliberately written straight-line so an AST line-order
+check is exact, not heuristic):
+
+1. **fsync-before-replace** — every function calling ``os.replace`` must
+   fsync the temp content first (an ``os.fsync`` call on an earlier line)
+   and fsync the target's parent directory afterwards (the
+   ``os.open(dir, os.O_RDONLY)`` + ``os.fsync`` idiom, or a call to a
+   ``fsync_dir`` helper).  Without the first, the rename can commit a
+   hole; without the second, the rename itself may not survive a crash.
+2. **chunks-before-record** — on the declared :data:`COMMIT_PATHS`
+   (``Registry.receive_push`` / ``apply_replicated``), the first
+   ``...chunks.sync()`` call must precede the first journal
+   ``append_raw``/``append`` — a journaled version whose payloads are not
+   yet durable would violate "a journaled version's payloads are always
+   servable".
+3. **append-before-mutate** — on the declared :data:`JOURNALED_PATHS`,
+   the first journal append must precede the first in-memory state
+   mutation (assignment through ``self``) and the first call to a
+   declared state-applying helper (:data:`MUTATORS`) — an acked change
+   must be durable before it is observable.
+
+``# durability-ok: <reason>`` on the offending line suppresses a finding
+with mandatory prose (recovery-only paths whose inputs were fsynced
+before the crash, etc.).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .report import Finding
+
+__all__ = ["COMMIT_PATHS", "JOURNALED_PATHS", "MUTATORS", "check_file",
+           "check_files", "new_stats"]
+
+# (class, method) pairs that commit pushed payloads: chunk durability must
+# precede the commit record
+COMMIT_PATHS: Set[Tuple[str, str]] = {
+    ("Registry", "receive_push"),
+    ("Registry", "apply_replicated"),
+}
+
+# (class, method) pairs whose in-memory mutations must follow the journal
+# append that makes them durable
+JOURNALED_PATHS: Set[Tuple[str, str]] = {
+    ("Registry", "receive_push"),
+    ("Registry", "apply_replicated"),
+    ("Registry", "put_metadata"),
+}
+
+# self-methods that apply replayed state in bulk — calling one counts as an
+# in-memory mutation for check 3
+MUTATORS: Set[str] = {"_apply"}
+
+_DURABILITY_OK_RE = re.compile(r"#\s*durability-ok:\s*(.+?)\s*$")
+
+
+def new_stats() -> Dict[str, int]:
+    return {"files": 0, "functions": 0, "replace_sites": 0,
+            "commit_paths": 0, "journaled_paths": 0, "pragmas": 0}
+
+
+def _call_name(node: ast.Call) -> str:
+    """Dotted name of a call target: ``os.replace``, ``self.chunks.sync``,
+    ``f.flush`` …"""
+    parts: List[str] = []
+    f = node.func
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    return ".".join(reversed(parts))
+
+
+def _calls(fn: ast.FunctionDef) -> List[Tuple[str, ast.Call]]:
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            out.append((_call_name(node), node))
+    return out
+
+
+def _is_dir_open(call: ast.Call) -> bool:
+    """``os.open(<dir>, os.O_RDONLY)`` — the POSIX directory-fsync idiom."""
+    if _call_name(call) != "os.open":
+        return False
+    for arg in call.args:
+        if isinstance(arg, ast.Attribute) and arg.attr == "O_RDONLY":
+            return True
+    return False
+
+
+class _FileCheck:
+    def __init__(self, path: str, source: str, stats: Dict[str, int]):
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.stats = stats
+        self.findings: List[Finding] = []
+
+    def _pragma(self, line: int) -> bool:
+        text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        if _DURABILITY_OK_RE.search(text):
+            self.stats["pragmas"] += 1
+            return True
+        return False
+
+    # ------------------------------------------------- check 1: os.replace
+
+    def check_replace(self, owner: Optional[str],
+                      fn: ast.FunctionDef) -> None:
+        calls = _calls(fn)
+        replaces = [c for name, c in calls if name == "os.replace"]
+        if not replaces:
+            return
+        fsync_lines = [c.lineno for name, c in calls if name == "os.fsync"]
+        # a dir-fsync is the fsync_dir helper, or an os.open(dir, O_RDONLY)
+        # immediately followed by an os.fsync (a lone O_RDONLY open is just
+        # a read fd)
+        dir_fsync_lines = [c.lineno for name, c in calls
+                           if name.rsplit(".", 1)[-1] == "fsync_dir"
+                           or (_is_dir_open(c) and any(
+                               c.lineno <= ln <= c.lineno + 3
+                               for ln in fsync_lines))]
+        where = f"{owner}.{fn.name}" if owner else fn.name
+        for rep in replaces:
+            self.stats["replace_sites"] += 1
+            pragma = self._pragma(rep.lineno)
+            if not any(ln < rep.lineno for ln in fsync_lines) and \
+                    not pragma:
+                self.findings.append(Finding(
+                    "durability", self.path, rep.lineno,
+                    f"os.replace in {where} without a preceding "
+                    f"os.fsync — the renamed content may not be "
+                    f"durable at the moment it becomes visible"))
+            if not any(ln > rep.lineno for ln in dir_fsync_lines) and \
+                    not pragma:
+                self.findings.append(Finding(
+                    "durability", self.path, rep.lineno,
+                    f"os.replace in {where}: the target's parent "
+                    f"directory is never fsynced afterwards — the "
+                    f"rename itself may not survive a crash "
+                    f"(fsync_dir / os.open(dir, os.O_RDONLY) + "
+                    f"os.fsync)"))
+
+    # --------------------------------------- check 2: chunks before record
+
+    def check_commit_order(self, owner: str, fn: ast.FunctionDef) -> None:
+        self.stats["commit_paths"] += 1
+        calls = _calls(fn)
+        sync_lines = [c.lineno for name, c in calls
+                      if name.endswith("chunks.sync")]
+        append_lines = [c.lineno for name, c in calls
+                        if name.rsplit(".", 1)[-1] in ("append_raw",
+                                                       "append")
+                        and "journal" in name.lower()]
+        if not append_lines:
+            return                       # nothing journaled here: vacuous
+        first_append = min(append_lines)
+        if not sync_lines:
+            if not self._pragma(first_append):
+                self.findings.append(Finding(
+                    "durability", self.path, first_append,
+                    f"{owner}.{fn.name} journals a commit record but "
+                    f"never calls chunks.sync() — referenced payloads "
+                    f"must be durable before the record"))
+        elif min(sync_lines) > first_append:
+            if not self._pragma(first_append):
+                self.findings.append(Finding(
+                    "durability", self.path, first_append,
+                    f"{owner}.{fn.name} appends the commit record at "
+                    f"line {first_append} before chunks.sync() at line "
+                    f"{min(sync_lines)} — chunks must be durable before "
+                    f"the record that references them"))
+
+    # -------------------------------------- check 3: append before mutate
+
+    def check_journal_order(self, owner: str, fn: ast.FunctionDef) -> None:
+        self.stats["journaled_paths"] += 1
+        calls = _calls(fn)
+        append_lines = [c.lineno for name, c in calls
+                        if name.rsplit(".", 1)[-1] in ("append_raw",
+                                                       "append")
+                        and "journal" in name.lower()]
+        if not append_lines:
+            return
+        first_append = min(append_lines)
+        mutations: List[Tuple[int, str]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    if self._is_self_state(tgt):
+                        mutations.append((node.lineno,
+                                          "assignment through self"))
+            elif isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name.startswith("self.") and \
+                        name.rsplit(".", 1)[-1] in MUTATORS:
+                    mutations.append((node.lineno,
+                                      f"state-applying call {name}()"))
+        for line, what in sorted(mutations):
+            if line >= first_append:
+                break
+            if self._pragma(line):
+                continue
+            self.findings.append(Finding(
+                "durability", self.path, line,
+                f"{owner}.{fn.name} mutates in-memory state "
+                f"({what}) at line {line} before the journal append at "
+                f"line {first_append} — an acked change must be durable "
+                f"before it is observable"))
+
+    @staticmethod
+    def _is_self_state(tgt: ast.expr) -> bool:
+        """``self.x = …`` / ``self.x[...] = …`` / ``self.a.b[...] = …``"""
+        node = tgt
+        while isinstance(node, (ast.Subscript, ast.Attribute)):
+            node = node.value
+        if not isinstance(node, ast.Name) or node.id != "self":
+            return False
+        # a plain `self._x = …` of a local/underscore counter is still a
+        # mutation; the commit paths use pragmas where this is benign
+        return isinstance(tgt, (ast.Subscript, ast.Attribute))
+
+
+def check_file(path: str, source: Optional[str] = None,
+               stats: Optional[Dict[str, int]] = None,
+               commit_paths: Optional[Set[Tuple[str, str]]] = None,
+               journaled_paths: Optional[Set[Tuple[str, str]]] = None
+               ) -> List[Finding]:
+    if source is None:
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+    if stats is None:
+        stats = new_stats()
+    if commit_paths is None:
+        commit_paths = COMMIT_PATHS
+    if journaled_paths is None:
+        journaled_paths = JOURNALED_PATHS
+    stats["files"] += 1
+    fc = _FileCheck(path, source, stats)
+    for node in fc.tree.body:
+        if isinstance(node, ast.FunctionDef):
+            stats["functions"] += 1
+            fc.check_replace(None, node)
+        elif isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if not isinstance(item, ast.FunctionDef):
+                    continue
+                stats["functions"] += 1
+                fc.check_replace(node.name, item)
+                key = (node.name, item.name)
+                if key in commit_paths:
+                    fc.check_commit_order(node.name, item)
+                if key in journaled_paths:
+                    fc.check_journal_order(node.name, item)
+    return fc.findings
+
+
+def check_files(paths: Sequence[str], **kw
+                ) -> Tuple[List[Finding], Dict[str, int]]:
+    stats = kw.pop("stats", None) or new_stats()
+    findings: List[Finding] = []
+    for path in paths:
+        findings.extend(check_file(path, stats=stats, **kw))
+    return findings, stats

@@ -1,0 +1,475 @@
+"""Error-taxonomy analyzer: only typed errors may cross the API boundary.
+
+The delivery stack's contract (``docs/ARCHITECTURE.md``, ``core/errors.py``)
+is that public entry points raise only the typed taxonomy —
+``DeliveryError``, ``PushRejected``, ``WireError``, ``JournalError``, and
+``ValueError`` for caller bugs — never a bare ``KeyError`` / ``OSError`` /
+``IndexError`` / ``struct.error``.  This analyzer proves the half of that
+contract that is visible in our own source:
+
+  * every **raise site** of a banned type (including a bare ``raise``
+    inside a handler that caught one) must carry a
+    ``# raises-ok: <reason>`` pragma — an internal raising helper is fine
+    (``ChunkStore.get`` keeps its mapping-protocol ``KeyError``), but the
+    reason is mandatory prose;
+  * a method marked ``# api-boundary`` (trailing comment on its ``def``
+    line, mirroring ``# requires-lock:``) must not let a banned type
+    **escape** — neither from its own raise sites nor transitively through
+    resolvable calls (``self.method()``, ``self.attr.helper()`` via
+    ``__init__`` bindings, local aliases).  The pragma on a raise site
+    does NOT remove the type from the helper's escape summary: boundary
+    callers must still wrap it.  A ``# raises-ok:`` pragma on a *call*
+    line allowlists deliberate propagation at that site (absence-signal
+    idioms a caller catches).
+
+Escapes through the standard library (``dict[...]``, ``socket``,
+``struct.unpack``) are invisible to an AST raise analysis; those paths are
+covered by the error-path regression tests (``tests/test_error_contract.py``)
+— this lint keeps our *own* raise sites honest and is deliberately
+silent on calls it cannot resolve (duck-typed transports), which is why
+every concrete implementation of a protocol method carries its own
+``# api-boundary`` marker.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .report import Finding
+
+__all__ = ["BANNED", "analyze_files", "check_file", "new_stats"]
+
+# the types that must never cross an api boundary, with the superclasses a
+# handler may name to catch them
+_SUPERS: Dict[str, Tuple[str, ...]] = {
+    "KeyError": ("LookupError",),
+    "IndexError": ("LookupError",),
+    "OSError": (),
+    "IOError": ("OSError",),
+    "ConnectionError": ("OSError",),
+    "ConnectionResetError": ("ConnectionError", "OSError"),
+    "ConnectionRefusedError": ("ConnectionError", "OSError"),
+    "ConnectionAbortedError": ("ConnectionError", "OSError"),
+    "BrokenPipeError": ("ConnectionError", "OSError"),
+    "TimeoutError": ("OSError",),
+    "FileNotFoundError": ("OSError",),
+    "PermissionError": ("OSError",),
+    "InterruptedError": ("OSError",),
+    "struct.error": (),
+}
+BANNED: FrozenSet[str] = frozenset(_SUPERS)
+
+_RAISES_OK_RE = re.compile(r"#\s*raises-ok:\s*(.+?)\s*$")
+_BOUNDARY_RE = re.compile(r"#\s*api-boundary\b")
+
+_Origin = Tuple[str, int]          # (path, line) of the originating raise
+
+
+def new_stats() -> Dict[str, int]:
+    return {"files": 0, "classes": 0, "functions": 0, "raise_sites": 0,
+            "banned_raises": 0, "boundaries": 0, "pragmas": 0,
+            "calls_resolved": 0}
+
+
+def _catchers(banned: str) -> Set[str]:
+    return {banned, *_SUPERS[banned], "Exception", "BaseException"}
+
+
+def _type_name(node: Optional[ast.expr]) -> Optional[str]:
+    """The exception type named by a raise/handler expression."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Call):
+        return _type_name(node.func)
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _type_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return None
+
+
+def _handler_types(handler: ast.ExceptHandler) -> List[str]:
+    t = handler.type
+    if t is None:
+        return ["BaseException"]               # bare except
+    if isinstance(t, ast.Tuple):
+        return [n for n in (_type_name(e) for e in t.elts) if n]
+    name = _type_name(t)
+    return [name] if name else []
+
+
+def _banned_name(name: Optional[str]) -> Optional[str]:
+    """Canonical banned type for a raise/handler name, or None."""
+    if name is None:
+        return None
+    if name in BANNED:
+        return name
+    tail = name.rsplit(".", 1)[-1]
+    if tail in BANNED and tail != "error":     # struct.error stays dotted
+        return tail
+    return None
+
+
+def _ann_class(node) -> Optional[str]:
+    """Class name from an annotation node (`Registry`, `Optional[Registry]`,
+    string annotations)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.split("[")[0].split(".")[-1].strip('"\' ')
+    if isinstance(node, ast.Subscript):
+        return _ann_class(node.slice)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _ClassInfo:
+    def __init__(self, name: str, path: str):
+        self.name = name
+        self.path = path
+        self.methods: Dict[str, ast.FunctionDef] = {}
+        self.bindings: Dict[str, str] = {}     # self.attr -> class name
+        self.boundaries: Set[str] = set()      # method names marked
+
+
+class _Module:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.classes: Dict[str, _ClassInfo] = {}
+        self.functions: Dict[str, ast.FunctionDef] = {}
+
+    def line(self, n: int) -> str:
+        return self.lines[n - 1] if 0 < n <= len(self.lines) else ""
+
+
+def _collect_bindings(cls: _ClassInfo, init: ast.FunctionDef) -> None:
+    ann: Dict[str, str] = {}
+    args = init.args
+    for a in list(args.posonlyargs) + list(args.args) + list(
+            args.kwonlyargs):
+        c = _ann_class(a.annotation)
+        if c:
+            ann[a.arg] = c
+    for node in ast.walk(init):
+        if isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Attribute) and isinstance(
+                node.target.value, ast.Name) and \
+                node.target.value.id == "self":
+            c = _ann_class(node.annotation)
+            if c:
+                cls.bindings[node.target.attr] = c
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if not (isinstance(tgt, ast.Attribute) and isinstance(
+                    tgt.value, ast.Name) and tgt.value.id == "self"):
+                continue
+            v = node.value
+            if isinstance(v, ast.Call) and isinstance(v.func, ast.Name):
+                cls.bindings[tgt.attr] = v.func.id
+            elif isinstance(v, ast.Name) and v.id in ann:
+                cls.bindings[tgt.attr] = ann[v.id]
+
+
+def _has_marker(mod: _Module, node: ast.FunctionDef, regex) -> bool:
+    end = node.body[0].lineno if node.body else node.lineno + 1
+    for ln in range(max(1, node.lineno - 1), end):
+        if regex.search(mod.line(ln)):
+            return True
+    return False
+
+
+class _Analysis:
+    """Cross-file escape analysis: per-function summaries of the banned
+    types that can escape, with memoization and a recursion guard."""
+
+    def __init__(self, modules: List[_Module], stats: Dict[str, int]):
+        self.modules = modules
+        self.stats = stats
+        self.findings: List[Finding] = []
+        self.class_table: Dict[str, Tuple[_Module, _ClassInfo]] = {}
+        self.func_table: Dict[Tuple[str, str], ast.FunctionDef] = {}
+        self._summaries: Dict[Tuple[str, str, str],
+                              Dict[str, _Origin]] = {}
+        self._in_progress: Set[Tuple[str, str, str]] = set()
+        self._reported_raises: Set[Tuple[str, int]] = set()
+        for mod in modules:
+            for cname, cls in mod.classes.items():
+                self.class_table.setdefault(cname, (mod, cls))
+            for fname, fn in mod.functions.items():
+                self.func_table[(mod.path, fname)] = fn
+
+    # ------------------------------------------------------------ summaries
+
+    def summary(self, mod: _Module, cls: Optional[_ClassInfo],
+                fn: ast.FunctionDef) -> Dict[str, _Origin]:
+        key = (mod.path, cls.name if cls else "", fn.name)
+        if key in self._summaries:
+            return self._summaries[key]
+        if key in self._in_progress:
+            return {}                          # recursion: fixpoint at empty
+        self._in_progress.add(key)
+        out = _FunctionWalker(self, mod, cls).walk(fn)
+        self._in_progress.discard(key)
+        self._summaries[key] = out
+        return out
+
+    def summary_of(self, cname: str, method: str) -> Dict[str, _Origin]:
+        entry = self.class_table.get(cname)
+        if entry is None:
+            return {}
+        mod, cls = entry
+        fn = cls.methods.get(method)
+        if fn is None:
+            return {}
+        return self.summary(mod, cls, fn)
+
+    # -------------------------------------------------------------- driving
+
+    def run(self) -> None:
+        for mod in self.modules:
+            for cls in mod.classes.values():
+                self.stats["classes"] += 1
+                for mname, fn in cls.methods.items():
+                    self.stats["functions"] += 1
+                    escapes = self.summary(mod, cls, fn)
+                    if mname in cls.boundaries:
+                        self.stats["boundaries"] += 1
+                        for banned, (opath, oline) in sorted(
+                                escapes.items()):
+                            self.findings.append(Finding(
+                                "err-contract", mod.path, fn.lineno,
+                                f"api-boundary method "
+                                f"'{cls.name}.{mname}' can leak {banned} "
+                                f"(raised at {opath}:{oline}) — wrap it "
+                                f"in the typed taxonomy"))
+            for fn in mod.functions.values():
+                self.stats["functions"] += 1
+                self.summary(mod, None, fn)
+
+    def report_raise(self, path: str, line: int, banned: str,
+                     has_pragma: bool) -> None:
+        self.stats["banned_raises"] += 1
+        if has_pragma:
+            self.stats["pragmas"] += 1
+            return
+        if (path, line) in self._reported_raises:
+            return
+        self._reported_raises.add((path, line))
+        self.findings.append(Finding(
+            "err-contract", path, line,
+            f"raise of banned type {banned} without a "
+            f"'# raises-ok: <reason>' pragma — public paths must use the "
+            f"typed taxonomy (DeliveryError/PushRejected/WireError/"
+            f"JournalError/ValueError)"))
+
+
+class _FunctionWalker:
+    """Walk one function body, tracking enclosing-try suppression and the
+    local alias environment; returns the escape summary."""
+
+    def __init__(self, analysis: _Analysis, mod: _Module,
+                 cls: Optional[_ClassInfo]):
+        self.a = analysis
+        self.mod = mod
+        self.cls = cls
+        self.env: Dict[str, str] = {}          # local var -> class name
+        self.escapes: Dict[str, _Origin] = {}
+
+    def walk(self, fn: ast.FunctionDef) -> Dict[str, _Origin]:
+        for a in list(fn.args.posonlyargs) + list(fn.args.args) + list(
+                fn.args.kwonlyargs):
+            c = _ann_class(a.annotation)
+            if c:
+                self.env[a.arg] = c
+        for stmt in fn.body:
+            self._visit(stmt, caught=frozenset(), handler_types=())
+        return self.escapes
+
+    # ------------------------------------------------------------- helpers
+
+    def _pragma(self, line: int) -> bool:
+        return bool(_RAISES_OK_RE.search(self.mod.line(line)))
+
+    def _suppressed(self, banned: str, caught: FrozenSet[str]) -> bool:
+        return bool(_catchers(banned) & caught)
+
+    def _escape(self, banned: str, origin: _Origin,
+                caught: FrozenSet[str]) -> None:
+        if self._suppressed(banned, caught):
+            return
+        self.escapes.setdefault(banned, origin)
+
+    def _resolve_obj(self, node: ast.expr) -> Optional[str]:
+        """Class of the object expression `self`, `self.attr`, local var,
+        or chains thereof (`self.store.chunks`)."""
+        if isinstance(node, ast.Name):
+            if node.id == "self":
+                return self.cls.name if self.cls else None
+            return self.env.get(node.id)
+        if isinstance(node, ast.Attribute):
+            base = self._resolve_obj(node.value)
+            if base is None:
+                return None
+            entry = self.a.class_table.get(base)
+            if entry is None:
+                return None
+            return entry[1].bindings.get(node.attr)
+        return None
+
+    def _callee_summary(self, call: ast.Call) -> Dict[str, _Origin]:
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            cname = self._resolve_obj(f.value)
+            if cname is None:
+                return {}
+            self.a.stats["calls_resolved"] += 1
+            return self.a.summary_of(cname, f.attr)
+        if isinstance(f, ast.Name):
+            fn = self.a.func_table.get((self.mod.path, f.id))
+            if fn is not None:
+                self.a.stats["calls_resolved"] += 1
+                return self.a.summary(self.mod, None, fn)
+            if f.id in self.a.class_table:     # constructor call
+                self.a.stats["calls_resolved"] += 1
+                return self.a.summary_of(f.id, "__init__")
+        return {}
+
+    # -------------------------------------------------------------- visits
+
+    def _visit(self, node: ast.stmt, caught: FrozenSet[str],
+               handler_types: Tuple[str, ...]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return      # nested callables run later; analyzed on their own
+        if isinstance(node, ast.Raise):
+            self._visit_raise(node, caught, handler_types)
+            for child in ast.iter_child_nodes(node):
+                self._scan_calls(child, caught)
+            return
+        if isinstance(node, ast.Try):
+            body_caught = caught | {
+                t for h in node.handlers for t in _handler_types(h)}
+            for stmt in node.body:
+                self._visit(stmt, body_caught, handler_types)
+            for h in node.handlers:
+                h_types = tuple(_handler_types(h))
+                for stmt in h.body:
+                    self._visit(stmt, caught, h_types)
+            for stmt in node.orelse + node.finalbody:
+                self._visit(stmt, caught, handler_types)
+            return
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            c = self._resolve_obj(node.value) if isinstance(
+                node.value, (ast.Name, ast.Attribute)) else None
+            if c is None and isinstance(node.value, ast.Call) and \
+                    isinstance(node.value.func, ast.Name) and \
+                    node.value.func.id in self.a.class_table:
+                c = node.value.func.id
+            if c is not None:
+                self.env[node.targets[0].id] = c
+        # recurse into nested statements; scan only this statement's own
+        # expressions for calls (a call inside a nested try must see that
+        # try's handlers, which the recursion provides)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                self._visit(child, caught, handler_types)
+            else:
+                self._scan_calls(child, caught)
+
+    def _visit_raise(self, node: ast.Raise, caught: FrozenSet[str],
+                     handler_types: Tuple[str, ...]) -> None:
+        self.a.stats["raise_sites"] += 1
+        if node.exc is None:
+            # bare raise: re-raises whatever the enclosing handler caught
+            for h in handler_types:
+                banned = _banned_name(h)
+                if banned is None and h in ("Exception", "BaseException",
+                                            "LookupError"):
+                    continue    # too wide to judge; tests cover these
+                if banned is None:
+                    continue
+                has_pragma = self._pragma(node.lineno)
+                self.a.report_raise(self.mod.path, node.lineno, banned,
+                                    has_pragma)
+                self._escape(banned, (self.mod.path, node.lineno), caught)
+            return
+        banned = _banned_name(_type_name(node.exc))
+        if banned is None:
+            return
+        has_pragma = self._pragma(node.lineno)
+        self.a.report_raise(self.mod.path, node.lineno, banned, has_pragma)
+        self._escape(banned, (self.mod.path, node.lineno), caught)
+
+    def _scan_calls(self, node: ast.AST, caught: FrozenSet[str]) -> None:
+        for child in ast.walk(node):
+            if isinstance(child, ast.Lambda):
+                continue                       # body runs later, elsewhere
+            if not isinstance(child, ast.Call):
+                continue
+            summary = self._callee_summary(child)
+            if not summary:
+                continue
+            if self._pragma(child.lineno):
+                self.a.stats["pragmas"] += 1
+                continue        # deliberate propagation, reason on the line
+            for banned, origin in summary.items():
+                self._escape(banned, origin, caught)
+
+
+def _build_module(path: str, source: str) -> _Module:
+    mod = _Module(path, source)
+    for node in mod.tree.body:
+        if isinstance(node, ast.ClassDef):
+            cls = _ClassInfo(node.name, path)
+            for item in node.body:
+                if isinstance(item, ast.FunctionDef):
+                    cls.methods[item.name] = item
+                    if _has_marker(mod, item, _BOUNDARY_RE):
+                        cls.boundaries.add(item.name)
+            init = cls.methods.get("__init__")
+            if init is not None:
+                _collect_bindings(cls, init)
+            mod.classes[node.name] = cls
+        elif isinstance(node, ast.FunctionDef):
+            mod.functions[node.name] = node
+    return mod
+
+
+def analyze_files(paths: Sequence[str], *,
+                  overrides: Optional[Dict[str, str]] = None,
+                  stats: Optional[Dict[str, int]] = None
+                  ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Run the raise/escape analysis over ``paths``.  ``overrides`` maps a
+    path to replacement source (tests strip pragmas without touching
+    disk)."""
+    if stats is None:
+        stats = new_stats()
+    modules: List[_Module] = []
+    for path in paths:
+        if overrides and path in overrides:
+            source = overrides[path]
+        else:
+            with open(path, "r", encoding="utf-8") as f:
+                source = f.read()
+        stats["files"] += 1
+        modules.append(_build_module(path, source))
+    analysis = _Analysis(modules, stats)
+    analysis.run()
+    findings = sorted(analysis.findings,
+                      key=lambda f: (f.path, f.line, f.message))
+    return findings, stats
+
+
+def check_file(path: str, source: Optional[str] = None) -> List[Finding]:
+    """Single-file convenience (doc examples, fixtures)."""
+    overrides = {path: source} if source is not None else None
+    findings, _ = analyze_files([path], overrides=overrides)
+    return findings

@@ -1,0 +1,317 @@
+"""Layer-import analyzer: "dependencies point **down** only", machine-checked.
+
+``docs/ARCHITECTURE.md`` declares the L0–L5 layer map as an ASCII box table;
+this analyzer parses that table, builds the import graph over
+``src/repro/{core,delivery,obs}/`` (distinguishing **module-level** imports
+from **call-time** imports inside function bodies), and rejects:
+
+  * any upward edge (target layer above source layer) that is not on the
+    declared :data:`LAYER_EXCEPTIONS` allowlist;
+  * any allowlisted upward edge performed at **module level** — the whole
+    point of the exceptions is that ``import repro.core`` never recurses
+    into the delivery package, so they must stay lazy;
+  * any scanned module with no declared layer — new modules must be added
+    to the table before ``--strict`` passes;
+  * any scanned module importing ``repro.analysis`` (the gate must never
+    become a runtime dependency of what it gates);
+  * any ``repro.obs`` module importing the rest of the repo — obs is the
+    dependency-free crosscutting layer every tier writes into.
+
+Layer assignments are keyed by module *stem* (``store``, ``wire``, …),
+which is how the doc table names them; stems are unique across the scanned
+trees (``__init__`` package facades are exempt re-export surfaces).
+Downward and same-layer edges are always allowed — layers group modules,
+they do not order siblings.
+
+`layers_markdown` renders the derived map + allowlist + discovered upward
+edges deterministically; ``tools/analyze.py --write-docs`` splices it into
+ARCHITECTURE.md and ``--strict`` fails on drift, exactly like the lock
+hierarchy in CONCURRENCY.md.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .report import Finding
+
+__all__ = ["LAYER_EXCEPTIONS", "LayerResult", "analyze_paths",
+           "layers_markdown", "parse_layer_doc"]
+
+ARCH_DOC = "docs/ARCHITECTURE.md"
+
+# Declared upward (lower-layer → higher-layer) imports.  Every entry must
+# be a *call-time* import in the source — an allowlisted edge performed at
+# module level is still a finding.  Keys are (source stem, target stem).
+LAYER_EXCEPTIONS: Dict[Tuple[str, str], str] = {
+    ("journal", "wire"): (
+        "journaled records reuse the delivery frame codec; lazy so "
+        "`import repro.core` never recurses into the delivery package"),
+    ("registry", "wire"): (
+        "commit/metadata records are encoded with the same wire codec the "
+        "journal ships (see core.journal's layering note)"),
+    ("pushpull", "client"): (
+        "legacy shim: `pushpull.Client` delegates to the unified "
+        "`ImageClient`, constructed lazily per call"),
+    ("pushpull", "transport"): (
+        "legacy shim: each push/pull binds a `LocalTransport` to the "
+        "target registry at call time"),
+}
+
+# Layer line in the ARCHITECTURE.md box table, e.g.
+#   L3    │  server.py · cache.py · wire.py (+ delta.py, pushpull.py)
+_LAYER_LINE_RE = re.compile(r"^\s*L(\d)\s*│(.*)$")
+_MODULE_RE = re.compile(r"(\w+)\.py")
+
+
+@dataclasses.dataclass
+class LayerResult:
+    findings: List[Finding]
+    assignments: Dict[str, int]          # module stem -> layer
+    exceptions: Dict[Tuple[str, str], str]
+    edges: List[Tuple[str, str, bool, str, int]]  # (src, dst, lazy, path, ln)
+    stats: Dict[str, int]
+
+
+def parse_layer_doc(text: str) -> Dict[str, int]:
+    """Module-stem → layer from the ASCII box table in ARCHITECTURE.md."""
+    assignments: Dict[str, int] = {}
+    for line in text.splitlines():
+        m = _LAYER_LINE_RE.match(line)
+        if not m:
+            continue
+        layer = int(m.group(1))
+        for mod in _MODULE_RE.findall(m.group(2)):
+            assignments[mod] = layer
+    return assignments
+
+
+def _load_doc_assignments(doc: str) -> Dict[str, int]:
+    with open(doc, "r", encoding="utf-8") as f:
+        return parse_layer_doc(f.read())
+
+
+def _module_info(path: str) -> Tuple[str, str]:
+    """(stem, package) for a scanned file — package is the containing
+    directory name (``core`` / ``delivery`` / ``obs`` in the real tree)."""
+    stem = os.path.splitext(os.path.basename(path))[0]
+    package = os.path.basename(os.path.dirname(path))
+    return stem, package
+
+
+class _ImportCollector(ast.NodeVisitor):
+    """Collect ``(target, lazy, line)`` triples; ``target`` is a dotted
+    absolute name (``repro.delivery.wire``) or a package-relative one
+    (``.wire`` resolved by the caller)."""
+
+    def __init__(self, package: str):
+        self.package = package
+        self.imports: List[Tuple[str, bool, int]] = []
+        self._depth = 0
+
+    def _add(self, target: str, line: int) -> None:
+        self.imports.append((target, self._depth > 0, line))
+
+    def visit_FunctionDef(self, node):
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            self._add(alias.name, node.lineno)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.level > 0:
+            # relative: `from . import wire` / `from .plan import SourceLeg`
+            base = f"repro.{self.package}"
+            if node.module:
+                base += f".{node.module}"
+            if node.module is not None:
+                self._add(base, node.lineno)
+            else:
+                for alias in node.names:
+                    self._add(f"{base}.{alias.name}", node.lineno)
+        else:
+            base = node.module or ""
+            # each name may be a distinct module when importing from a
+            # package facade (`from repro.core import cdc, cdmt`)
+            for alias in node.names:
+                self._add(f"{base}.{alias.name}", node.lineno)
+
+
+def _resolve_target(dotted: str, known: Dict[str, str]
+                    ) -> Optional[Tuple[str, str]]:
+    """Resolve a dotted import target to ``(stem, package)``.
+
+    ``known`` maps stem → package for every scanned module.  Non-``repro``
+    targets (stdlib, third-party) resolve to None.  A target naming a
+    package facade (``repro.core``) or a symbol imported *from* a facade
+    (``repro.obs.MetricsRegistry``) resolves to the deepest component that
+    is a known stem or package.
+    """
+    if not dotted.startswith("repro"):
+        return None
+    parts = dotted.split(".")
+    # deepest known module stem wins: repro.delivery.wire -> wire
+    for part in reversed(parts[1:]):
+        if part in known:
+            return part, known[part]
+    # package facade: repro.core / repro.obs / repro.analysis...
+    if len(parts) >= 2:
+        return f"{parts[1]}.__init__", parts[1]
+    return None
+
+
+def analyze_paths(paths: Sequence[str], *, doc: str = ARCH_DOC,
+                  assignments: Optional[Dict[str, int]] = None,
+                  exceptions: Optional[Dict[Tuple[str, str], str]] = None
+                  ) -> LayerResult:
+    if assignments is None:
+        assignments = _load_doc_assignments(doc)
+    if exceptions is None:
+        exceptions = LAYER_EXCEPTIONS
+    findings: List[Finding] = []
+    edges: List[Tuple[str, str, bool, str, int]] = []
+    stats = {"files": 0, "modules": 0, "edges": 0, "lazy_edges": 0,
+             "upward_edges": 0, "exceptions": len(exceptions)}
+
+    modules: List[Tuple[str, str, str]] = []   # (path, stem, package)
+    known: Dict[str, str] = {}                 # stem -> package
+    for path in paths:
+        stem, package = _module_info(path)
+        modules.append((path, stem, package))
+        if stem != "__init__":
+            known[stem] = package
+    for stem in assignments:
+        # assignments may name modules outside `paths` (fixture runs
+        # analyze a single file against the real layer map)
+        known.setdefault(stem, "+")
+
+    # package -> max member layer, for edges landing on a facade
+    facade_layer: Dict[str, int] = {}
+    for stem, package in known.items():
+        if stem in assignments:
+            facade_layer[package] = max(facade_layer.get(package, 0),
+                                        assignments[stem])
+
+    def layer_of(stem: str, package: str) -> Optional[int]:
+        if package == "obs":
+            return None                        # crosscutting: always below
+        if stem.endswith("__init__"):
+            return facade_layer.get(package)
+        return assignments.get(stem)
+
+    for path, stem, package in modules:
+        stats["files"] += 1
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        collector = _ImportCollector(package)
+        collector.visit(tree)
+
+        is_facade = stem == "__init__"
+        is_obs = package == "obs"
+        if not is_facade:
+            stats["modules"] += 1
+            if not is_obs and stem not in assignments:
+                findings.append(Finding(
+                    "layers", path, 1,
+                    f"module '{stem}' has no declared layer — add it to "
+                    f"the L0–L5 table in {doc}"))
+                continue
+
+        seen_sites = set()
+        for dotted, lazy, line in collector.imports:
+            if dotted.startswith("repro.analysis"):
+                findings.append(Finding(
+                    "layers", path, line,
+                    f"'{stem}' imports the analysis package — the gate "
+                    f"must never be a runtime dependency of gated code"))
+                continue
+            resolved = _resolve_target(dotted, known)
+            if resolved is None:
+                continue
+            dst_stem, dst_package = resolved
+            if is_obs:
+                if dst_package != "obs":
+                    findings.append(Finding(
+                        "layers", path, line,
+                        f"obs module '{stem}' imports '{dotted}' — obs is "
+                        f"the dependency-free crosscutting layer and must "
+                        f"import nothing from the rest of the repo"))
+                continue
+            if dst_package == "obs" or is_facade:
+                continue                       # always allowed / facade
+            if (dst_stem, line) in seen_sites:
+                continue      # one edge per (module, site): multi-name froms
+            seen_sites.add((dst_stem, line))
+            edges.append((stem, dst_stem, lazy, path, line))
+            stats["edges"] += 1
+            if lazy:
+                stats["lazy_edges"] += 1
+            src_layer = layer_of(stem, package)
+            dst_layer = layer_of(dst_stem, dst_package)
+            if src_layer is None or dst_layer is None:
+                continue                       # unknown already reported
+            if dst_layer <= src_layer:
+                continue                       # downward or lateral: fine
+            stats["upward_edges"] += 1
+            reason = exceptions.get((stem, dst_stem))
+            if reason is None:
+                findings.append(Finding(
+                    "layers", path, line,
+                    f"upward import: L{src_layer} '{stem}' imports "
+                    f"L{dst_layer} '{dst_stem}' — dependencies point down "
+                    f"only (declare a LAYER_EXCEPTIONS entry with a "
+                    f"reason if this is deliberate, and keep it lazy)"))
+            elif not lazy:
+                findings.append(Finding(
+                    "layers", path, line,
+                    f"allowlisted upward import '{stem}' → '{dst_stem}' "
+                    f"is performed at module level — the exception "
+                    f"requires a lazy, call-time import"))
+    return LayerResult(findings=findings, assignments=dict(assignments),
+                       exceptions=dict(exceptions), edges=edges, stats=stats)
+
+
+def layers_markdown(result: LayerResult) -> str:
+    """Deterministic markdown for the generated ARCHITECTURE.md section."""
+    by_layer: Dict[int, List[str]] = {}
+    for stem, layer in result.assignments.items():
+        by_layer.setdefault(layer, []).append(stem)
+    lines = ["| layer | modules |", "|-------|---------|"]
+    for layer in sorted(by_layer, reverse=True):
+        mods = " · ".join(f"`{m}`" for m in sorted(by_layer[layer]))
+        lines.append(f"| L{layer} | {mods} |")
+    lines.append("")
+    lines.append("Declared upward exceptions (each must stay a lazy, "
+                 "call-time import — `repro.analysis.layers."
+                 "LAYER_EXCEPTIONS`):")
+    lines.append("")
+    for (src, dst) in sorted(result.exceptions):
+        lines.append(f"- `{src}` → `{dst}` — {result.exceptions[(src, dst)]}")
+    lines.append("")
+    lines.append("Discovered upward edges (site of the import; all lazy, "
+                 "all allowlisted):")
+    lines.append("")
+    seen = set()
+    upward = []
+    for src, dst, lazy, path, line in result.edges:
+        src_l = result.assignments.get(src)
+        dst_l = result.assignments.get(dst)
+        if src_l is None or dst_l is None or dst_l <= src_l:
+            continue
+        if (src, dst) in seen:
+            continue                 # first site per edge keeps the doc tight
+        seen.add((src, dst))
+        upward.append(f"- `{src}` → `{dst}` — {path}:{line}")
+    lines.extend(sorted(upward))
+    return "\n".join(lines) + "\n"

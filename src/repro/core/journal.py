@@ -299,7 +299,15 @@ def write_snapshot_raw(path: str, raw_records: Iterable[bytes]) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
-    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    fsync_dir(os.path.dirname(os.path.abspath(path)) or ".")
+
+
+def fsync_dir(dirname: str) -> None:
+    """fsync a directory, making a completed rename inside it durable —
+    an ``os.replace`` alone updates the directory entry only in memory;
+    a crash before the directory inode reaches disk can undo the swap.
+    Every atomic-rename site in the durable stores must call this (the
+    durability lint enforces it)."""
     dfd = os.open(dirname, os.O_RDONLY)
     try:
         os.fsync(dfd)

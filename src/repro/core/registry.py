@@ -268,6 +268,7 @@ class Registry:
             return None
         return lin.get_version(lin.roots[-1].version)
 
+    # api-boundary
     def index_for_tag(self, lineage: str, tag: str) -> CDMT:
         """CDMT for ``lineage:tag``; :class:`DeliveryError` (a clean
         protocol-level error, not a bare ``KeyError``) when unknown."""
@@ -279,6 +280,7 @@ class Registry:
             raise DeliveryError(f"unknown tag {lineage}:{tag}")
         return lin.get_version(version)
 
+    # api-boundary
     def branch_root_at(self, lineage: str, branch: str,
                        version: int) -> Optional[bytes]:
         """Branch-at-version query: the CDMT root the branch head
@@ -297,6 +299,7 @@ class Registry:
         """Which of ``fps`` the registry is missing."""
         return self.store.missing(fps)
 
+    # api-boundary
     def receive_push(self, lineage: str, tag: str, recipe: Recipe,
                      chunks: Dict[bytes, bytes],
                      parent_version: Optional[int] = None,
@@ -446,6 +449,7 @@ class Registry:
                            nodes_hashed=stats.nodes_hashed,
                            hash_calls=stats.hash_calls)
 
+    # api-boundary
     def serve_chunks(self, fps: Sequence[bytes]) -> Dict[bytes, bytes]:
         """Chunk payloads for ``fps``; an unknown fingerprint raises a clean
         :class:`DeliveryError` instead of leaking a bare ``KeyError``
@@ -460,6 +464,7 @@ class Registry:
                     f"{fp.hex()[:12]}") from None
         return out
 
+    # api-boundary
     def recipe_for(self, lineage: str, tag: str) -> Recipe:
         recipe = self.recipes.get((lineage, tag))
         if recipe is None:
@@ -472,6 +477,7 @@ class Registry:
 
     # -- small metadata blobs (checkpoint manifests etc.) ---------------------
 
+    # api-boundary
     def put_metadata(self, lineage: str, tag: str, blob: bytes) -> None:
         # write-ahead like receive_push: journal first, so a failed append
         # never leaves in-memory state a later compact() would resurrect
@@ -481,6 +487,7 @@ class Registry:
         self.metadata[(lineage, tag)] = blob
         self.replication.append_raw(raw)
 
+    # api-boundary
     def get_metadata(self, lineage: str, tag: str) -> bytes:
         blob = self.metadata.get((lineage, tag))
         if blob is None:
@@ -489,6 +496,7 @@ class Registry:
 
     # -- garbage collection --------------------------------------------------
 
+    # api-boundary
     def sweep(self, retain_tags: Optional[Mapping[str, Iterable[str]]] = None,
               drop: bool = False) -> SweepReport:
         """Mark-and-sweep over recipes: report — and with ``drop=True``
@@ -617,6 +625,7 @@ class Registry:
             lineage, tag, blob = _decode_meta(payload)
             self.metadata[(lineage, tag)] = blob
 
+    # api-boundary
     def apply_replicated(self, rtype: int, payload: bytes,
                          expected_seq: Optional[int] = None,
                          raw: Optional[bytes] = None) -> bool:

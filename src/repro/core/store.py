@@ -34,6 +34,7 @@ import numpy as np
 
 from . import cdc, hashing
 from .errors import DeliveryError
+from .journal import fsync_dir
 
 
 @dataclasses.dataclass
@@ -130,7 +131,8 @@ class ChunkStore:
             return
         for src, dst in ((new_log, self._log_path), (new_idx, self._idx_path)):
             if os.path.exists(src):
-                os.replace(src, dst)
+                os.replace(src, dst)  # durability-ok: .new files were fsynced before the durable intent flag landed; recovery only completes the rename
+        fsync_dir(self.directory)
         if os.path.exists(self._clean_path):
             os.unlink(self._clean_path)    # sized for the pre-compaction files
         os.unlink(self._flag_path)
@@ -228,7 +230,7 @@ class ChunkStore:
                     f"ChunkStore {self.directory} is closed")
             off, size = self._index[fp]
             return os.pread(self._read_fd, size, off)
-        raise KeyError(fp.hex())
+        raise KeyError(fp.hex())  # raises-ok: mapping protocol — every boundary caller wraps (Registry.serve_chunks, DedupStore restore paths)
 
     def sync(self) -> None:
         """fsync log then index, then atomically advance the clean marker —
@@ -249,6 +251,7 @@ class ChunkStore:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._clean_path)
+        fsync_dir(self.directory)
 
     def compact(self, live: Iterable[bytes]) -> Tuple[int, int]:
         """Drop every chunk not in ``live`` and compact the log.
@@ -303,6 +306,7 @@ class ChunkStore:
         os.close(self._read_fd)
         os.replace(new_log_path, self._log_path)
         os.replace(new_idx_path, self._idx_path)
+        fsync_dir(self.directory)
         self._index = new_index
         self._log_size = off
         self._idx_size = len(new_index) * self._IDX_ENTRY
@@ -416,17 +420,32 @@ class DedupStore:
     # -- restore -------------------------------------------------------------
 
     def restore(self, name: str) -> bytes:
-        recipe = self.recipes[name]
-        return b"".join(self.chunks.get(fp) for fp in recipe.fps)
+        recipe = self._recipe_for_restore(name)
+        return b"".join(self._chunk_for_restore(name, fp)
+                        for fp in recipe.fps)
 
     def restore_into(self, name: str, out: np.ndarray) -> None:
         """Zero-extra-copy restore into a preallocated uint8 buffer."""
-        recipe = self.recipes[name]
+        recipe = self._recipe_for_restore(name)
         off = 0
         for fp in recipe.fps:
-            c = self.chunks.get(fp)
+            c = self._chunk_for_restore(name, fp)
             out[off:off + len(c)] = np.frombuffer(c, dtype=np.uint8)
             off += len(c)
+
+    def _recipe_for_restore(self, name: str) -> "Recipe":
+        recipe = self.recipes.get(name)
+        if recipe is None:
+            raise DeliveryError(f"restore: unknown recipe {name!r}")
+        return recipe
+
+    def _chunk_for_restore(self, name: str, fp: bytes) -> bytes:
+        try:
+            return self.chunks.get(fp)
+        except KeyError:
+            raise DeliveryError(
+                f"restore {name}: chunk {fp.hex()[:12]} referenced by the "
+                f"recipe is missing from the store") from None
 
     # -- accounting ----------------------------------------------------------
 

@@ -126,6 +126,7 @@ class ImageClient:
 
     # ---------------------------------------------------------------- commit
 
+    # api-boundary
     def commit(self, lineage: str, tag: str, data: bytes) -> Recipe:
         """Chunk + locally store a new artifact version, build local CDMT
         (incrementally against the lineage head when one exists)."""
@@ -140,6 +141,7 @@ class ImageClient:
         self.tag_trees[f"{lineage}:{tag}"] = tree
         return recipe
 
+    # api-boundary
     def index_for_tag(self, lineage: str, tag: str) -> CDMT:
         """The CDMT for a committed tag, from the per-tag cache when warm.
 
@@ -148,7 +150,11 @@ class ImageClient:
         repeated pushes/pulls of older tags no longer pay a full O(n)
         rebuild; the result is cached."""
         key = f"{lineage}:{tag}"
-        recipe = self.store.recipes[key]
+        recipe = self.store.recipes.get(key)
+        if recipe is None:
+            raise DeliveryError(
+                f"index_for_tag: {key!r} has never been committed or "
+                f"pulled on this client")
         cached = self.tag_trees.get(key)
         if cached is not None and cached.leaf_fps() == list(recipe.fps):
             return cached
@@ -163,11 +169,13 @@ class ImageClient:
         self.tag_trees[key] = tree
         return tree
 
+    # api-boundary
     def materialize(self, lineage: str, tag: str) -> bytes:
         return self.store.restore(f"{lineage}:{tag}")
 
     # ------------------------------------------------------------------ pull
 
+    # api-boundary
     def plan_pull(self, lineage: str, tag: str) -> PullPlan:
         """Decide a pull without transferring a chunk (Algorithm 2 + local
         store dedup).  ``execute`` runs the resulting plan."""
@@ -224,6 +232,7 @@ class ImageClient:
                         comparisons=comparisons[0],
                         index_bytes=index_bytes, recipe_bytes=recipe_bytes)
 
+    # api-boundary
     def execute(self, plan: PullPlan) -> TransferReport:
         """Run a pull plan: stream the fetch list in pipelined batches,
         account per source, verify coverage, ingest atomically.
@@ -308,11 +317,13 @@ class ImageClient:
         for leg in result.legs:
             report.merge_leg(leg)
 
+    # api-boundary
     def pull(self, lineage: str, tag: str) -> TransferReport:
         """Plan + execute in one call (the common case)."""
         with self.tracer.span("pull", lineage=lineage, tag=tag):
             return self.execute(self.plan_pull(lineage, tag))
 
+    # api-boundary
     def upgrade(self, lineage: str) -> TransferReport:
         """Pull the lineage head (rolling-upgrade entry point)."""
         tags = self._require_transport().tags(lineage)
@@ -322,6 +333,7 @@ class ImageClient:
 
     # ------------------------------------------------------------------ push
 
+    # api-boundary
     def push(self, lineage: str, tag: str,
              parent_version: Optional[int] = None) -> TransferReport:
         """Push a committed version: Algorithm 2 against the registry head,
@@ -338,7 +350,11 @@ class ImageClient:
     def _push(self, lineage: str, tag: str,
               parent_version: Optional[int] = None) -> TransferReport:
         transport = self._require_transport()
-        recipe = self.store.recipes[f"{lineage}:{tag}"]
+        recipe = self.store.recipes.get(f"{lineage}:{tag}")
+        if recipe is None:
+            raise DeliveryError(
+                f"push {lineage}:{tag}: version was never committed on "
+                f"this client — call commit() first")
         local_idx = self.index_for_tag(lineage, tag)
         report = TransferReport(op="push", lineage=lineage, tag=tag,
                                 transport=transport.name,

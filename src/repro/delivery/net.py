@@ -378,7 +378,7 @@ class SocketRegistryServer:
                 return
             out = self._dispatch(op, lineage, tag, frames)
         except (_ConnectionClosed, OSError):
-            raise
+            raise  # raises-ok: dead client socket — serve_forever tears the connection down; nothing crosses the API surface
         except Exception as e:
             if streamed:
                 # the frame count is already on the wire; any "error frame"
@@ -597,12 +597,14 @@ class SocketTransport:
 
     # ------------------------------------------------------------ transport
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
         t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.INDEX, lineage, tag)
         self._meter.rec("index", t0, index=req_b + resp_b)
         return wire.decode_index(frames[0]), req_b + resp_b
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
         t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.LATEST_INDEX,
@@ -612,12 +614,14 @@ class SocketTransport:
             return None, req_b + resp_b
         return wire.decode_index(frames[0]), req_b + resp_b
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
         t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.RECIPE, lineage, tag)
         self._meter.rec("recipe", t0, recipe=req_b + resp_b)
         return wire.decode_recipe(frames[0]), req_b + resp_b
 
+    # api-boundary
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
         """One WANT exchange; response frames are decoded *as they arrive*,
@@ -659,6 +663,7 @@ class SocketTransport:
         self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
+    # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], *,
              parent_version: Optional[int] = None,
@@ -695,6 +700,7 @@ class SocketTransport:
                         chunk=outcome.chunk_bytes)
         return outcome
 
+    # api-boundary
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
         t0 = time.perf_counter()
         req_b, frames, resp_b = self._exchange(wire.Op.HAS, "", "",
@@ -702,6 +708,7 @@ class SocketTransport:
         self._meter.rec("has", t0, want=req_b + resp_b)
         return wire.decode_missing(frames[0]), req_b + resp_b
 
+    # api-boundary
     def tags(self, lineage: str) -> List[str]:
         t0 = time.perf_counter()
         _, frames, _ = self._exchange(wire.Op.TAGS, lineage, "",
@@ -709,6 +716,7 @@ class SocketTransport:
         self._meter.rec("tags", t0)
         return wire.decode_tag_list(frames[0])
 
+    # api-boundary
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 

@@ -196,6 +196,7 @@ class RegistryServer:
 
     # ------------------------------------------------------------ index/recipe
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> bytes:
         """Serialized INDEX frame for ``lineage:tag``.  An unknown lineage or
         tag raises the protocol-level :class:`repro.core.errors.DeliveryError`
@@ -207,6 +208,7 @@ class RegistryServer:
             self._m_egress.inc(len(frame))
             return frame
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Optional[bytes]:
         """Serialized INDEX frame of the lineage head, or None (new lineage)."""
         with self._registry_lock:
@@ -217,6 +219,7 @@ class RegistryServer:
                 self._m_egress.inc(len(frame))
         return frame
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> bytes:
         """Serialized RECIPE frame; :class:`DeliveryError` when unknown."""
         with self._track("recipe"):
@@ -228,6 +231,7 @@ class RegistryServer:
 
     # ----------------------------------------------------------------- chunks
 
+    # api-boundary
     def handle_want(self, want_frame: bytes) -> List[bytes]:
         """Answer a WANT frame with batched CHUNK_BATCH frames.
 
@@ -238,6 +242,7 @@ class RegistryServer:
         _, frames = self.want_plan(want_frame)
         return list(frames)
 
+    # api-boundary
     def want_plan(self, want_frame: bytes
                   ) -> Tuple[int, Iterable[bytes]]:
         """``(n_frames, frame iterator)`` for one WANT — the streaming form
@@ -274,6 +279,7 @@ class RegistryServer:
                 self._m_egress.inc(len(frame))
                 yield frame
 
+    # api-boundary
     def handle_has(self, has_frame: bytes) -> bytes:
         """Answer a HAS presence query with a MISSING frame — the fps the
         registry does *not* hold.  A pusher then ships exactly these,
@@ -287,6 +293,7 @@ class RegistryServer:
             self._m_egress.inc(len(resp))
             return resp
 
+    # api-boundary
     def handle_tags(self, tags_frame: bytes) -> bytes:
         """Answer a TAGS listing query with a TAG_LIST frame.
 
@@ -303,6 +310,7 @@ class RegistryServer:
 
     # ------------------------------------------------------------ replication
 
+    # api-boundary
     def handle_ship(self, ship_frame: bytes) -> List[bytes]:
         """Answer a SHIP request: one REPL_ACK frame carrying the primary's
         epoch + log head, then up to ``limit`` RECORD frames from the
@@ -334,6 +342,7 @@ class RegistryServer:
             self._m_egress.inc(sum(len(f) for f in frames))
             return frames
 
+    # api-boundary
     def handle_repl_ack(self, ack_frame: bytes) -> bytes:
         """Record a standby's applied offset; reply with the primary's
         current epoch + head so the follower knows its remaining lag.
@@ -389,6 +398,7 @@ class RegistryServer:
 
     # ------------------------------------------------------------------- push
 
+    # api-boundary
     def handle_push(self, header_frame: bytes, recipe_frame: bytes,
                     chunk_frames: Sequence[bytes]) -> PushReceipt:
         """Accept a wire push: decode, verify, commit.
@@ -425,6 +435,7 @@ class RegistryServer:
 
     # ---------------------------------------------------------------- metrics
 
+    # api-boundary
     def handle_metrics(self) -> bytes:
         """One METRICS frame: the whole registry (frontend + cache + core)
         serialized as a JSON snapshot — the ``Op.METRICS`` scrape body."""

@@ -178,6 +178,7 @@ class LocalTransport:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._meter = TransportMeter(self.metrics, self.name)
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
         t0 = time.perf_counter()
         idx = self.registry.index_for_tag(lineage, tag)
@@ -185,6 +186,7 @@ class LocalTransport:
         self._meter.rec("index", t0, index=nbytes)
         return idx, nbytes
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
         t0 = time.perf_counter()
         idx = self.registry.latest_index(lineage)
@@ -192,6 +194,7 @@ class LocalTransport:
         self._meter.rec("index", t0, index=nbytes)
         return idx, nbytes
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
         t0 = time.perf_counter()
         recipe = self.registry.recipe_for(lineage, tag)
@@ -199,6 +202,7 @@ class LocalTransport:
         self._meter.rec("recipe", t0, recipe=nbytes)
         return recipe, nbytes
 
+    # api-boundary
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
         t0 = time.perf_counter()
@@ -210,6 +214,7 @@ class LocalTransport:
         self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
+    # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], *,
              parent_version: Optional[int] = None,
@@ -231,18 +236,21 @@ class LocalTransport:
                         chunk=outcome.chunk_bytes)
         return outcome
 
+    # api-boundary
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
         t0 = time.perf_counter()
         missing = self.registry.has_chunks(fps)
         self._meter.rec("has", t0)
         return missing, 0
 
+    # api-boundary
     def tags(self, lineage: str) -> List[str]:
         t0 = time.perf_counter()
         out = self.registry.tags(lineage)
         self._meter.rec("tags", t0)
         return out
 
+    # api-boundary
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 
@@ -275,12 +283,14 @@ class WireTransport:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._meter = TransportMeter(self.metrics, self.name)
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
         t0 = time.perf_counter()
         frame = self.server.get_index(lineage, tag)
         self._meter.rec("index", t0, index=len(frame))
         return wire.decode_index(frame), len(frame)
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
         t0 = time.perf_counter()
         frame = self.server.get_latest_index(lineage)
@@ -290,12 +300,14 @@ class WireTransport:
             return None, 0
         return wire.decode_index(frame), len(frame)
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
         t0 = time.perf_counter()
         frame = self.server.get_recipe(lineage, tag)
         self._meter.rec("recipe", t0, recipe=len(frame))
         return wire.decode_recipe(frame), len(frame)
 
+    # api-boundary
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
         t0 = time.perf_counter()
@@ -311,6 +323,7 @@ class WireTransport:
         self._meter.rec_legs(t0, [leg])
         return FetchResult(chunks=chunks, legs=[leg])
 
+    # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], *,
              parent_version: Optional[int] = None,
@@ -339,6 +352,7 @@ class WireTransport:
                         chunk=outcome.chunk_bytes)
         return outcome
 
+    # api-boundary
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
         t0 = time.perf_counter()
         req = wire.encode_has(fps)
@@ -346,6 +360,7 @@ class WireTransport:
         self._meter.rec("has", t0, want=len(req) + len(resp))
         return wire.decode_missing(resp), len(req) + len(resp)
 
+    # api-boundary
     def tags(self, lineage: str) -> List[str]:
         # control-plane query, but still protocol data: a TAGS frame in, a
         # TAG_LIST frame back, both metered by the server — the same frames
@@ -363,6 +378,7 @@ class WireTransport:
         return MetricsSnapshot.from_json(
             wire.decode_metrics(frame).decode("utf-8"))
 
+    # api-boundary
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 
@@ -432,24 +448,28 @@ class SwarmTransport:
 
     # registry-delegated control plane --------------------------------------
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
         t0 = time.perf_counter()
         tree, nbytes = self.registry_transport.get_index(lineage, tag)
         self._meter.rec("index", t0, index=nbytes)
         return tree, nbytes
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
         t0 = time.perf_counter()
         tree, nbytes = self.registry_transport.get_latest_index(lineage)
         self._meter.rec("index", t0, index=nbytes)
         return tree, nbytes
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
         t0 = time.perf_counter()
         recipe, nbytes = self.registry_transport.get_recipe(lineage, tag)
         self._meter.rec("recipe", t0, recipe=nbytes)
         return recipe, nbytes
 
+    # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], **kw) -> PushOutcome:
         t0 = time.perf_counter()
@@ -460,12 +480,14 @@ class SwarmTransport:
                         chunk=outcome.chunk_bytes)
         return outcome
 
+    # api-boundary
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
         t0 = time.perf_counter()
         missing, nbytes = self.registry_transport.has_chunks(fps)
         self._meter.rec("has", t0, want=nbytes)
         return missing, nbytes
 
+    # api-boundary
     def tags(self, lineage: str) -> List[str]:
         t0 = time.perf_counter()
         out = self.registry_transport.tags(lineage)
@@ -474,6 +496,7 @@ class SwarmTransport:
 
     # peer-first data plane --------------------------------------------------
 
+    # api-boundary
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
         t0 = time.perf_counter()
@@ -514,6 +537,7 @@ class SwarmTransport:
         self._meter.rec_legs(t0, legs)
         return FetchResult(chunks=chunks, legs=legs)
 
+    # api-boundary
     def notify_pulled(self, lineage: str, tag: str) -> None:
         # freshly provisioned ⇒ this node can now serve the version
         self.tracker.register(lineage, tag, self.node)
@@ -698,6 +722,7 @@ class ReplicatedTransport:
 
     # --------------------------------------------- control plane (primary)
 
+    # api-boundary
     def get_index(self, lineage: str, tag: str) -> Tuple[CDMT, int]:
         t0 = time.perf_counter()
         tree, nbytes = self._on_primary(lambda t: t.get_index(lineage, tag))
@@ -706,30 +731,35 @@ class ReplicatedTransport:
         self._meter.rec("index", t0, index=nbytes)
         return tree, nbytes
 
+    # api-boundary
     def get_latest_index(self, lineage: str) -> Tuple[Optional[CDMT], int]:
         t0 = time.perf_counter()
         tree, nbytes = self._on_primary(lambda t: t.get_latest_index(lineage))
         self._meter.rec("index", t0, index=nbytes)
         return tree, nbytes
 
+    # api-boundary
     def get_recipe(self, lineage: str, tag: str) -> Tuple[Recipe, int]:
         t0 = time.perf_counter()
         recipe, nbytes = self._on_primary(lambda t: t.get_recipe(lineage, tag))
         self._meter.rec("recipe", t0, recipe=nbytes)
         return recipe, nbytes
 
+    # api-boundary
     def tags(self, lineage: str) -> List[str]:
         t0 = time.perf_counter()
         out = self._on_primary(lambda t: t.tags(lineage))
         self._meter.rec("tags", t0)
         return out
 
+    # api-boundary
     def has_chunks(self, fps: Sequence[bytes]) -> Tuple[List[bytes], int]:
         t0 = time.perf_counter()
         missing, nbytes = self._on_primary(lambda t: t.has_chunks(fps))
         self._meter.rec("has", t0, want=nbytes)
         return missing, nbytes
 
+    # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,
              chunks: Dict[bytes, bytes], *,
              parent_version: Optional[int] = None,
@@ -744,6 +774,7 @@ class ReplicatedTransport:
                         chunk=outcome.chunk_bytes)
         return outcome
 
+    # api-boundary
     def notify_pulled(self, lineage: str, tag: str) -> None:
         pass
 
@@ -788,6 +819,7 @@ class ReplicatedTransport:
             self._checked.setdefault(key, set()).add(idx)
         return True, nbytes
 
+    # api-boundary
     def fetch_chunks(self, lineage: str, tag: str,
                      fps: Sequence[bytes]) -> FetchResult:
         t0 = time.perf_counter()

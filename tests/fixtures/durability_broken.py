@@ -1,0 +1,34 @@
+"""Deliberately crash-unsafe module for ``tools/analyze.py --self-test``.
+
+Never imported by product code.  Checked with
+``commit_paths={("BrokenRegistry", "receive_push")}`` and the same
+``journaled_paths``, the durability lint must produce:
+
+  * two **rename** findings — ``rename_without_fsync`` calls
+    ``os.replace`` with no preceding ``os.fsync`` and never fsyncs the
+    target's parent directory afterwards;
+  * a **commit-order** finding — ``BrokenRegistry.receive_push`` appends
+    the journal record before ``chunks.sync()``;
+  * a **journal-order** finding — it also mutates in-memory state
+    (``self.tags[tag] = …``) before the journal append.
+"""
+
+import os
+
+
+def rename_without_fsync(tmp, path):
+    with open(tmp, "wb") as f:
+        f.write(b"data")
+    os.replace(tmp, path)   # seeded defect: no fsync before, no dir fsync
+
+
+class BrokenRegistry:
+    def __init__(self, journal, chunks):
+        self.journal = journal
+        self.chunks = chunks
+        self.tags = {}
+
+    def receive_push(self, tag, record):
+        self.tags[tag] = record          # seeded defect: mutate pre-append
+        self.journal.append_raw(record)  # seeded defect: append pre-sync
+        self.chunks.sync()

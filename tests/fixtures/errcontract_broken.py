@@ -1,0 +1,37 @@
+"""Deliberately error-contract-violating module for
+``tools/analyze.py --self-test``.
+
+Never imported by product code.  The err-contract analyzer must produce:
+
+  * a **banned raise** finding — ``lookup_helper`` raises a bare
+    ``KeyError`` with no ``# raises-ok:`` pragma;
+  * an **api-boundary leak** finding — ``BrokenStore.fetch`` is marked
+    ``# api-boundary`` and calls ``lookup_helper`` without catching or
+    wrapping, so the ``KeyError`` escapes the public surface.
+
+``safe_fetch`` wraps the same helper in ``ValueError`` (taxonomy-typed)
+and must NOT be flagged.
+"""
+
+
+def lookup_helper(table, key):
+    if key not in table:
+        raise KeyError(key)   # seeded defect: bare banned raise, no pragma
+    return table[key]
+
+
+class BrokenStore:
+    def __init__(self):
+        self.table = {}
+
+    # api-boundary
+    def fetch(self, key):
+        # seeded defect: KeyError from lookup_helper escapes unwrapped
+        return lookup_helper(self.table, key)
+
+    # api-boundary
+    def safe_fetch(self, key):
+        try:
+            return lookup_helper(self.table, key)
+        except KeyError:
+            raise ValueError(f"unknown key {key!r}") from None

@@ -1,0 +1,23 @@
+"""Deliberately layer-violating module for ``tools/analyze.py --self-test``.
+
+Never imported by product code.  Analyzed standalone against the real
+layer map plus a seeded ``("layers_broken", "wire")`` allowlist entry, it
+must produce:
+
+  * an **upward import** finding — the module-level import of
+    ``repro.delivery.client`` (L4) from this seeded L2 module is not on
+    the allowlist;
+  * an **eager allowlisted edge** finding — the ``wire`` edge *is*
+    allowlisted, but the exception requires a lazy call-time import and
+    this one runs at module level.
+
+The lazy downward import in ``ok_lazy_use`` must NOT be flagged.
+"""
+
+from repro.delivery import client   # seeded defect: upward, not allowlisted
+from repro.delivery import wire     # seeded defect: allowlisted but eager
+
+
+def ok_lazy_use():
+    from repro.core import journal  # downward + lazy: always fine
+    return journal, client, wire

@@ -1,19 +1,26 @@
 """The static-analysis gate itself (`src/repro/analysis/`).
 
-Three properties, mirrored from `tools/analyze.py`:
+Three properties, mirrored from `tools/analyze.py` across all six
+analyzers (guarded-by, lock-order, wire-drift, layers, err-contract,
+durability):
 
   * the **grammar** works — each annotation form (`guarded-by`,
-    `external(...)`, `requires-lock`, `unguarded-ok`, the
-    ``GUARDED_FIELDS`` registry) does what `docs/CONCURRENCY.md` says;
-  * the **repo is clean** — running all three analyzers over the real
+    `external(...)`, `requires-lock`, `unguarded-ok`, `# api-boundary`,
+    `# raises-ok:`, `# durability-ok:`, the ``GUARDED_FIELDS`` registry
+    and ``LAYER_EXCEPTIONS`` allowlist) does what `docs/CONCURRENCY.md`
+    and `docs/CONTRACTS.md` say;
+  * the **repo is clean** — running all six analyzers over the real
     source trees yields zero findings, which is exactly what the `analyze`
-    CI job gates on;
+    CI job gates on — and stays load-bearing: deleting any declared layer
+    exception or any `raises-ok`/`durability-ok` pragma makes it fail;
   * the gate **provably bites** — the deliberately broken fixtures
-    (`tests/fixtures/analysis_broken.py`, `wire_spec_broken.md`) produce
-    the seeded findings, with `file:line` positions.
+    (`tests/fixtures/analysis_broken.py`, `wire_spec_broken.md`,
+    `layers_broken.py`, `errcontract_broken.py`, `durability_broken.py`)
+    produce the seeded findings, with `file:line` positions.
 """
 
 import glob
+import json
 import os
 import subprocess
 import sys
@@ -22,7 +29,8 @@ import threading
 
 import pytest
 
-from repro.analysis import guarded, lockorder, runtime, wiredrift
+from repro.analysis import (durability, errcontract, guarded, layers,
+                            lockorder, runtime, wiredrift)
 from repro.obs.metrics import MetricsRegistry
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -288,6 +296,254 @@ class TestWireDrift:
         assert wiredrift.check_sizing()[0] == []
 
 
+# ------------------------------------------------------------------- layers
+
+
+ARCH_DOC = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+
+
+class TestLayers:
+    def test_repo_import_graph_is_clean(self):
+        result = layers.analyze_paths(scan_paths(), doc=ARCH_DOC)
+        assert result.findings == []
+        assert result.stats["modules"] >= 20
+        assert result.stats["edges"] >= 50
+
+    def test_every_upward_edge_in_the_repo_is_lazy_and_allowlisted(self):
+        result = layers.analyze_paths(scan_paths(), doc=ARCH_DOC)
+        upward = [(s, d, lazy) for s, d, lazy, _, _ in result.edges
+                  if result.assignments.get(d, 0)
+                  > result.assignments.get(s, 9)]
+        assert upward, "expected the declared upward edges to exist"
+        for src, dst, lazy in upward:
+            assert (src, dst) in layers.LAYER_EXCEPTIONS
+            assert lazy, f"{src} -> {dst} must be a call-time import"
+
+    def test_doc_table_covers_every_scanned_module(self):
+        with open(ARCH_DOC, encoding="utf-8") as f:
+            assignments = layers.parse_layer_doc(f.read())
+        for path in scan_paths():
+            stem = os.path.splitext(os.path.basename(path))[0]
+            if stem == "__init__" or f"{os.sep}obs{os.sep}" in path:
+                continue
+            assert stem in assignments, f"{stem} missing from layer table"
+
+    def test_broken_fixture_findings_carry_file_and_line(self):
+        fixture = os.path.join(FIXTURES, "layers_broken.py")
+        with open(ARCH_DOC, encoding="utf-8") as f:
+            assignments = layers.parse_layer_doc(f.read())
+        assignments["layers_broken"] = 2
+        exceptions = dict(layers.LAYER_EXCEPTIONS)
+        exceptions[("layers_broken", "wire")] = "seeded"
+        result = layers.analyze_paths([fixture], assignments=assignments,
+                                      exceptions=exceptions)
+        by_line = {f.line: f.message for f in result.findings}
+        assert "upward import" in by_line[17]
+        assert "module level" in by_line[18]
+        for f in result.findings:
+            assert str(f).startswith(f"{fixture}:{f.line}:")
+
+    def test_deleting_any_declared_exception_fails_the_gate(self):
+        """Each LAYER_EXCEPTIONS entry is load-bearing: removing it turns
+        the matching (real, existing) upward edge into a finding."""
+        for removed in layers.LAYER_EXCEPTIONS:
+            pruned = {k: v for k, v in layers.LAYER_EXCEPTIONS.items()
+                      if k != removed}
+            result = layers.analyze_paths(scan_paths(), doc=ARCH_DOC,
+                                          exceptions=pruned)
+            src, dst = removed
+            assert any("upward import" in f.message
+                       and f"'{src}'" in f.message and f"'{dst}'" in f.message
+                       for f in result.findings), \
+                f"removing {removed} produced no finding"
+
+    def test_module_without_a_declared_layer_is_flagged(self, tmp_path):
+        p = tmp_path / "newmod.py"
+        p.write_text("import os\n")
+        result = layers.analyze_paths([str(p)], doc=ARCH_DOC)
+        assert any("no declared layer" in f.message
+                   for f in result.findings)
+
+    def test_markdown_is_deterministic_and_tabular(self):
+        r1 = layers.analyze_paths(scan_paths(), doc=ARCH_DOC)
+        r2 = layers.analyze_paths(scan_paths(), doc=ARCH_DOC)
+        md = layers.layers_markdown(r1)
+        assert md == layers.layers_markdown(r2)
+        assert "| layer | modules |" in md
+        assert "`registry`" in md
+
+
+# ------------------------------------------------------------- err-contract
+
+
+class TestErrContract:
+    def test_repo_boundaries_are_clean(self):
+        findings, stats = errcontract.analyze_files(scan_paths())
+        assert findings == []
+        assert stats["boundaries"] >= 60
+        assert stats["raise_sites"] >= 100
+
+    def test_broken_fixture_findings_carry_file_and_line(self):
+        fixture = os.path.join(FIXTURES, "errcontract_broken.py")
+        findings, _ = errcontract.analyze_files([fixture])
+        by_line = {f.line: f.message for f in findings}
+        assert "raise of banned type KeyError" in by_line[19]
+        assert "can leak KeyError" in by_line[28]
+        assert "errcontract_broken.py:19" in by_line[28]  # cites the origin
+        assert not any("safe_fetch" in m for m in by_line.values())
+
+    def test_deleting_the_store_pragma_fails_the_gate(self):
+        """`ChunkStore.get`'s raises-ok pragma is load-bearing."""
+        path = next(p for p in scan_paths() if p.endswith("core/store.py"))
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        assert "# raises-ok:" in source
+        stripped = "\n".join(
+            line.split("# raises-ok:")[0].rstrip()
+            for line in source.splitlines())
+        findings, _ = errcontract.analyze_files(
+            scan_paths(), overrides={path: stripped})
+        assert any(f.path == path
+                   and "raise of banned type KeyError" in f.message
+                   for f in findings)
+
+    def test_deleting_the_net_pragma_fails_the_gate(self):
+        """The bare OSError re-raise in the socket server's `_answer` is
+        allowed only because it carries a reasoned pragma."""
+        path = next(p for p in scan_paths() if p.endswith("delivery/net.py"))
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        stripped = "\n".join(
+            line.split("# raises-ok:")[0].rstrip()
+            for line in source.splitlines())
+        findings, _ = errcontract.analyze_files(
+            scan_paths(), overrides={path: stripped})
+        assert any(f.path == path and "OSError" in f.message
+                   for f in findings)
+
+    def test_boundary_leak_through_a_call_chain_is_detected(self):
+        findings, _ = errcontract.analyze_files(["api.py"], overrides={
+            "api.py": textwrap.dedent("""\
+                def helper(d, k):
+                    return d[k] if k in d else _boom(k)
+
+                def _boom(k):
+                    raise OSError(f"no {k}")
+
+                class Api:
+                    # api-boundary
+                    def read(self, d, k):
+                        return helper(d, k)
+                """)})
+        assert any("'Api.read' can leak OSError" in f.message
+                   for f in findings)
+
+    def test_taxonomy_wrapping_satisfies_the_boundary(self):
+        findings, _ = errcontract.analyze_files(["api.py"], overrides={
+            "api.py": textwrap.dedent("""\
+                def _boom(k):
+                    raise KeyError(k)  # raises-ok: wrapped by every caller
+
+                class Api:
+                    # api-boundary
+                    def read(self, d, k):
+                        try:
+                            return _boom(k)
+                        except KeyError:
+                            raise ValueError(f"unknown {k}") from None
+                """)})
+        assert findings == []
+
+    def test_pragma_on_a_raise_keeps_the_escape_summary(self):
+        """raises-ok silences the local site but the type still escapes —
+        an unwrapped boundary caller is still flagged."""
+        findings, _ = errcontract.analyze_files(["api.py"], overrides={
+            "api.py": textwrap.dedent("""\
+                def _boom(k):
+                    raise KeyError(k)  # raises-ok: callers must wrap
+
+                class Api:
+                    # api-boundary
+                    def read(self, d, k):
+                        return _boom(k)
+                """)})
+        assert len(findings) == 1
+        assert "'Api.read' can leak KeyError" in findings[0].message
+
+
+# --------------------------------------------------------------- durability
+
+
+class TestDurability:
+    def test_repo_commit_paths_are_clean(self):
+        findings, stats = durability.check_files(scan_paths())
+        assert findings == []
+        assert stats["replace_sites"] >= 5
+        assert stats["commit_paths"] == 2
+        assert stats["journaled_paths"] == 3
+
+    def test_broken_fixture_findings_carry_file_and_line(self):
+        fixture = os.path.join(FIXTURES, "durability_broken.py")
+        paths = {("BrokenRegistry", "receive_push")}
+        findings = durability.check_file(fixture, commit_paths=paths,
+                                         journaled_paths=paths)
+        messages = {(f.line, f.message) for f in findings}
+        lines = sorted(ln for ln, _ in messages)
+        assert lines == [22, 22, 32, 33]
+        assert any(ln == 22 and "preceding os.fsync" in m
+                   for ln, m in messages)
+        assert any(ln == 22 and "never fsynced afterwards" in m
+                   for ln, m in messages)
+        assert any(ln == 32 and "mutates in-memory state" in m
+                   for ln, m in messages)
+        assert any(ln == 33 and "before chunks.sync()" in m
+                   for ln, m in messages)
+
+    def test_deleting_the_store_pragma_fails_the_gate(self):
+        """`_finish_compaction`'s durability-ok pragma is load-bearing."""
+        path = next(p for p in scan_paths() if p.endswith("core/store.py"))
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        assert "# durability-ok:" in source
+        stripped = "\n".join(
+            line.split("# durability-ok:")[0].rstrip()
+            for line in source.splitlines())
+        findings = durability.check_file(path, source=stripped)
+        assert any("preceding os.fsync" in f.message for f in findings)
+
+    def test_correct_rename_discipline_is_clean(self):
+        findings = durability.check_file("mod.py", source=textwrap.dedent("""\
+            import os
+
+            def atomic_write(tmp, path, fsync_dir):
+                with open(tmp, "wb") as f:
+                    f.write(b"x")
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+                fsync_dir(os.path.dirname(path))
+            """))
+        assert findings == []
+
+    def test_rename_without_fsync_is_flagged(self):
+        findings = durability.check_file("mod.py", source=textwrap.dedent("""\
+            import os
+
+            def sloppy(tmp, path):
+                os.replace(tmp, path)
+            """))
+        assert len(findings) == 2
+
+    def test_durability_ok_pragma_silences_a_site(self):
+        findings = durability.check_file("mod.py", source=textwrap.dedent("""\
+            import os
+
+            def recovery(tmp, path):
+                os.replace(tmp, path)  # durability-ok: inputs were fsynced
+            """))
+        assert findings == []
+
+
 # --------------------------------------------------------- repo-wide clean
 
 
@@ -323,6 +579,62 @@ class TestRepoClean:
             env={**os.environ,
                  "PYTHONPATH": os.path.join(ROOT, "src")})
         assert proc.returncode == 0, proc.stdout + proc.stderr
+        # one "caught:" line per analyzer family at minimum
+        for token in ("guarded-by", "lock-order", "wire-drift", "layers",
+                      "err-contract", "durability"):
+            assert f"[{token}]" in proc.stdout, token
+
+
+# -------------------------------------------------------------- CLI formats
+
+
+def _load_cli():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "analyze_cli", os.path.join(ROOT, "tools", "analyze.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestCliFormats:
+    def test_json_format_on_the_clean_repo(self):
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tools", "analyze.py"),
+             "--strict", "--format", "json"],
+            capture_output=True, text=True,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(ROOT, "src")})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        out = json.loads(proc.stdout)
+        assert out["clean"] is True
+        assert out["findings"] == []
+        assert set(out["stats"]) == {"guarded_by", "lock_order",
+                                     "wire_drift", "layers",
+                                     "err_contract", "durability"}
+        assert out["stats"]["err_contract"]["boundaries"] >= 60
+
+    def test_github_format_emits_error_annotations(self, monkeypatch,
+                                                   capsys):
+        mod = _load_cli()
+        _, stats, lo, ly = mod.run_analyzers(False)
+        from repro.analysis.report import Finding
+        seeded = [Finding("layers", "src/repro/core/x.py", 7, "boom, twice")]
+        monkeypatch.setattr(mod, "run_analyzers",
+                            lambda strict: (seeded, stats, lo, ly))
+        rc = mod.main(["--format", "github"])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert ("::error file=src/repro/core/x.py,line=7,"
+                "title=layers::boom, twice") in out
+
+    def test_github_format_is_quiet_when_clean(self, capsys):
+        mod = _load_cli()
+        rc = mod.main(["--format", "github"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "::error" not in out
+        assert "analysis clean" in out
 
 
 # ---------------------------------------------------------------- DebugLock

@@ -1,0 +1,99 @@
+"""Regression tests for the error-taxonomy contract the err-contract
+analyzer enforces (`docs/CONTRACTS.md`): every public surface raises the
+typed taxonomy (`DeliveryError` / `PushRejected` / `WireError` /
+`JournalError` / `ValueError`), never a bare `KeyError` / `OSError`.
+
+Each test here pins one escape path the analyzer found (and this PR
+fixed), asserting both the exception *type* and a *message* a caller can
+act on.  The analyzer proves no such path exists statically; these tests
+prove the replacement behavior dynamically.
+"""
+
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core.cdmt import CDMTParams
+from repro.core.errors import DeliveryError
+from repro.core.registry import Registry
+from repro.core.store import DedupStore
+from repro.delivery import ImageClient, LocalTransport
+from repro.delivery.net import SocketTransport
+
+P = CDMTParams(window=4, rule_bits=2)
+
+
+class TestRestorePaths:
+    """`DedupStore.restore`/`restore_into` used to leak KeyError for an
+    unknown recipe name and for a chunk dropped by GC."""
+
+    def test_unknown_recipe_raises_delivery_error(self):
+        store = DedupStore()
+        with pytest.raises(DeliveryError, match="unknown recipe 'app:v9'"):
+            store.restore("app:v9")
+
+    def test_unknown_recipe_restore_into_raises_delivery_error(self):
+        store = DedupStore()
+        out = np.zeros(16, dtype=np.uint8)
+        with pytest.raises(DeliveryError, match="unknown recipe"):
+            store.restore_into("app:v9", out)
+
+    def test_swept_chunk_raises_delivery_error_naming_the_chunk(self):
+        store = DedupStore()
+        store.ingest("app:v1", b"payload" * 4096)
+        store.chunks.compact(live=set())        # GC drops every chunk
+        with pytest.raises(DeliveryError,
+                           match="restore app:v1: chunk .* is missing"):
+            store.restore("app:v1")
+
+    def test_swept_chunk_restore_into_raises_delivery_error(self):
+        store = DedupStore()
+        recipe = store.ingest("app:v1", b"payload" * 4096)
+        store.chunks.compact(live=set())
+        out = np.zeros(recipe.total_size, dtype=np.uint8)
+        with pytest.raises(DeliveryError, match="is missing from the store"):
+            store.restore_into("app:v1", out)
+
+
+class TestClientPaths:
+    """`ImageClient.index_for_tag` / `push` used to leak KeyError for a
+    tag that was never committed or pulled locally."""
+
+    def test_index_for_tag_unknown_raises_delivery_error(self):
+        client = ImageClient(None, cdmt_params=P)
+        with pytest.raises(DeliveryError,
+                           match="'app:v9' has never been committed"):
+            client.index_for_tag("app", "v9")
+
+    def test_push_of_uncommitted_version_raises_delivery_error(self):
+        client = ImageClient(LocalTransport(Registry(cdmt_params=P)),
+                             cdmt_params=P)
+        with pytest.raises(DeliveryError,
+                           match=r"push app:v9: version was never committed"):
+            client.push("app", "v9")
+
+    def test_materialize_unknown_raises_delivery_error(self):
+        client = ImageClient(None, cdmt_params=P)
+        with pytest.raises(DeliveryError, match="unknown recipe"):
+            client.materialize("app", "v9")
+
+
+class TestTransportPaths:
+    def test_local_fetch_of_unknown_chunk_raises_delivery_error(self):
+        """`ChunkStore.get`'s KeyError must not reach the transport: the
+        registry wraps it naming the fingerprint."""
+        transport = LocalTransport(Registry(cdmt_params=P))
+        with pytest.raises(DeliveryError,
+                           match="cannot serve unknown chunk"):
+            transport.fetch_chunks("app", "v1", [b"\x00" * 16])
+
+    def test_socket_transport_dead_endpoint_raises_delivery_error(self):
+        """Connection refusal surfaces as DeliveryError naming the
+        endpoint, not a raw OSError from the socket layer."""
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+        probe.close()                          # nothing listens here now
+        with pytest.raises(DeliveryError, match="cannot connect"):
+            SocketTransport(("127.0.0.1", port)).tags("app")

@@ -1,37 +1,45 @@
 #!/usr/bin/env python
-"""Repo-specific static analysis gate: guarded-by lint, lock-order
-analyzer, wire-spec drift checker.
+"""Repo-specific static analysis gate — six analyzers over the delivery
+stack: guarded-by lint, lock-order analyzer, wire-spec drift checker,
+layer-import analyzer, error-taxonomy (err-contract) analyzer, and the
+crash-ordering (durability) lint.
 
 Usage:
-    PYTHONPATH=src python tools/analyze.py              # report findings
-    PYTHONPATH=src python tools/analyze.py --strict     # + doc-sync check
-    PYTHONPATH=src python tools/analyze.py --write-docs # regen CONCURRENCY.md
-    PYTHONPATH=src python tools/analyze.py --self-test  # prove the gate bites
+    PYTHONPATH=src python tools/analyze.py                # report findings
+    PYTHONPATH=src python tools/analyze.py --strict       # + doc-sync check
+    PYTHONPATH=src python tools/analyze.py --write-docs   # regen generated
+                                                          #   doc sections
+    PYTHONPATH=src python tools/analyze.py --self-test    # prove the gate
+                                                          #   bites
+    PYTHONPATH=src python tools/analyze.py --format github  # CI annotations
+    PYTHONPATH=src python tools/analyze.py --format json    # machine output
 
 Exit status: 0 when clean, 1 when any analyzer reports a finding (or the
-self-test fails to catch the seeded broken fixtures).  Findings print as
-``path:line: [analyzer] message`` so terminals and CI annotations link
-straight to the site.
+self-test fails to catch the seeded broken fixtures).  The default text
+format prints ``path:line: [analyzer] message`` so terminals link straight
+to the site; ``--format github`` emits ``::error`` workflow annotations;
+``--format json`` prints one JSON object with findings and per-analyzer
+stats.
 """
 
 from __future__ import annotations
 
 import argparse
 import glob
+import json
 import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
-from repro.analysis import guarded, lockorder, wiredrift  # noqa: E402
+from repro.analysis import (durability, errcontract, guarded,  # noqa: E402
+                            layers, lockorder, wiredrift)
 from repro.analysis.report import Finding  # noqa: E402
 
 WIRE_DOC = "docs/WIRE_PROTOCOL.md"
 CONCURRENCY_DOC = "docs/CONCURRENCY.md"
-GEN_BEGIN = ("<!-- BEGIN GENERATED: lock-hierarchy "
-             "(tools/analyze.py --write-docs) -->")
-GEN_END = "<!-- END GENERATED: lock-hierarchy -->"
+ARCH_DOC = "docs/ARCHITECTURE.md"
 
 
 def scan_paths() -> list:
@@ -42,60 +50,100 @@ def scan_paths() -> list:
     return sorted(paths)
 
 
-def generated_section(result) -> str:
-    return (GEN_BEGIN + "\n\n" + lockorder.hierarchy_markdown(result)
-            + "\n" + GEN_END)
+# ---------------------------------------------------- generated doc sections
+
+def _markers(section: str):
+    return (f"<!-- BEGIN GENERATED: {section} "
+            f"(tools/analyze.py --write-docs) -->",
+            f"<!-- END GENERATED: {section} -->")
 
 
-def check_doc_sync(result) -> list:
-    """The generated lock-hierarchy section of CONCURRENCY.md must match
-    what the analyzer derives from the code right now."""
-    if not os.path.exists(CONCURRENCY_DOC):
-        return [Finding("lock-order", CONCURRENCY_DOC, 1,
-                        "missing — run tools/analyze.py --write-docs")]
-    with open(CONCURRENCY_DOC, "r", encoding="utf-8") as f:
-        text = f.read()
-    begin, end = text.find(GEN_BEGIN), text.find(GEN_END)
-    if begin < 0 or end < 0:
-        return [Finding("lock-order", CONCURRENCY_DOC, 1,
-                        "generated lock-hierarchy markers missing — run "
-                        "tools/analyze.py --write-docs")]
-    current = text[begin:end + len(GEN_END)]
-    if current.strip() != generated_section(result).strip():
-        line = text[:begin].count("\n") + 1
-        return [Finding("lock-order", CONCURRENCY_DOC, line,
-                        "generated lock-hierarchy section is stale — run "
-                        "tools/analyze.py --write-docs and commit")]
-    return []
+def _sections(lo, ly) -> list:
+    """(analyzer, doc, section name, generated body) for every generated
+    doc section the gate owns."""
+    return [
+        ("lock-order", CONCURRENCY_DOC, "lock-hierarchy",
+         lockorder.hierarchy_markdown(lo)),
+        ("layers", ARCH_DOC, "layer-map", layers.layers_markdown(ly)),
+    ]
 
 
-def write_docs(result) -> None:
-    with open(CONCURRENCY_DOC, "r", encoding="utf-8") as f:
-        text = f.read()
-    begin, end = text.find(GEN_BEGIN), text.find(GEN_END)
-    if begin < 0 or end < 0:
-        raise SystemExit(f"{CONCURRENCY_DOC}: generated-section markers "
-                         f"not found")
-    new = text[:begin] + generated_section(result) + text[end + len(GEN_END):]
-    with open(CONCURRENCY_DOC, "w", encoding="utf-8") as f:
-        f.write(new)
-    print(f"{CONCURRENCY_DOC}: lock-hierarchy section regenerated")
+def _render(section: str, body: str) -> str:
+    begin, end = _markers(section)
+    return begin + "\n\n" + body + "\n" + end
 
+
+def check_doc_sync(lo, ly) -> list:
+    """Every generated doc section must match what its analyzer derives
+    from the code right now."""
+    findings = []
+    for analyzer, doc, section, body in _sections(lo, ly):
+        if not os.path.exists(doc):
+            findings.append(Finding(
+                analyzer, doc, 1,
+                "missing — run tools/analyze.py --write-docs"))
+            continue
+        with open(doc, "r", encoding="utf-8") as f:
+            text = f.read()
+        mb, me = _markers(section)
+        begin, end = text.find(mb), text.find(me)
+        if begin < 0 or end < 0:
+            findings.append(Finding(
+                analyzer, doc, 1,
+                f"generated {section} markers missing — run "
+                f"tools/analyze.py --write-docs"))
+            continue
+        current = text[begin:end + len(me)]
+        if current.strip() != _render(section, body).strip():
+            line = text[:begin].count("\n") + 1
+            findings.append(Finding(
+                analyzer, doc, line,
+                f"generated {section} section is stale — run "
+                f"tools/analyze.py --write-docs and commit"))
+    return findings
+
+
+def write_docs(lo, ly) -> None:
+    for analyzer, doc, section, body in _sections(lo, ly):
+        with open(doc, "r", encoding="utf-8") as f:
+            text = f.read()
+        mb, me = _markers(section)
+        begin, end = text.find(mb), text.find(me)
+        if begin < 0 or end < 0:
+            raise SystemExit(f"{doc}: {section} generated-section markers "
+                             f"not found")
+        new = text[:begin] + _render(section, body) + text[end + len(me):]
+        with open(doc, "w", encoding="utf-8") as f:
+            f.write(new)
+        print(f"{doc}: {section} section regenerated")
+
+
+# ---------------------------------------------------------------- analyzers
 
 def run_analyzers(strict: bool):
     paths = scan_paths()
     g_findings, g_stats = guarded.check_files(paths)
     lo = lockorder.analyze_files(paths)
     w_findings, w_stats = wiredrift.check_all(WIRE_DOC)
-    findings = list(g_findings) + list(lo.findings) + list(w_findings)
+    ly = layers.analyze_paths(paths)
+    e_findings, e_stats = errcontract.analyze_files(paths)
+    d_findings, d_stats = durability.check_files(paths)
+    findings = (list(g_findings) + list(lo.findings) + list(w_findings)
+                + list(ly.findings) + list(e_findings) + list(d_findings))
     if strict:
-        findings.extend(check_doc_sync(lo))
-    return findings, lo, g_stats, lo.stats, w_stats
+        findings.extend(check_doc_sync(lo, ly))
+    stats = {"guarded_by": g_stats, "lock_order": lo.stats,
+             "wire_drift": w_stats, "layers": ly.stats,
+             "err_contract": e_stats, "durability": d_stats}
+    return findings, stats, lo, ly
 
+
+# ---------------------------------------------------------------- self-test
 
 def self_test() -> int:
-    """The gate must bite: the seeded broken fixtures must be caught."""
+    """The gate must bite: every seeded broken fixture must be caught."""
     failures = []
+    caught = []
 
     fixture = "tests/fixtures/analysis_broken.py"
     g_findings = guarded.check_file(fixture)
@@ -106,6 +154,7 @@ def self_test() -> int:
     if not any("cycle" in f.message for f in lo.findings):
         failures.append(f"lock-order analyzer missed the inversion cycle "
                         f"in {fixture}")
+    caught += list(g_findings) + list(lo.findings)
 
     doc = "tests/fixtures/wire_spec_broken.md"
     w_findings, _ = wiredrift.check_doc(doc)
@@ -119,8 +168,58 @@ def self_test() -> int:
     if "but the enum member is" not in messages:
         failures.append(f"wire-drift checker missed the misnamed op row "
                         f"in {doc}")
+    caught += list(w_findings)
 
-    for f in g_findings + lo.findings + w_findings:
+    fixture = "tests/fixtures/layers_broken.py"
+    assignments = layers._load_doc_assignments(ARCH_DOC)
+    assignments["layers_broken"] = 2
+    exceptions = dict(layers.LAYER_EXCEPTIONS)
+    exceptions[("layers_broken", "wire")] = "seeded self-test allowlisting"
+    ly = layers.analyze_paths([fixture], assignments=assignments,
+                              exceptions=exceptions)
+    if not any("upward import" in f.message for f in ly.findings):
+        failures.append(f"layer analyzer missed the module-level upward "
+                        f"import in {fixture}")
+    if not any("module level" in f.message for f in ly.findings):
+        failures.append(f"layer analyzer missed the eager allowlisted "
+                        f"edge in {fixture}")
+    caught += list(ly.findings)
+
+    fixture = "tests/fixtures/errcontract_broken.py"
+    e_findings, _ = errcontract.analyze_files([fixture])
+    messages = "\n".join(f.message for f in e_findings)
+    if "raise of banned type KeyError" not in messages:
+        failures.append(f"err-contract analyzer missed the bare KeyError "
+                        f"raise in {fixture}")
+    if "api-boundary method 'BrokenStore.fetch' can leak KeyError" \
+            not in messages:
+        failures.append(f"err-contract analyzer missed the KeyError leak "
+                        f"through BrokenStore.fetch in {fixture}")
+    if "safe_fetch" in messages:
+        failures.append(f"err-contract analyzer flagged the taxonomy-"
+                        f"wrapped safe_fetch in {fixture}")
+    caught += list(e_findings)
+
+    fixture = "tests/fixtures/durability_broken.py"
+    broken_paths = {("BrokenRegistry", "receive_push")}
+    d_findings = durability.check_file(fixture, commit_paths=broken_paths,
+                                       journaled_paths=broken_paths)
+    messages = "\n".join(f.message for f in d_findings)
+    if "without a preceding os.fsync" not in messages:
+        failures.append(f"durability lint missed the rename-without-fsync "
+                        f"in {fixture}")
+    if "never fsynced afterwards" not in messages:
+        failures.append(f"durability lint missed the missing directory "
+                        f"fsync in {fixture}")
+    if "before chunks.sync()" not in messages:
+        failures.append(f"durability lint missed the record-before-chunks "
+                        f"commit in {fixture}")
+    if "mutates in-memory state" not in messages:
+        failures.append(f"durability lint missed the mutate-before-append "
+                        f"in {fixture}")
+    caught += list(d_findings)
+
+    for f in caught:
         print(f"  caught: {f}")
     if failures:
         for msg in failures:
@@ -130,40 +229,80 @@ def self_test() -> int:
     return 0
 
 
+# --------------------------------------------------------------------- main
+
+def print_stats(stats) -> None:
+    g, lo = stats["guarded_by"], stats["lock_order"]
+    w, ly = stats["wire_drift"], stats["layers"]
+    e, d = stats["err_contract"], stats["durability"]
+    print(f"guarded-by: {g['files']} files, {g['classes']} classes, "
+          f"{g['guarded_fields']} guarded + "
+          f"{g['external_fields']} external fields, "
+          f"{g['accesses_checked']} accesses checked")
+    print(f"lock-order: {lo['locks']} locks, "
+          f"{lo['edges']} acquisition edges")
+    print(f"wire-drift: {w['enum_members']} enum members vs "
+          f"{w['doc_rows']} doc rows, {w['round_trips']} frame "
+          f"round-trips, {w['sizing_checks']} sizing identities")
+    print(f"layers: {ly['modules']} modules, {ly['edges']} import edges "
+          f"({ly['lazy_edges']} lazy, {ly['upward_edges']} upward, "
+          f"{ly['exceptions']} allowlisted)")
+    print(f"err-contract: {e['boundaries']} api boundaries, "
+          f"{e['raise_sites']} raise sites, "
+          f"{e['calls_resolved']} calls resolved, "
+          f"{e['pragmas']} pragmas")
+    print(f"durability: {d['replace_sites']} rename sites, "
+          f"{d['commit_paths']} commit paths, "
+          f"{d['journaled_paths']} journaled paths, "
+          f"{d['pragmas']} pragmas")
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--strict", action="store_true",
-                        help="also fail when docs/CONCURRENCY.md's "
-                             "generated section is stale")
+                        help="also fail when a generated doc section "
+                             "(CONCURRENCY.md lock hierarchy, "
+                             "ARCHITECTURE.md layer map) is stale")
     parser.add_argument("--write-docs", action="store_true",
-                        help="regenerate the lock-hierarchy section of "
-                             "docs/CONCURRENCY.md")
+                        help="regenerate the generated sections of "
+                             "docs/CONCURRENCY.md and docs/ARCHITECTURE.md")
     parser.add_argument("--self-test", action="store_true",
                         help="verify the analyzers catch the seeded "
                              "broken fixtures")
+    parser.add_argument("--format", choices=("text", "github", "json"),
+                        default="text",
+                        help="finding output format: terminal text, "
+                             "GitHub workflow annotations, or one JSON "
+                             "object")
     args = parser.parse_args(argv)
     os.chdir(ROOT)
 
     if args.self_test:
         return self_test()
 
-    findings, lo, g_stats, lo_stats, w_stats = run_analyzers(args.strict)
+    findings, stats, lo, ly = run_analyzers(args.strict)
     if args.write_docs:
-        write_docs(lo)
-        findings = [f for f in findings if f.path != CONCURRENCY_DOC]
+        write_docs(lo, ly)
+        regenerated = {CONCURRENCY_DOC, ARCH_DOC}
+        findings = [f for f in findings if f.path not in regenerated]
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [{"analyzer": f.analyzer, "path": f.path,
+                          "line": f.line, "message": f.message}
+                         for f in findings],
+            "stats": stats,
+            "clean": not findings,
+        }, indent=2, sort_keys=True))
+        return 1 if findings else 0
+
     for f in findings:
-        print(f)
-    print(f"guarded-by: {g_stats['files']} files, "
-          f"{g_stats['classes']} classes, "
-          f"{g_stats['guarded_fields']} guarded + "
-          f"{g_stats['external_fields']} external fields, "
-          f"{g_stats['accesses_checked']} accesses checked")
-    print(f"lock-order: {lo_stats['locks']} locks, "
-          f"{lo_stats['edges']} acquisition edges")
-    print(f"wire-drift: {w_stats['enum_members']} enum members vs "
-          f"{w_stats['doc_rows']} doc rows, "
-          f"{w_stats['round_trips']} frame round-trips, "
-          f"{w_stats['sizing_checks']} sizing identities")
+        if args.format == "github":
+            print(f"::error file={f.path},line={f.line},"
+                  f"title={f.analyzer}::{f.message}")
+        else:
+            print(f)
+    print_stats(stats)
     if findings:
         print(f"{len(findings)} finding(s)", file=sys.stderr)
         return 1
