@@ -26,6 +26,8 @@ ALL = {
     "delivery_socket": bench_delivery_scale.run_socket,
     "delivery_replicated": bench_delivery_scale.run_replicated,
     "delivery_obs": bench_delivery_scale.run_obs,
+    "delivery_async": bench_delivery_scale.run_async,
+    "delivery_async_smoke": bench_delivery_scale.run_async_smoke,
     "cdmt_ablation": bench_cdmt_ablation.run,
     "checkpoint_delivery": bench_checkpoint_delivery.run,
     "push_incremental": bench_push_incremental.run,

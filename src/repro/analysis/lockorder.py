@@ -44,6 +44,10 @@ LOCK_RANKS: Dict[str, int] = {
     "RegistryServer._inflight_lock": 20,
     "SocketRegistryServer._conns_lock": 20,
     "SocketTransport._pool_lock": 20,
+    "AsyncRegistryServer._lifecycle_lock": 20,
+    "MuxSocketTransport._lock": 20,
+    "_MuxConn._lock": 24,
+    "_MuxConn._send_lock": 25,
     "JournalFollower._lifecycle_lock": 20,
     "SwarmTracker._lock": 20,
     "SwarmNode._lock": 22,

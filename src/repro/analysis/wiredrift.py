@@ -249,6 +249,7 @@ def check_doc(doc_path: str, doc_text: Optional[str] = None
                     f"documented {enum_name} row {value} `{name}` has no "
                     f"matching enum member in repro.delivery.wire"))
     for magic in (wire.MAGIC, wire.REQUEST_MAGIC, wire.RESPONSE_MAGIC,
+                  wire.MUX_REQUEST_MAGIC, wire.MUX_RESPONSE_MAGIC,
                   wire.RECORD_MAGIC):
         token = f'`"{magic.decode()}"`'
         if token not in doc_text and f'"{magic.decode()}"' not in doc_text:
@@ -347,6 +348,23 @@ def check_sizing() -> Tuple[List[Finding], Dict[str, int]]:
     expect(wire.response_envelope_bytes(
                [len(f) for f in resp_frames]) == len(resp),
            wire.response_envelope_bytes, "response_envelope_bytes(...)")
+
+    # mux envelopes: identities must hold for any stream id (the id is
+    # fixed-width by design — that is what keeps plan quotes exact)
+    for sid in (0, 7, wire.MAX_STREAM_ID):
+        mreq = wire.encode_mux_request(wire.Op.WANT, sid, "lin", "v1", body)
+        expect(wire.mux_request_envelope_bytes(
+                   "lin", "v1", [len(f) for f in body]) == len(mreq),
+               wire.mux_request_envelope_bytes,
+               f"mux_request_envelope_bytes(..., stream_id={sid})")
+        measured = len(wire.encode_mux_response_header(
+            sid, wire.STATUS_OK, len(resp_frames)))
+        measured += sum(len(wire.encode_mux_response_frame(sid, f))
+                        for f in resp_frames)
+        expect(wire.mux_response_envelope_bytes(
+                   [len(f) for f in resp_frames]) == measured,
+               wire.mux_response_envelope_bytes,
+               f"mux_response_envelope_bytes(..., stream_id={sid})")
 
     return findings, {"sizing_checks": checks}
 

@@ -23,6 +23,11 @@ them into a delivery *system* whose byte counts are real:
     (threaded acceptor, enveloped requests, streamed WANT responses, ERROR
     frames) and ``SocketTransport`` (pooled connections, byte-exact socket
     accounting) — the row where reported bytes actually crossed a wire;
+  * :mod:`repro.delivery.aio`       — the async data plane:
+    ``AsyncRegistryServer`` (event-loop acceptor, O(cores) worker threads,
+    multiplexed streams, backpressure, BUSY load-shedding) and
+    ``MuxSocketTransport`` (many concurrent pulls over a few shared
+    connections, same byte-exact accounting);
   * :mod:`repro.delivery.delta`     — ``DeltaSession`` compatibility shim
     (pipelined wire sessions);
   * :mod:`repro.delivery.swarm`     — EdgePier-style peer mode: provisioned
@@ -34,6 +39,8 @@ live server's full snapshot is scrapeable over the socket protocol via
 ``Op.METRICS`` (``SocketTransport.scrape_metrics``).
 """
 
+from .aio import (AsyncRegistryServer, AsyncServerStats, MuxSocketTransport,
+                  serve_registry_async)
 from .cache import CacheStats, TieredChunkCache
 from .client import ImageClient
 from .delta import DeliveryError, DeliveryStats, DeltaSession
@@ -66,6 +73,8 @@ __all__ = [
     "RegistryServer", "ServerStats",
     "JournalFollower", "SocketRegistryServer", "SocketServerStats",
     "SocketTransport", "serve_registry",
+    "AsyncRegistryServer", "AsyncServerStats", "MuxSocketTransport",
+    "serve_registry_async",
     "SwarmNode", "SwarmStats", "SwarmTracker", "swarm_pull",
     "Transport", "LocalTransport", "WireTransport", "SwarmTransport",
     "ReplicatedTransport", "FetchResult", "PushOutcome", "TransportMeter",

@@ -94,6 +94,13 @@ class _ConnectionClosed(Exception):
     """The peer closed (or the stream truncated) mid-exchange."""
 
 
+class _StaleConn(Exception):
+    """A *reused* pooled connection died before the server answered — the
+    classic keep-alive race (the server idle-reaped or restarted while the
+    connection sat in the pool).  Nothing was answered, so the exchange is
+    safe to redial and retry once instead of surfacing ``DeliveryError``."""
+
+
 def _read_exact(f: BinaryIO, n: int) -> bytes:
     data = f.read(n)
     if data is None or len(data) < n:
@@ -169,13 +176,18 @@ class SocketRegistryServer:
 
     def __init__(self, server: RegistryServer, host: str = "127.0.0.1",
                  port: int = 0, backlog: int = 64,
-                 io_timeout: float = DEFAULT_TIMEOUT):
+                 io_timeout: float = DEFAULT_TIMEOUT,
+                 idle_timeout: Optional[float] = None):
         self.server = server
-        # mid-request read budget: a connection may idle indefinitely
-        # *between* requests (pooled client conns do), but once a request
-        # header byte arrives the rest must follow within this window, so a
-        # stalled or hostile client cannot pin a connection thread forever
+        # mid-request read budget: once a request header byte arrives the
+        # rest must follow within this window, so a stalled or hostile
+        # client cannot pin a connection thread forever
         self.io_timeout = io_timeout
+        # idle-between-requests budget: None preserves the historical
+        # unbounded window; a number reaps connections that sit quiet that
+        # long between requests (pooled clients redial transparently — see
+        # SocketTransport's stale-connection retry)
+        self.idle_timeout = idle_timeout
         # socket_* series land in the wrapped server's registry, so one
         # Op.METRICS scrape covers envelope accounting, frame-level server
         # meters, cache behavior, and replication state together
@@ -196,6 +208,9 @@ class SocketRegistryServer:
         self._m_egress = m.counter(
             "socket_egress_bytes_total",
             "response envelope bytes written to sockets").labels()
+        self._m_reaped = m.counter(
+            "socket_idle_reaped_total",
+            "connections closed by the idle reaper").labels()
         self._closing = False  # guarded-by: external(single-writer stop(); lock-free reads are benign loop exits)
         self._conns: Dict[int, socket.socket] = {}  # guarded-by: _conns_lock
         self._threads: set = set()  # guarded-by: _conns_lock
@@ -329,11 +344,20 @@ class SocketRegistryServer:
                       ) -> Optional[Tuple[wire.Op, str, str,
                                           List[bytes], int]]:
         """One request envelope off the stream, or None on EOF at a request
-        boundary (the client hung up cleanly).  The wait for the *first*
-        byte is unbounded (pooled client connections idle between
+        boundary (the client hung up cleanly) or idle reap.  The wait for
+        the *first* byte is bounded by ``idle_timeout`` when configured
+        (unbounded otherwise — pooled client connections idle between
         requests); once a request starts, the rest must arrive within
         ``io_timeout`` or the connection is dropped."""
-        first = rfile.read(1)
+        if self.idle_timeout is not None:
+            conn.settimeout(self.idle_timeout)
+        try:
+            first = rfile.read(1)
+        except socket.timeout:
+            # nothing consumed (the buffer was empty at a request
+            # boundary), so this close is as clean as an EOF
+            self._m_reaped.inc()
+            return None
         if not first:
             return None
         conn.settimeout(self.io_timeout)     # a request is now in flight
@@ -401,50 +425,63 @@ class SocketRegistryServer:
     @staticmethod
     def _expect_frames(op: wire.Op, frames: Sequence[bytes],
                        n: int) -> None:
-        if len(frames) != n:
-            raise wire.WireError(
-                f"{op.name} request carries {len(frames)} body frame(s), "
-                f"expected {n}")
+        expect_frames(op, frames, n)
 
     def _dispatch(self, op: wire.Op, lineage: str, tag: str,
                   frames: List[bytes]) -> List[bytes]:
-        if op is wire.Op.INDEX:
-            self._expect_frames(op, frames, 0)
-            return [self.server.get_index(lineage, tag)]
-        if op is wire.Op.LATEST_INDEX:
-            self._expect_frames(op, frames, 0)
-            frame = self.server.get_latest_index(lineage)
-            return [] if frame is None else [frame]
-        if op is wire.Op.RECIPE:
-            self._expect_frames(op, frames, 0)
-            return [self.server.get_recipe(lineage, tag)]
-        if op is wire.Op.HAS:
-            self._expect_frames(op, frames, 1)
-            return [self.server.handle_has(frames[0])]
-        if op is wire.Op.TAGS:
-            self._expect_frames(op, frames, 1)
-            return [self.server.handle_tags(frames[0])]
-        if op is wire.Op.INFO:
-            self._expect_frames(op, frames, 0)
-            return [wire.encode_info(self.server.max_batch_chunks)]
-        if op is wire.Op.METRICS:
-            self._expect_frames(op, frames, 0)
-            return [self.server.handle_metrics()]
-        if op is wire.Op.JOURNAL_SHIP:
-            self._expect_frames(op, frames, 1)
-            return self.server.handle_ship(frames[0])
-        if op is wire.Op.REPL_ACK:
-            self._expect_frames(op, frames, 1)
-            return [self.server.handle_repl_ack(frames[0])]
-        if op is wire.Op.PUSH:
-            if len(frames) < 2:
-                raise wire.WireError(
-                    f"PUSH request carries {len(frames)} body frame(s), "
-                    f"expected PUSH_HDR + RECIPE + CHUNK_BATCH*")
-            receipt = self.server.handle_push(frames[0], frames[1],
-                                              frames[2:])
-            return [wire.encode_receipt(receipt)]
-        raise wire.WireError(f"unhandled request op {op!r}")
+        return dispatch_request(self.server, op, lineage, tag, frames)
+
+
+def expect_frames(op: wire.Op, frames: Sequence[bytes], n: int) -> None:
+    if len(frames) != n:
+        raise wire.WireError(
+            f"{op.name} request carries {len(frames)} body frame(s), "
+            f"expected {n}")
+
+
+def dispatch_request(server: RegistryServer, op: wire.Op, lineage: str,
+                     tag: str, frames: Sequence[bytes]) -> List[bytes]:
+    """Route one non-streamed request envelope to the matching
+    :class:`RegistryServer` handler — the op table both socket front ends
+    (threaded and async) share.  ``Op.WANT`` is *not* here: both servers
+    stream it through :meth:`RegistryServer.want_plan` so the response
+    header can commit the frame count before any chunk is read."""
+    if op is wire.Op.INDEX:
+        expect_frames(op, frames, 0)
+        return [server.get_index(lineage, tag)]
+    if op is wire.Op.LATEST_INDEX:
+        expect_frames(op, frames, 0)
+        frame = server.get_latest_index(lineage)
+        return [] if frame is None else [frame]
+    if op is wire.Op.RECIPE:
+        expect_frames(op, frames, 0)
+        return [server.get_recipe(lineage, tag)]
+    if op is wire.Op.HAS:
+        expect_frames(op, frames, 1)
+        return [server.handle_has(frames[0])]
+    if op is wire.Op.TAGS:
+        expect_frames(op, frames, 1)
+        return [server.handle_tags(frames[0])]
+    if op is wire.Op.INFO:
+        expect_frames(op, frames, 0)
+        return [wire.encode_info(server.max_batch_chunks)]
+    if op is wire.Op.METRICS:
+        expect_frames(op, frames, 0)
+        return [server.handle_metrics()]
+    if op is wire.Op.JOURNAL_SHIP:
+        expect_frames(op, frames, 1)
+        return server.handle_ship(frames[0])
+    if op is wire.Op.REPL_ACK:
+        expect_frames(op, frames, 1)
+        return [server.handle_repl_ack(frames[0])]
+    if op is wire.Op.PUSH:
+        if len(frames) < 2:
+            raise wire.WireError(
+                f"PUSH request carries {len(frames)} body frame(s), "
+                f"expected PUSH_HDR + RECIPE + CHUNK_BATCH*")
+        receipt = server.handle_push(frames[0], frames[1], frames[2:])
+        return [wire.encode_receipt(receipt)]
+    raise wire.WireError(f"unhandled request op {op!r}")
 
 
 # -------------------------------------------------------------- transport
@@ -457,6 +494,8 @@ class _Conn:
         self.sock = socket.create_connection(address, timeout=timeout)
         self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.rfile = self.sock.makefile("rb")
+        self.reused = False      # came out of the pool (server may have
+        self.idle_since = 0.0    # reaped it while idle) / checkin time
 
     def send(self, data: bytes) -> None:
         self.sock.sendall(data)
@@ -490,16 +529,25 @@ class SocketTransport:
 
     def __init__(self, address: Tuple[str, int], batch_chunks: int = 64,
                  timeout: float = DEFAULT_TIMEOUT, pool_size: int = 8,
+                 pool_ttl: float = 60.0,
                  metrics: Optional[MetricsRegistry] = None):
         self.address = (address[0], int(address[1]))
         self.batch_chunks = max(1, batch_chunks)
         self.timeout = timeout
+        # pool bounds: at most pool_size idle connections are kept (a burst
+        # of pipelined batches cannot leak sockets — excess checkins close),
+        # and one idle longer than pool_ttl is closed at checkout instead
+        # of being handed out half-dead
         self.pool_size = pool_size
+        self.pool_ttl = pool_ttl
         self._pool: List[_Conn] = []  # guarded-by: _pool_lock
         self._pool_lock = threading.Lock()
         self._closed = False  # guarded-by: _pool_lock
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._meter = TransportMeter(self.metrics, self.name)
+        self._m_pool = self.metrics.gauge(
+            "transport_pool_connections",
+            "idle pooled connections", ("transport",)).labels(self.name)
         # one control exchange: the server's response split, so pull plans
         # quote the streamed CHUNK_BATCH framing (and its envelope) exactly
         # (unmetered, like scrape_metrics — neither contributes to any
@@ -518,6 +566,7 @@ class SocketTransport:
             conns, self._pool = self._pool, []
         for c in conns:
             c.close()
+        self._m_pool.set(0)
 
     def __enter__(self) -> "SocketTransport":
         return self
@@ -528,11 +577,23 @@ class SocketTransport:
     # ----------------------------------------------------------------- pool
 
     def _checkout(self) -> _Conn:
-        with self._pool_lock:
-            if self._closed:
-                raise DeliveryError("socket transport is closed")
-            if self._pool:
-                return self._pool.pop()
+        now = time.monotonic()
+        while True:
+            with self._pool_lock:
+                if self._closed:
+                    raise DeliveryError("socket transport is closed")
+                conn = self._pool.pop() if self._pool else None
+                n = len(self._pool)
+            if conn is None:
+                return self._dial()
+            self._m_pool.set(n)
+            if now - conn.idle_since > self.pool_ttl:
+                conn.close()         # TTL-expired: almost certainly reaped
+                continue
+            conn.reused = True
+            return conn
+
+    def _dial(self) -> _Conn:
         try:
             return _Conn(self.address, self.timeout)
         except OSError as e:
@@ -541,11 +602,17 @@ class SocketTransport:
                 f"{self.address[0]}:{self.address[1]} ({e})") from e
 
     def _checkin(self, conn: _Conn) -> None:
+        conn.idle_since = time.monotonic()
         with self._pool_lock:
             if not self._closed and len(self._pool) < self.pool_size:
                 self._pool.append(conn)
-                return
-        conn.close()
+                n = len(self._pool)
+            else:
+                n = -1
+        if n < 0:
+            conn.close()             # pool full (or transport closed)
+        else:
+            self._m_pool.set(n)
 
     # ------------------------------------------------------------- exchange
 
@@ -554,12 +621,29 @@ class SocketTransport:
                   ) -> Tuple[int, List[bytes], int]:
         """One request/response round-trip.  Returns ``(request_bytes,
         response_frames, response_bytes)``; server-side errors re-raise as
-        the matching exception, transport failures as ``DeliveryError``."""
+        the matching exception, transport failures as ``DeliveryError``.
+        A reused pooled connection that proves dead before the server
+        answers is redialed and the exchange retried once (see
+        :class:`_StaleConn`); registry pushes deduplicate, so even the
+        theoretical processed-but-unanswered race is benign."""
         req = wire.encode_request(op, lineage, tag, frames)
-        conn = self._checkout()
+        try:
+            status, out, resp_bytes = self._exchange_on(
+                self._checkout(), op, req)
+        except _StaleConn:
+            status, out, resp_bytes = self._exchange_on(
+                self._dial(), op, req)
+        if status == wire.STATUS_ERROR:
+            self._raise_remote(out)
+        return len(req), out, resp_bytes
+
+    def _exchange_on(self, conn: _Conn, op: wire.Op, req: bytes
+                     ) -> Tuple[int, List[bytes], int]:
+        answered = False
         try:
             conn.send(req)
             status, n, resp_bytes = self._read_header(conn)
+            answered = True
             out: List[bytes] = []
             for _ in range(n):
                 f, nb = _read_frame(conn.rfile)
@@ -567,6 +651,8 @@ class SocketTransport:
                 out.append(f)
         except (_ConnectionClosed, OSError) as e:
             conn.close()
+            if conn.reused and not answered:
+                raise _StaleConn(str(e)) from e
             raise DeliveryError(
                 f"socket transport: {op.name} to {self.address[0]}:"
                 f"{self.address[1]}: connection lost ({e})") from e
@@ -574,9 +660,7 @@ class SocketTransport:
             conn.close()                     # stream state unknown: drop it
             raise
         self._checkin(conn)
-        if status == wire.STATUS_ERROR:
-            self._raise_remote(out)
-        return len(req), out, resp_bytes
+        return status, out, resp_bytes
 
     @staticmethod
     def _read_header(conn: _Conn) -> Tuple[int, int, int]:
@@ -630,12 +714,30 @@ class SocketTransport:
         t0 = time.perf_counter()
         want = wire.encode_want(fps)
         req = wire.encode_request(wire.Op.WANT, lineage, tag, [want])
-        conn = self._checkout()
+        try:
+            chunks, resp_bytes, error_frames = self._fetch_on(
+                self._checkout(), req)
+        except _StaleConn:
+            chunks, resp_bytes, error_frames = self._fetch_on(
+                self._dial(), req)
+        if error_frames is not None:
+            self._raise_remote(error_frames)
+        leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
+                        chunk_bytes=resp_bytes, want_bytes=len(req),
+                        rounds=1)
+        self._meter.rec_legs(t0, [leg])
+        return FetchResult(chunks=chunks, legs=[leg])
+
+    def _fetch_on(self, conn: _Conn, req: bytes
+                  ) -> Tuple[Dict[bytes, bytes], int,
+                             Optional[List[bytes]]]:
         chunks: Dict[bytes, bytes] = {}
         error_frames: Optional[List[bytes]] = None
+        answered = False
         try:
             conn.send(req)
             status, n, resp_bytes = self._read_header(conn)
+            answered = True
             if status == wire.STATUS_ERROR:
                 error_frames = []
             for _ in range(n):
@@ -647,6 +749,8 @@ class SocketTransport:
                     chunks.update(wire.decode_chunk_batch(f))
         except (_ConnectionClosed, OSError) as e:
             conn.close()
+            if conn.reused and not answered:
+                raise _StaleConn(str(e)) from e
             raise DeliveryError(
                 f"socket transport: WANT to {self.address[0]}:"
                 f"{self.address[1]}: connection lost mid-stream ({e})"
@@ -655,13 +759,7 @@ class SocketTransport:
             conn.close()
             raise
         self._checkin(conn)
-        if error_frames is not None:
-            self._raise_remote(error_frames)
-        leg = SourceLeg(source=REGISTRY_SOURCE, chunks=len(chunks),
-                        chunk_bytes=resp_bytes, want_bytes=len(req),
-                        rounds=1)
-        self._meter.rec_legs(t0, [leg])
-        return FetchResult(chunks=chunks, legs=[leg])
+        return chunks, resp_bytes, error_frames
 
     # api-boundary
     def push(self, lineage: str, tag: str, recipe: Recipe,

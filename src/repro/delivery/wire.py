@@ -53,6 +53,11 @@ which lets a server *stream* a multi-frame WANT answer while the client
 decodes batches as they arrive.  Envelope overhead is exactly computable
 (``request_envelope_bytes`` / ``response_envelope_bytes``), so a pull plan
 can quote socket bytes to the byte before opening a connection.
+
+The async data plane multiplexes many streams over one connection using
+the **mux envelopes** (``encode_mux_request`` / ``encode_mux_response_*``):
+the same frames, routed by a fixed-width stream id, with equally exact
+sizing (``mux_request_envelope_bytes`` / ``mux_response_envelope_bytes``).
 """
 
 from __future__ import annotations
@@ -114,6 +119,8 @@ class ErrorCode(enum.IntEnum):
     PUSH_REJECTED = 2  # repro.core.registry.PushRejected
     WIRE = 3           # WireError (malformed request reached the server)
     INTERNAL = 4       # anything else — surfaced as DeliveryError
+    BUSY = 5           # admission control shed the request (retryable;
+                       # surfaced as DeliveryError)
 
 
 # ----------------------------------------------------------------- varints
@@ -799,6 +806,144 @@ def decode_response(buf: bytes) -> Tuple[int, List[bytes]]:
     return status, frames
 
 
+# ------------------------------------------------------ multiplexed envelopes
+#
+# The async data plane interleaves many request/response streams over one
+# TCP connection.  Each direction is a sequence of self-delimiting
+# *messages* that carry a **stream id** so an endpoint can route them:
+#
+#   request  ``"CM" | version | op | stream_id(4) | str(lineage) | str(tag)
+#             | u(n_frames) | (u(len) frame)*``
+#   response ``"CS" | version | msg_type | stream_id(4) | ...`` where
+#     ``msg_type == MUX_HEADER`` continues ``status(1) | u(n_frames)``
+#     (commits the stream's status and total frame count, exactly like a
+#     ``"CR"`` header) and ``msg_type == MUX_FRAME`` continues
+#     ``u(len) | frame`` (one body frame of that stream).
+#
+# The stream id is a fixed-width 4-byte big-endian unsigned integer — not a
+# varint — so envelope overhead is independent of the id value and a pull
+# plan's byte quote stays exact without knowing which ids the transport
+# will allocate.  FRAME messages of *different* streams may interleave
+# freely; FRAME messages of one stream arrive in order, and the stream
+# completes when ``n_frames`` of them have arrived.
+
+MUX_REQUEST_MAGIC = b"CM"
+MUX_RESPONSE_MAGIC = b"CS"
+MUX_STREAM_ID_BYTES = 4
+MAX_STREAM_ID = (1 << 32) - 1
+_MUX_HEADER_LEN = 8        # magic(2) + version + op/msg_type + stream_id(4)
+
+MUX_HEADER = 0             # response message types
+MUX_FRAME = 1
+
+
+def check_mux_request_header(hdr: bytes) -> Tuple[Op, int]:
+    """Validate an 8-byte mux request header; returns ``(op, stream_id)``."""
+    if hdr[:2] != MUX_REQUEST_MAGIC:
+        raise WireError(f"bad mux request magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported mux request version {hdr[2]}")
+    try:
+        op = Op(hdr[3])
+    except ValueError:
+        raise WireError(f"unknown mux request op {hdr[3]}") from None
+    return op, int.from_bytes(hdr[4:8], "big")
+
+
+def check_mux_response_header(hdr: bytes) -> Tuple[int, int]:
+    """Validate an 8-byte mux response message header; returns
+    ``(msg_type, stream_id)``."""
+    if hdr[:2] != MUX_RESPONSE_MAGIC:
+        raise WireError(f"bad mux response magic {hdr[:2]!r}")
+    if hdr[2] != VERSION:
+        raise WireError(f"unsupported mux response version {hdr[2]}")
+    if hdr[3] not in (MUX_HEADER, MUX_FRAME):
+        raise WireError(f"unknown mux message type {hdr[3]}")
+    return hdr[3], int.from_bytes(hdr[4:8], "big")
+
+
+def _stream_id_bytes(stream_id: int) -> bytes:
+    if not 0 <= stream_id <= MAX_STREAM_ID:
+        raise WireError(f"stream id {stream_id} out of range")
+    return stream_id.to_bytes(MUX_STREAM_ID_BYTES, "big")
+
+
+def encode_mux_request(op: Op, stream_id: int, lineage: str, tag: str,
+                       frames: Sequence[bytes] = ()) -> bytes:
+    out = bytearray()
+    out += MUX_REQUEST_MAGIC
+    out.append(VERSION)
+    out.append(int(op))
+    out += _stream_id_bytes(stream_id)
+    out += _encode_str(lineage)
+    out += _encode_str(tag)
+    out += encode_uvarint(len(frames))
+    for f in frames:
+        out += encode_uvarint(len(f))
+        out += f
+    return bytes(out)
+
+
+def decode_mux_request(buf: bytes) -> Tuple[Op, int, str, str, List[bytes]]:
+    hdr, off = _take(buf, 0, _MUX_HEADER_LEN, "mux request header")
+    op, stream_id = check_mux_request_header(hdr)
+    lineage, off = _decode_str(buf, off, "mux request lineage")
+    tag, off = _decode_str(buf, off, "mux request tag")
+    n, off = decode_uvarint(buf, off)
+    frames: List[bytes] = []
+    for _ in range(n):
+        size, off = decode_uvarint(buf, off)
+        f, off = _take(buf, off, size, "mux request frame")
+        frames.append(f)
+    if off != len(buf):
+        raise WireError(f"{len(buf) - off} trailing bytes after mux request")
+    return op, stream_id, lineage, tag, frames
+
+
+def encode_mux_response_header(stream_id: int, status: int,
+                               n_frames: int) -> bytes:
+    """The HEADER message: commits a stream's status + total frame count."""
+    if status not in (STATUS_OK, STATUS_ERROR):
+        raise WireError(f"unknown response status {status}")
+    return (MUX_RESPONSE_MAGIC + bytes((VERSION, MUX_HEADER))
+            + _stream_id_bytes(stream_id) + bytes((status,))
+            + encode_uvarint(n_frames))
+
+
+def encode_mux_response_frame(stream_id: int, frame: bytes) -> bytes:
+    """One FRAME message: a length-prefixed body frame of ``stream_id``."""
+    return (MUX_RESPONSE_MAGIC + bytes((VERSION, MUX_FRAME))
+            + _stream_id_bytes(stream_id) + encode_uvarint(len(frame))
+            + frame)
+
+
+def decode_mux_response_header(buf: bytes, off: int = 0
+                               ) -> Tuple[int, int, int, int]:
+    """Decode one HEADER message; ``(stream_id, status, n_frames, off)``."""
+    hdr, off = _take(buf, off, _MUX_HEADER_LEN, "mux response header")
+    msg_type, stream_id = check_mux_response_header(hdr)
+    if msg_type != MUX_HEADER:
+        raise WireError(f"expected mux HEADER message, got type {msg_type}")
+    status_b, off = _take(buf, off, 1, "mux response status")
+    status = status_b[0]
+    if status not in (STATUS_OK, STATUS_ERROR):
+        raise WireError(f"unknown response status {status}")
+    n, off = decode_uvarint(buf, off)
+    return stream_id, status, n, off
+
+
+def decode_mux_response_frame(buf: bytes, off: int = 0
+                              ) -> Tuple[int, bytes, int]:
+    """Decode one FRAME message; ``(stream_id, frame, new_offset)``."""
+    hdr, off = _take(buf, off, _MUX_HEADER_LEN, "mux frame header")
+    msg_type, stream_id = check_mux_response_header(hdr)
+    if msg_type != MUX_FRAME:
+        raise WireError(f"expected mux FRAME message, got type {msg_type}")
+    size, off = decode_uvarint(buf, off)
+    frame, off = _take(buf, off, size, "mux frame body")
+    return stream_id, frame, off
+
+
 # ----------------------------------------------------------------- records
 #
 # Checksummed records: the same varint framing as frames, plus a trailing
@@ -918,3 +1063,24 @@ def response_envelope_bytes(frame_lens: Sequence[int]) -> int:
     """Exact ``len(encode_response(status, frames))`` from frame lengths."""
     return (4 + uvarint_len(len(frame_lens))
             + sum(uvarint_len(n) + n for n in frame_lens))
+
+
+def mux_request_envelope_bytes(lineage: str, tag: str,
+                               frame_lens: Sequence[int]) -> int:
+    """Exact ``len(encode_mux_request(op, sid, lineage, tag, frames))`` from
+    the body-frame lengths alone — the stream id is fixed-width, so the
+    size is independent of which id the transport allocates."""
+    lin = len(lineage.encode("utf-8"))
+    tg = len(tag.encode("utf-8"))
+    return (_MUX_HEADER_LEN + uvarint_len(lin) + lin + uvarint_len(tg) + tg
+            + uvarint_len(len(frame_lens))
+            + sum(uvarint_len(n) + n for n in frame_lens))
+
+
+def mux_response_envelope_bytes(frame_lens: Sequence[int]) -> int:
+    """Exact total bytes of one complete mux response stream (the HEADER
+    message plus one FRAME message per body frame) from frame lengths
+    alone — what a pull plan quotes for the async transport."""
+    return (_MUX_HEADER_LEN + 1 + uvarint_len(len(frame_lens))
+            + sum(_MUX_HEADER_LEN + uvarint_len(n) + n
+                  for n in frame_lens))

@@ -328,8 +328,9 @@ class TestSocketServer:
     def test_stalled_mid_request_client_is_dropped(self):
         """A client that starts a request and stalls must not pin a server
         connection thread forever — after ``io_timeout`` the server drops
-        the connection (idle *between* requests stays unbounded: pooled
-        client connections rely on that)."""
+        the connection (idle *between* requests is separately bounded by
+        ``idle_timeout`` when configured; pooled clients survive that reap
+        via the stale-connection retry)."""
         import socket as socket_mod
         srv, _versions = _seeded_server()
         sock_srv = SocketRegistryServer(srv, io_timeout=0.5)

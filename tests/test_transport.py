@@ -1,8 +1,9 @@
-"""Transport conformance: one ``ImageClient``, five ``Transport``s.
+"""Transport conformance: one ``ImageClient``, six ``Transport``s.
 
 The same scenario must move the same chunks through every transport, with
-byte counts equal up to framing overhead — and for the socket transport,
-equal to the wire transport's bytes **plus exactly the envelope overhead**;
+byte counts equal up to framing overhead — and for the socket and mux
+transports, equal to the wire transport's bytes **plus exactly the
+envelope overhead** (plain or multiplexed respectively);
 swarm pulls must survive provider death mid-pull (failover to the next
 source, then the registry); a replicated pull must fan chunk reads across
 journal-shipped standbys (and survive primary death by promotion — see
@@ -21,8 +22,9 @@ from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError
 from repro.core.registry import Registry
 from repro.core.store import Recipe
-from repro.delivery import (FetchResult, ImageClient, JournalFollower,
-                            LocalTransport, PullPlan, RegistryServer,
+from repro.delivery import (AsyncRegistryServer, FetchResult, ImageClient,
+                            JournalFollower, LocalTransport,
+                            MuxSocketTransport, PullPlan, RegistryServer,
                             ReplicatedTransport, SocketRegistryServer,
                             SocketTransport, SourceLeg, SwarmNode,
                             SwarmTracker, SwarmTransport, TransferReport,
@@ -30,7 +32,7 @@ from repro.delivery import (FetchResult, ImageClient, JournalFollower,
 
 PARAMS = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
 P = CDMTParams(window=4, rule_bits=2)
-TRANSPORTS = ["local", "wire", "socket", "swarm", "replicated"]
+TRANSPORTS = ["local", "wire", "socket", "mux", "swarm", "replicated"]
 
 
 def _rand(n, seed=0):
@@ -99,6 +101,12 @@ def _fresh_client(kind, reg, provisioned_tags=()):
         transport = SocketTransport(sock_srv.address)
         cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
         cl._cleanup = (transport, sock_srv)
+        return cl
+    if kind == "mux":
+        asrv = AsyncRegistryServer(srv)
+        transport = MuxSocketTransport(asrv.address)
+        cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P)
+        cl._cleanup = (transport, asrv)
         return cl
     tracker = SwarmTracker()
     for i, tag in enumerate(provisioned_tags):
@@ -306,6 +314,96 @@ class TestSocketConformance:
         finally:
             transport.close()
             sock_srv.stop()
+
+    def test_mux_bytes_are_wire_bytes_plus_mux_envelope(self):
+        """The multiplexed transport's byte accounting must relate to the
+        frame-level wire transport exactly like the plain socket's does —
+        same frames, plus exactly the mux envelope (HEADER + per-frame
+        FRAME messages, fixed-width stream ids)."""
+        versions = _versions(4, seed=58)
+        wire_cl = _fresh_client("wire", _seed_registry(versions))
+        mux_cl = _fresh_client("mux", _seed_registry(versions))
+        try:
+            wplan = wire_cl.plan_pull("app", "v0")
+            wrep = wire_cl.execute(wplan)
+            mplan = mux_cl.plan_pull("app", "v0")
+            mrep = mux_cl.execute(mplan)
+            assert mplan.missing == wplan.missing
+
+            size_of = dict(zip(mplan.recipe.fps, mplan.recipe.sizes))
+            sizes = [size_of[fp] for fp in mplan.missing]
+            sub = mux_cl.transport.response_batch_chunks
+            envelope = 0
+            for start in range(0, len(sizes), mux_cl.batch_chunks):
+                lens = wire.chunk_batch_frame_lens(
+                    sizes[start:start + mux_cl.batch_chunks], sub)
+                envelope += wire.mux_response_envelope_bytes(lens) - sum(lens)
+            assert mrep.chunk_bytes == wrep.chunk_bytes + envelope
+
+            for mux_b, frame_len in ((mrep.index_bytes, wrep.index_bytes),
+                                     (mrep.recipe_bytes, wrep.recipe_bytes)):
+                assert mux_b == (
+                    wire.mux_request_envelope_bytes("app", "v0", [])
+                    + wire.mux_response_envelope_bytes([frame_len]))
+        finally:
+            _cleanup_client(wire_cl)
+            _cleanup_client(mux_cl)
+
+    def test_mux_plan_quote_exact_with_server_split(self):
+        versions = _versions(3, seed=59)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg, max_batch_chunks=16)
+        asrv = AsyncRegistryServer(srv)
+        transport = MuxSocketTransport(asrv.address, batch_chunks=256)
+        try:
+            cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P,
+                             batch_chunks=256)
+            assert transport.response_batch_chunks == 16   # INFO handshake
+            plan = cl.plan_pull("app", "v2")
+            assert plan.chunks_to_fetch > 16               # forces a split
+            report = cl.execute(plan)
+            assert (report.index_bytes + report.recipe_bytes
+                    + report.chunk_bytes) == plan.expected_wire_bytes
+        finally:
+            transport.close()
+            asrv.stop()
+
+    def test_mux_mid_pull_server_death_commits_nothing(self):
+        """A handler crash after the stream header committed its frame
+        count kills the connection; the client must surface DeliveryError
+        with nothing committed — identical to the threaded contract."""
+        versions = _versions(3, seed=60)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg, max_batch_chunks=8)
+        asrv = AsyncRegistryServer(srv)
+        transport = MuxSocketTransport(asrv.address, batch_chunks=1024)
+        try:
+            cl = ImageClient(transport, cdc_params=PARAMS, cdmt_params=P,
+                             batch_chunks=1024)
+            plan = cl.plan_pull("app", "v0")
+            assert plan.chunks_to_fetch > 8    # multi-frame response
+
+            real_want_plan = srv.want_plan
+
+            def dying_want_plan(want_frame):
+                n, frames = real_want_plan(want_frame)
+
+                def die_after_first():
+                    yield next(iter(frames))
+                    raise RuntimeError("registry crashed mid-stream")
+
+                return n, die_after_first()
+
+            srv.want_plan = dying_want_plan
+            chunks_before = cl.store.chunks.n_chunks()
+            with pytest.raises(DeliveryError):
+                cl.execute(plan)
+            assert "app:v0" not in cl.store.recipes
+            assert cl.store.chunks.n_chunks() == chunks_before
+            assert "app" not in cl.indexes
+        finally:
+            transport.close()
+            asrv.stop()
 
     def test_swarm_over_socket_registry_fallback(self):
         """SwarmTransport composes peers over *any* registry transport —
