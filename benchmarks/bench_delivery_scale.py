@@ -330,7 +330,9 @@ def _replicated(app: str, versions, n: int, warm_tag: str, new_tag: str,
     primary_wire = WireTransport(srv)
     for i in range(n_replicas - 1):
         sreg = Registry(cdmt_params=CDMT_PARAMS)
-        JournalFollower(sreg, primary_wire, name=f"standby{i}").sync_once()
+        # catch_up, not sync_once: the first standby's ack trims the
+        # primary's log, so later standbys join via snapshot bootstrap
+        JournalFollower(sreg, primary_wire, name=f"standby{i}").catch_up()
         servers.append(SocketRegistryServer(RegistryServer(sreg)))
     transports: List[SocketTransport] = []
     clients: List[ImageClient] = []
@@ -428,6 +430,56 @@ def run_socket(scale: float = 1.0) -> Report:
             row = _unified(app, versions, n, warm_tag, new_tag, kind)
             rep.add(app=app, mode=kind, n_clients=n,
                     naive_egress_mb=naive_mb * n, **row)
+    return rep
+
+
+def run_bootstrap(scale: float = 1.0) -> Report:
+    """Cold-standby join (the bounded-log rows): a fresh standby joining
+    via full history replay from offset 0, versus joining via snapshot
+    bootstrap (``Op.SNAPSHOT_SHIP``) once the log has been trimmed.  The
+    primary carries heavy metadata churn, so the record history is far
+    larger than the collapsed state — the gap between the two ``records``
+    columns (and the ``log_records`` column going to zero after every
+    tracked replica acks) is what ``trim_replication`` plus snapshot
+    bootstrap buy a long-lived primary."""
+    rep = Report("delivery_bootstrap")
+    c = corpus(scale)
+    app = "node"
+    versions = c[app]
+    srv = _loaded_server(app, versions)
+    reg = srv.registry
+    # metadata churn: every version's manifest rewritten repeatedly — the
+    # record history grows, the collapsed current state does not
+    for round_ in range(20):
+        for v in versions:
+            reg.put_metadata(app, v.tag, b"manifest-%d" % round_)
+    head = reg.replication.head()
+    log_records_before = head - reg.replication.base
+    ship_mb = sum(len(r) for r in reg.replication.dump()) / 2**20
+
+    # (a) history replay from offset 0 — the only join path while the log
+    # is untrimmed; its ack then trims the log (it is the only replica)
+    replay_reg = Registry(cdmt_params=CDMT_PARAMS)
+    replay_fol = JournalFollower(replay_reg, WireTransport(srv),
+                                 name="replay")
+    with Timer() as t_replay:
+        replayed = replay_fol.sync_once()
+    rep.add(app=app, mode="replay-join", records=replayed,
+            shipped_mb=ship_mb, wall_s=t_replay.s,
+            log_records=log_records_before)
+
+    # (b) snapshot bootstrap — the log is now trimmed to the head, so a
+    # fresh standby must join from the collapsed state snapshot
+    assert reg.replication.base == head, "ack should have trimmed the log"
+    boot_reg = Registry(cdmt_params=CDMT_PARAMS)
+    boot_fol = JournalFollower(boot_reg, WireTransport(srv), name="boot")
+    with Timer() as t_boot:
+        adopted = boot_fol.catch_up()
+    snap_mb = boot_reg.metrics.snapshot().value(
+        "bootstrap_snapshot_bytes_total", {}) / 2**20
+    rep.add(app=app, mode="snapshot-bootstrap", records=adopted,
+            shipped_mb=snap_mb, wall_s=t_boot.s,
+            log_records=head - reg.replication.base)
     return rep
 
 
@@ -603,7 +655,8 @@ def run_obs(scale: float = 1.0) -> Report:
 if __name__ == "__main__":
     scale = float(sys.argv[1]) if len(sys.argv) > 1 else 1.0
     reports = [run(scale), run_unified(scale), run_socket(scale),
-               run_replicated(scale), run_obs(scale), run_async(scale)]
+               run_replicated(scale), run_bootstrap(scale), run_obs(scale),
+               run_async(scale)]
     for r in reports:
         r.print_csv()
     write_json("BENCH_delivery.json", reports)

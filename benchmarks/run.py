@@ -25,6 +25,7 @@ ALL = {
     "delivery_unified": bench_delivery_scale.run_unified,
     "delivery_socket": bench_delivery_scale.run_socket,
     "delivery_replicated": bench_delivery_scale.run_replicated,
+    "delivery_bootstrap": bench_delivery_scale.run_bootstrap,
     "delivery_obs": bench_delivery_scale.run_obs,
     "delivery_async": bench_delivery_scale.run_async,
     "delivery_async_smoke": bench_delivery_scale.run_async_smoke,

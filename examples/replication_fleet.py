@@ -1,0 +1,87 @@
+"""Replication fleet demo: a primary registry, a standby following the
+journal, a late-joining standby that bootstraps from a compacted snapshot
+(never replaying trimmed history), an epoch roll that triggers automatic
+wipe-and-resync, and a promotion after the primary is retired.
+
+    PYTHONPATH=src python examples/replication_fleet.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import cdc
+from repro.core.cdmt import CDMTParams
+from repro.core.registry import PushRejected, Registry
+from repro.delivery import (ImageClient, JournalFollower, LocalTransport,
+                            RegistryServer, WireTransport)
+
+CDC = cdc.CDCParams(mask_bits=10, min_size=128, max_size=8192)
+P = CDMTParams(window=4, rule_bits=2)
+
+
+def blob(seed, n=60_000):
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def main():
+    # --- primary + first standby -------------------------------------------
+    primary = Registry(cdmt_params=P)
+    pub = ImageClient(LocalTransport(primary), cdc_params=CDC, cdmt_params=P)
+    for i in range(3):
+        pub.commit("app", f"v{i}", blob(i))
+        pub.push("app", f"v{i}")
+
+    server = RegistryServer(primary)
+    s0 = Registry(cdmt_params=P)
+    f0 = JournalFollower(s0, WireTransport(server), name="s0")
+    applied = f0.catch_up()
+    print(f"s0 joined early: replayed {applied} journal records, "
+          f"tags={s0.tags('app')}")
+
+    # the standby's acks trim the primary's log — bounded in-epoch memory
+    log = primary.replication
+    print(f"log after acks: head={log.head()} base={log.base} "
+          f"({log.head() - log.base} records in memory)")
+    assert log.base == log.head()
+
+    # --- a late standby joins via snapshot bootstrap ------------------------
+    # History below the base is gone; s1 adopts the compacted state instead.
+    s1 = Registry(cdmt_params=P)
+    f1 = JournalFollower(s1, WireTransport(server), name="s1")
+    adopted = f1.catch_up()
+    print(f"s1 joined late: snapshot bootstrap adopted {adopted} state "
+          f"records (history was {log.head()}), tags={s1.tags('app')}")
+    assert server.snapshot().snapshot_requests == 1
+
+    # standbys are read-only until promoted
+    s1pub = ImageClient(LocalTransport(s1), cdc_params=CDC, cdmt_params=P)
+    s1pub.commit("app", "rogue", blob(99))
+    try:
+        s1pub.push("app", "rogue")
+        raise AssertionError("read-only standby accepted a push")
+    except PushRejected:
+        print("s1 is read-only: push refused until promotion ✓")
+
+    # --- epoch roll: automatic wipe-and-resync ------------------------------
+    primary.sweep(retain_tags={"app": ["v2"]}, drop=True)
+    f0.catch_up()
+    snap = s0.metrics.snapshot()
+    print(f"after GC sweep: s0 resynced to epoch {s0.replication.epoch}, "
+          f"tags={s0.tags('app')} "
+          f"(epoch_mismatch={snap.value('replication_epoch_mismatch_total', {}):.0f}, "
+          f"bootstraps={snap.value('replication_bootstraps_total', {}):.0f})")
+    assert s0.tags("app") == ["v2"]
+
+    # --- primary retires, s0 takes the write role ---------------------------
+    f0.promote()
+    spub = ImageClient(LocalTransport(s0), cdc_params=CDC, cdmt_params=P)
+    spub.commit("app", "v3", blob(3))
+    spub.push("app", "v3")
+    print(f"s0 promoted: accepted v3, tags={s0.tags('app')} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ __all__ = ["COMMIT_PATHS", "JOURNALED_PATHS", "MUTATORS", "check_file",
 COMMIT_PATHS: Set[Tuple[str, str]] = {
     ("Registry", "receive_push"),
     ("Registry", "apply_replicated"),
+    ("Registry", "bootstrap_from_snapshot"),
 }
 
 # (class, method) pairs whose in-memory mutations must follow the journal
@@ -53,6 +54,7 @@ JOURNALED_PATHS: Set[Tuple[str, str]] = {
     ("Registry", "receive_push"),
     ("Registry", "apply_replicated"),
     ("Registry", "put_metadata"),
+    ("Registry", "bootstrap_from_snapshot"),
 }
 
 # self-methods that apply replayed state in bulk — calling one counts as an

@@ -180,6 +180,11 @@ def _metrics_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
     return buf, lambda b: wire.decode_metrics(b) == doc
 
 
+def _snapshot_pair() -> Tuple[bytes, Callable[[bytes], bool]]:
+    buf = wire.encode_snapshot("replica-1", 2, 41)
+    return buf, lambda b: wire.decode_snapshot(b) == ("replica-1", 2, 41)
+
+
 # FrameType -> exemplar factory returning (encoded frame, decode check).
 EXEMPLARS: Dict[wire.FrameType, Callable[
         [], Tuple[bytes, Callable[[bytes], bool]]]] = {
@@ -202,6 +207,7 @@ EXEMPLARS: Dict[wire.FrameType, Callable[
     wire.FrameType.RECORD: _record_pair,
     wire.FrameType.REPL_ACK: _repl_ack_pair,
     wire.FrameType.METRICS: _metrics_pair,
+    wire.FrameType.SNAPSHOT: _snapshot_pair,
 }
 
 _WIRE_PATH = "src/repro/delivery/wire.py"

@@ -185,7 +185,11 @@ class ReplicationLog:
     (:func:`repro.delivery.wire.encode_record`), so shipping a record to a
     standby is a copy of bytes whose integrity the standby re-verifies
     before replay.  Offsets are dense record ordinals: a standby that has
-    applied ``k`` records resumes from offset ``k``.
+    applied ``k`` records resumes from offset ``k``.  Once every tracked
+    replica has acked past an offset the primary trims the prefix below it
+    (:meth:`trim_to`) — offsets stay absolute, so a follower behind the
+    trimmed ``base`` is told to bootstrap from a snapshot instead of
+    replaying history that no longer exists.
 
     ``epoch`` starts at 0 and increments only on :meth:`rollover` (a GC
     sweep that dropped versions — offsets from the old epoch are
@@ -232,6 +236,35 @@ class ReplicationLog:
         with self._lock:
             return self._base + len(self._records)
 
+    @property
+    def base(self) -> int:
+        """Lowest offset still held — everything below it was trimmed away
+        once every tracked replica had acked past it."""
+        with self._lock:
+            return self._base
+
+    def trim_to(self, offset: int) -> int:
+        """Advance the log's base to ``offset``, dropping the record prefix
+        below it.  Returns the number of records dropped.
+
+        The primary calls this with ``min(replica_offsets)`` so in-epoch
+        memory stays bounded by the slowest replica's lag; a standby's
+        snapshot bootstrap calls it with the primary's head to adopt the
+        shipped resume offset.  ``offset`` may exceed the current head (the
+        bootstrap case: collapsed state has fewer records than the history
+        it replaces) — the log is then empty with its next offset at
+        ``offset``, so offsets are never re-issued.  Trimming at or below
+        the current base is a no-op.
+        """
+        with self._lock:
+            if offset <= self._base:
+                return 0
+            dropped = min(offset, self._base + len(self._records)) - self._base
+            if dropped > 0:
+                del self._records[:dropped]
+            self._base = offset
+            return dropped
+
     def records_from(self, start: int,
                      limit: Optional[int] = None) -> List[bytes]:
         """Encoded records from offset ``start`` (at most ``limit``).
@@ -267,6 +300,16 @@ class ReplicationLog:
         the snapshot (crash between snapshot rename and journal truncate)."""
         with self._lock:
             return list(self._records[-n:]) if n > 0 else []
+
+    def reset_to(self, epoch: int, base: int) -> None:
+        """Adopt a snapshot-bootstrap position: ``epoch``, an empty log
+        whose next offset is ``base`` — the in-memory equivalent of
+        recovering a bootstrap snapshot (state records trimmed at the
+        resume offset)."""
+        with self._lock:
+            self._epoch = epoch
+            self._base = base
+            self._records = []
 
     def rollover(self) -> int:
         """Start a new epoch with an empty log (after a version-dropping GC

@@ -30,7 +30,7 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, \
 
 from repro.obs import MetricsRegistry
 
-from . import hashing
+from . import faults, hashing
 from .cdmt import CDMT, CDMTParams, DEFAULT_PARAMS
 from .errors import DeliveryError, JournalError
 from .journal import Journal, ReplicationLog, scan_records, \
@@ -48,6 +48,16 @@ _J_COMPACT = 4  # compaction boundary: first record of a freshly reset
                 # snapshot covers — the durable signal that distinguishes
                 # post-compact records from a stale journal whose
                 # truncation was interrupted (including across GC epochs)
+_J_TRIM = 5     # replication-base marker: snapshot-only, never shipped —
+                # replay *resets* the log (empty, based at the recorded
+                # offset), so a trimmed primary (or a snapshot-bootstrapped
+                # standby) recovers with its absolute offsets intact
+_J_TAIL = 6     # log-only record wrapper: snapshot-only, never shipped —
+                # payload is a raw checksummed record that belongs to the
+                # replication log *tail* (offsets base..head) but whose
+                # state is already covered by the snapshot's collapsed
+                # state records; replay feeds it to the log verbatim
+                # without re-applying it
 
 
 def _wire():
@@ -109,6 +119,10 @@ class Registry:
         self.metadata: Dict[Tuple[str, str], bytes] = {}   # guarded-by: external(RegistryServer._registry_lock)
         self._journal: Optional[Journal] = None
         self._snap_path: Optional[str] = None
+        # standby role: a JournalFollower marks its registry read-only so a
+        # misdirected client push fails loudly instead of forking the
+        # lineage history away from the primary; promote() clears it
+        self.read_only = False  # guarded-by: external(RegistryServer._registry_lock)
         # per-instance metrics: the delivery frontends adopt this registry's
         # so one scrape covers commit latency + frontend + cache together
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -124,6 +138,21 @@ class Registry:
             "epoch)").labels()
         self._m_repl_epoch = self.metrics.gauge(
             "replication_epoch", "current replication epoch").labels()
+        self._m_repl_base = self.metrics.gauge(
+            "replication_log_base", "replication log base (lowest offset "
+            "still held after trimming)").labels()
+        self._m_repl_records = self.metrics.gauge(
+            "replication_log_records", "records currently held in the "
+            "in-memory replication log (head - base)").labels()
+        self._m_repl_trimmed = self.metrics.counter(
+            "replication_log_trimmed_total", "replication log records "
+            "dropped by trimming below the minimum acked offset").labels()
+        self._m_bootstrap_bytes = self.metrics.counter(
+            "bootstrap_snapshot_bytes_total", "encoded state-record bytes "
+            "adopted via snapshot bootstrap").labels()
+        self._m_bootstrap = self.metrics.histogram(
+            "bootstrap_apply_seconds", "snapshot-bootstrap latency: "
+            "verify + persist + install").labels()
         # replication tap: every committed record, in commit order — what a
         # standby follows over JOURNAL_SHIP (see repro.delivery.net).  Fed
         # during recovery too, so resume offsets survive a primary restart.
@@ -161,6 +190,15 @@ class Registry:
             epoch, _ = _wire().decode_uvarint(payload, 0)
             self.replication.set_epoch(epoch)
             return
+        if rtype == _J_TRIM:
+            base, _ = _wire().decode_uvarint(payload, 0)
+            # reset, not trim: any records fed so far were the snapshot's
+            # collapsed *state* section, which is not part of the log tail
+            self.replication.reset_to(self.replication.epoch, base)
+            return
+        if rtype == _J_TAIL:
+            self.replication.append_raw(payload)
+            return
         if rtype == _J_COMPACT:
             return
         self._apply(rtype, payload)
@@ -189,6 +227,14 @@ class Registry:
         * journal ahead of the snapshot (epoch or head) → the snapshot
           regressed — real corruption, fail loudly.
 
+        A snapshot with a trimmed base (``_J_TRIM`` — a trimmed primary or
+        a snapshot-bootstrapped standby) adds one rule: a journal whose
+        marker head lies **below the base** predates the trim/bootstrap
+        point entirely (bootstrap crashed between the snapshot rename and
+        the journal reset), as does a marker-less journal next to a
+        trimmed snapshot (a follower's plain journal at bootstrap time) —
+        both are stale, no byte comparison possible or needed.
+
         Without a snapshot the journal is the sole authority and is fed
         whole.  Journals from before the marker existed fall back to the
         byte-suffix comparison.  A detected stale journal is truncated on
@@ -198,6 +244,7 @@ class Registry:
         wire = _wire()
         snap_epoch = self.replication.epoch    # as set by the snapshot (or 0)
         snap_head = self.replication.head()
+        snap_base = self.replication.base
         marker: Optional[Tuple[int, int]] = None
         if jrecords and jrecords[0][0] == _J_COMPACT:
             m_epoch, off = wire.decode_uvarint(jrecords[0][1], 0)
@@ -226,14 +273,16 @@ class Registry:
                         f"journal claims a compaction at replication head "
                         f"{marker[1]} but the snapshot only covers "
                         f"{snap_head}")
-                if marker[1] < snap_head:
+                if marker[1] < snap_base:
+                    stale = True   # predates the trim/bootstrap point
+                elif marker[1] < snap_head:
                     if not self._is_replication_tail(body):
                         raise JournalError(
                             "journal and snapshot disagree about the "
                             "records after the last compaction")
                     stale = True
             else:
-                stale = self._is_replication_tail(body)
+                stale = snap_base > 0 or self._is_replication_tail(body)
         if stale:
             # finish the interrupted truncation: later appends must land on
             # a clean post-compact journal, never after stale records
@@ -337,6 +386,10 @@ class Registry:
         fsynced and the commit is journaled before the receipt is returned.
         """
         t0 = time.perf_counter()
+        if self.read_only:
+            raise PushRejected(
+                f"push {lineage}:{tag}: registry is a read-only standby — "
+                f"push to the primary, or promote this replica first")
         if len(recipe.fps) != len(recipe.sizes):
             raise PushRejected(
                 f"push {lineage}:{tag}: recipe has {len(recipe.fps)} "
@@ -479,6 +532,10 @@ class Registry:
 
     # api-boundary
     def put_metadata(self, lineage: str, tag: str, blob: bytes) -> None:
+        if self.read_only:
+            raise PushRejected(
+                f"metadata write {lineage}:{tag}: registry is a read-only "
+                f"standby — write to the primary, or promote this replica")
         # write-ahead like receive_push: journal first, so a failed append
         # never leaves in-memory state a later compact() would resurrect
         raw = _wire().encode_record(_J_META, _encode_meta(lineage, tag, blob))
@@ -698,16 +755,29 @@ class Registry:
     def compact(self) -> None:
         """Write the current state as a snapshot and truncate the journal.
 
-        The snapshot is the replication epoch marker followed by the
-        **replication log's own records, in log order** — not a re-derived
-        state dump — so a restart rebuilds the log byte-identically and
-        every standby's resume offset stays valid across primary
-        compactions and restarts.  The deliberate trade: snapshot size (and
-        the in-memory log) grow with the epoch's *record history* rather
-        than its live state — re-written metadata keys keep their old
-        records until a version-dropping sweep rolls the epoch.  Trimming
-        the log below the minimum acked standby offset needs a snapshot
-        bootstrap path for fresh standbys first (see ROADMAP).
+        The snapshot has three sections, replayed in order by
+        ``_recover_record``:
+
+        1. the replication epoch marker, then the **collapsed state
+           records** (one commit per retained version plus current
+           metadata) — these rebuild the registry's state; the trimmed
+           record-history prefix no longer exists anywhere, so the state
+           must be self-contained;
+        2. a ``_J_TRIM`` marker carrying the log's trimmed ``base`` —
+           replay *resets* the replication log (wiping the state section's
+           feed) to an empty log based at that offset;
+        3. the **live log tail** (offsets ``base..head``), each raw record
+           wrapped in ``_J_TAIL`` so replay feeds it to the log verbatim
+           without re-applying state the collapsed section already covers.
+
+        A restart therefore rebuilds both the state and the log
+        byte-identically (base included), so every standby's resume offset
+        stays valid across primary compactions and restarts.  The log no
+        longer grows with the epoch's whole record history:
+        :meth:`trim_replication` drops the prefix every tracked replica
+        has acked, and fresh standbys join from :meth:`state_snapshot`
+        (``Op.SNAPSHOT_SHIP``) instead of offset 0 — closing the trade
+        this docstring used to document.
 
         Crash-safe in every window: the snapshot lands by atomic rename;
         the reset journal immediately receives a ``_J_COMPACT`` boundary
@@ -722,11 +792,123 @@ class Registry:
         epoch = self.replication.epoch
         head = self.replication.head()
         epoch_raw = wire.encode_record(_J_EPOCH, wire.encode_uvarint(epoch))
+        state_raws = [wire.encode_record(t, p)
+                      for t, p in self._state_records()]
+        trim_raw = wire.encode_record(
+            _J_TRIM, wire.encode_uvarint(self.replication.base))
+        tail_raws = [wire.encode_record(_J_TAIL, r)
+                     for r in self.replication.dump()]
         write_snapshot_raw(self._snap_path,
-                           [epoch_raw] + self.replication.dump())
+                           [epoch_raw] + state_raws + [trim_raw] + tail_raws)
+        faults.fire("compact.after_snapshot")
         self._journal.reset()
+        faults.fire("compact.before_marker")
         self._journal.append(_J_COMPACT, wire.encode_uvarint(epoch)
                              + wire.encode_uvarint(head))
+
+    def trim_replication(self, min_acked: int) -> int:
+        """Drop replication-log records below ``min_acked`` (the lowest
+        offset every tracked replica has acked — the serving frontend calls
+        this after recording each ack) and, when records were dropped,
+        persist the bounded log via :meth:`compact`.  Returns the number of
+        records dropped.
+
+        In-memory trim first, durable compact second: a crash between the
+        two recovers the *untrimmed* log from the previous snapshot — a
+        larger memory footprint until the next trim, never a lost record.
+        """
+        dropped = self.replication.trim_to(min_acked)
+        if dropped:
+            self._m_repl_trimmed.inc(dropped)
+            faults.fire("trim.before_compact")
+            if self._journal is not None:
+                self.compact()
+        self._m_repl_base.set(self.replication.base)
+        self._m_repl_records.set(self.replication.head()
+                                 - self.replication.base)
+        return dropped
+
+    def state_snapshot(self) -> Tuple[int, int, List[bytes]]:
+        """The collapsed current state as encoded checksummed records, plus
+        the replication position ``(epoch, head)`` it corresponds to — what
+        ``Op.SNAPSHOT_SHIP`` streams to a bootstrapping standby.
+
+        Collapsed means O(live state), not O(record history): one commit
+        record per retained version plus each metadata key's current value.
+        The caller must hold the serving lock so position and state agree.
+        """
+        wire = _wire()
+        epoch = self.replication.epoch
+        head = self.replication.head()
+        raws = [wire.encode_record(t, p) for t, p in self._state_records()]
+        return epoch, head, raws
+
+    # api-boundary
+    def bootstrap_from_snapshot(self, epoch: int, head: int,
+                                records: Sequence[Tuple[int, bytes, bytes]]
+                                ) -> int:
+        """Adopt a primary's collapsed state snapshot (standby bootstrap).
+
+        ``records`` are ``(rtype, payload, raw)`` triples as verified by
+        :func:`repro.delivery.wire.decode_record_frame`; ``(epoch, head)``
+        is the replication position the snapshot corresponds to — after
+        this returns, ordinary ``JOURNAL_SHIP`` resumes from ``head``.
+        Any chunk payloads the records reference must already be in the
+        store (the follower fetches them first, like ordinary replay).
+
+        Trust-but-reverify: before anything is persisted the records are
+        replayed into a scratch registry, re-verifying every commit's CDMT
+        root against its recipe — adopted state from a lying or corrupted
+        primary is rejected (:class:`JournalError`) with this registry
+        untouched.  Persistence is then strictly before installation: the
+        snapshot file lands atomically (epoch + state records + a
+        ``_J_TRIM`` marker at ``head``), the journal is reset behind a
+        ``_J_COMPACT`` marker, and only then is the verified state
+        installed in memory — so every crash window either recovers the
+        pre-bootstrap state (the bootstrap restarts idempotently) or the
+        complete post-bootstrap state, never a torn mixture.
+
+        Returns the number of state records adopted.
+        """
+        t0 = time.perf_counter()
+        wire = _wire()
+        # 1) re-verify into a scratch registry (same CDMT params): a bad
+        #    record is detected before any durable state changes
+        scratch = Registry(cdmt_params=self.cdmt_params)
+        for rtype, payload, _raw in records:
+            scratch._apply(rtype, payload)
+        raws = [raw for _t, _p, raw in records]
+        faults.fire("bootstrap.before_snapshot")
+        # 2) persist: recovery of this snapshot rebuilds exactly the state
+        #    installed below (records applied; log empty, based at head)
+        if self._journal is not None:
+            self.store.chunks.sync()   # referenced chunks durable first
+            epoch_raw = wire.encode_record(_J_EPOCH,
+                                           wire.encode_uvarint(epoch))
+            trim_raw = wire.encode_record(_J_TRIM,
+                                          wire.encode_uvarint(head))
+            write_snapshot_raw(self._snap_path,
+                               [epoch_raw] + raws + [trim_raw])
+            faults.fire("bootstrap.after_snapshot")
+            self._journal.reset()
+            faults.fire("bootstrap.before_marker")
+            self._journal.append(_J_COMPACT, wire.encode_uvarint(epoch)
+                                 + wire.encode_uvarint(head))
+        faults.fire("bootstrap.after_persist")
+        # 3) install: adopt the verified scratch state wholesale
+        self.lineages = scratch.lineages
+        self.recipes = scratch.recipes
+        self.metadata = scratch.metadata
+        self.store.recipes.clear()
+        self.store.recipes.update(scratch.store.recipes)
+        self.replication.reset_to(epoch, head)
+        self._m_repl_epoch.set(epoch)
+        self._m_repl_head.set(head)
+        self._m_repl_base.set(head)
+        self._m_repl_records.set(0)
+        self._m_bootstrap_bytes.inc(sum(len(r) for r in raws))
+        self._m_bootstrap.observe(time.perf_counter() - t0)
+        return len(raws)
 
     def journal_size_bytes(self) -> int:
         return self._journal.size_bytes() if self._journal is not None else 0

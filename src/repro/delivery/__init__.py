@@ -57,13 +57,14 @@ from .wire import (ErrorCode, FrameType, Op, WireError, decode_chunk_batch,
                    decode_info, decode_metrics, decode_missing,
                    decode_receipt, decode_recipe, decode_record_frame,
                    decode_repl_ack, decode_request, decode_response,
-                   decode_ship, decode_tag_list, decode_tags_request,
-                   decode_want, encode_chunk_batch, encode_error,
-                   encode_frame, encode_has, encode_index, encode_info,
-                   encode_metrics, encode_missing, encode_receipt,
-                   encode_recipe, encode_record_frame, encode_repl_ack,
-                   encode_request, encode_response, encode_ship,
-                   encode_tag_list, encode_tags_request, encode_want)
+                   decode_ship, decode_snapshot, decode_tag_list,
+                   decode_tags_request, decode_want, encode_chunk_batch,
+                   encode_error, encode_frame, encode_has, encode_index,
+                   encode_info, encode_metrics, encode_missing,
+                   encode_receipt, encode_recipe, encode_record_frame,
+                   encode_repl_ack, encode_request, encode_response,
+                   encode_ship, encode_snapshot, encode_tag_list,
+                   encode_tags_request, encode_want)
 
 __all__ = [
     "CacheStats", "TieredChunkCache",
@@ -93,6 +94,7 @@ __all__ = [
     "encode_info", "decode_info",
     "encode_metrics", "decode_metrics",
     "encode_ship", "decode_ship",
+    "encode_snapshot", "decode_snapshot",
     "encode_record_frame", "decode_record_frame",
     "encode_repl_ack", "decode_repl_ack",
     "encode_request", "decode_request",

@@ -429,20 +429,22 @@ class AsyncRegistryServer:
         t0 = time.perf_counter()
         streamed = False
         try:
-            if op is wire.Op.WANT:
+            if op in (wire.Op.WANT, wire.Op.SNAPSHOT_SHIP):
                 if len(frames) != 1:
                     raise wire.WireError(
-                        f"WANT request carries {len(frames)} body "
+                        f"{op.name} request carries {len(frames)} body "
                         f"frame(s), expected 1")
-                n, frame_iter = await self._run(self.server.want_plan,
-                                                frames[0])
+                plan = (self.server.want_plan if op is wire.Op.WANT
+                        else self.server.snapshot_plan)
+                n, frame_iter = await self._run(plan, frames[0])
                 await self._send(conn, wire.encode_mux_response_header(
                     sid, wire.STATUS_OK, n))
                 streamed = True              # header out: count committed
                 try:
                     while True:
-                        # one CHUNK_BATCH per pool job: a huge WANT shares
-                        # the workers (and the socket) at frame granularity
+                        # one frame per pool job: a huge WANT (or snapshot
+                        # bootstrap) shares the workers — and the socket —
+                        # at frame granularity
                         f = await self._run(next, frame_iter, _DONE)
                         if f is _DONE:
                             break
@@ -994,6 +996,19 @@ class MuxSocketTransport:
     def replication_status(self) -> Tuple[int, int]:
         epoch, head, _ = self.ship_journal("", 0, 0, 0)
         return epoch, head
+
+    def fetch_snapshot(self, replica: str = "standby"
+                       ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """One SNAPSHOT_SHIP exchange: the compacted state snapshot,
+        streamed through the mux like a WANT response."""
+        _, frames, _ = self._exchange(
+            wire.Op.SNAPSHOT_SHIP, "", "",
+            [wire.encode_snapshot(replica, 0, 0)])
+        if not frames:
+            raise wire.WireError("SNAPSHOT_SHIP response carried no frames")
+        _, epoch, head = wire.decode_snapshot(frames[0])
+        return epoch, head, [wire.decode_record_frame(f)
+                             for f in frames[1:]]
 
     # -------------------------------------------------------------- quoting
 

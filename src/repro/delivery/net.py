@@ -72,6 +72,7 @@ import threading
 import time
 from typing import BinaryIO, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import faults
 from repro.core.cdmt import CDMT, CDMTParams
 from repro.core.errors import DeliveryError, JournalError
 from repro.core.registry import PushRejected, Registry, record_chunk_fps
@@ -394,6 +395,18 @@ class SocketRegistryServer:
             if op is wire.Op.WANT:
                 self._expect_frames(op, frames, 1)
                 n, frame_iter = self.server.want_plan(frames[0])
+                self._send(conn, wire.encode_response_header(
+                    wire.STATUS_OK, n))
+                streamed = True              # header out: count is committed
+                for f in frame_iter:
+                    self._send(conn, wire.encode_uvarint(len(f)) + f)
+                return
+            if op is wire.Op.SNAPSHOT_SHIP:
+                # streamed like WANT: the frame count is known up front
+                # (header + one RECORD per collapsed state record), so the
+                # server's record encode overlaps the standby's decode
+                self._expect_frames(op, frames, 1)
+                n, frame_iter = self.server.snapshot_plan(frames[0])
                 self._send(conn, wire.encode_response_header(
                     wire.STATUS_OK, n))
                 streamed = True              # header out: count is committed
@@ -861,6 +874,22 @@ class SocketTransport:
         epoch, head, _ = self.ship_journal("", 0, 0, 0)
         return epoch, head
 
+    def fetch_snapshot(self, replica: str = "standby"
+                       ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """One SNAPSHOT_SHIP exchange: the primary's collapsed state as
+        ``(epoch, head, (rtype, payload, raw) records)``, streamed frame
+        by frame like WANT.  Every record is checksum-verified on decode
+        before anything is returned — a torn snapshot stream raises
+        :class:`WireError`, nothing half-verified reaches bootstrap."""
+        _, frames, _ = self._exchange(
+            wire.Op.SNAPSHOT_SHIP, "", "",
+            [wire.encode_snapshot(replica, 0, 0)])
+        if not frames:
+            raise wire.WireError("SNAPSHOT_SHIP response carried no frames")
+        _, epoch, head = wire.decode_snapshot(frames[0])
+        return epoch, head, [wire.decode_record_frame(f)
+                             for f in frames[1:]]
+
     # -------------------------------------------------------------- quoting
 
     def quote_chunk_batches(self, sizes: Sequence[int]) -> int:
@@ -873,6 +902,20 @@ class SocketTransport:
 
 
 # ------------------------------------------------------------- replication
+
+
+def _resync_needed(e: BaseException) -> bool:
+    """True when the primary's answer means ordinary replay can never
+    succeed and a snapshot bootstrap is the prescribed recovery: an epoch
+    mismatch (GC sweep rolled the log) or a resume offset behind the
+    trimmed log base.  Divergence — the standby *ahead* of the primary's
+    head — is deliberately excluded: wiping a standby that holds records
+    the primary lost is an operator decision, never automatic."""
+    msg = str(e)
+    if "diverged" in msg:
+        return False
+    return ("epoch mismatch" in msg or "full resync" in msg
+            or "full-resync" in msg or "behind the log base" in msg)
 
 
 class JournalFollower:
@@ -899,22 +942,42 @@ class JournalFollower:
 
     A record whose checksum fails decodes as :class:`WireError` *before*
     step 2 — a torn ship never half-applies.  :meth:`follow` runs
-    :meth:`sync_once` in a daemon thread, absorbing transport and
-    divergence errors (primary temporarily down, epoch rolled by a GC
-    sweep) into ``last_error`` and retrying; an epoch mismatch persists in
-    ``last_error`` until the operator full-resyncs the standby from an
-    empty directory.
+    :meth:`catch_up` in a daemon thread, absorbing transport and
+    divergence errors (primary temporarily down, split-brain) into
+    ``last_error`` and retrying.
+
+    Role model: attaching a follower marks the standby registry
+    **read-only** (``receive_push`` / ``put_metadata`` raise
+    :class:`PushRejected` — writes belong on the primary); the operator
+    action :meth:`promote` stops following and lifts the flag.  When
+    ordinary replay is impossible — the primary's epoch rolled (GC
+    sweep), or the standby's resume offset fell behind the primary's
+    trimmed log base — :meth:`catch_up` performs an automated
+    **wipe-and-resync**: fetch the primary's collapsed state over
+    ``Op.SNAPSHOT_SHIP`` (:meth:`bootstrap_from_primary`), adopt it
+    wholesale, and resume ordinary shipping from the snapshot's offset.
+    ``auto_resync=False`` restores the old refuse-and-stall behavior
+    (``last_error`` persists until the operator intervenes); either way
+    every detected epoch mismatch increments
+    ``replication_epoch_mismatch_total``.  :meth:`sync_once` itself still
+    raises on mismatch — resync is a follower policy, not a transport
+    behavior.
     """
 
     def __init__(self, registry: Registry, primary, name: str = "standby",
                  batch_records: int = 512, chunk_batch: int = 64,
-                 poll_interval: float = 0.2):
+                 poll_interval: float = 0.2, auto_resync: bool = True):
         self.registry = registry
         self.primary = primary
         self.name = name
         self.batch_records = max(1, batch_records)
         self.chunk_batch = max(1, chunk_batch)
         self.poll_interval = poll_interval
+        self.auto_resync = auto_resync
+        # attaching a follower defines the registry's role: a standby is
+        # read-only until promoted (writes route to the primary and arrive
+        # here as shipped records)
+        registry.read_only = True
         self.records_applied = 0    # guarded-by: external(applier thread is the only writer; racy reads are progress hints)
         self.duplicates_skipped = 0  # guarded-by: external(applier thread is the only writer)
         self.chunks_fetched = 0     # guarded-by: external(applier thread is the only writer)
@@ -935,6 +998,13 @@ class JournalFollower:
         self._m_chunks = m.counter(
             "replication_chunks_fetched_total",
             "chunk payloads backfilled over WANT before replay").labels()
+        self._m_epoch_mismatch = m.counter(
+            "replication_epoch_mismatch_total",
+            "ships refused because the primary's epoch rolled").labels()
+        self._m_bootstraps = m.counter(
+            "replication_bootstraps_total",
+            "snapshot bootstraps performed (fresh join or "
+            "wipe-and-resync)").labels()
 
     # ----------------------------------------------------------------- sync
 
@@ -976,6 +1046,58 @@ class JournalFollower:
             self.primary.ack_journal(self.name, epoch, new_head)
             if new_head >= head:
                 return applied
+
+    def catch_up(self) -> int:
+        """:meth:`sync_once`, falling back to a snapshot bootstrap when
+        ordinary replay is impossible: the primary refused the ship (its
+        epoch rolled past ours) or the resume offset fell behind its
+        trimmed log base.  Returns records applied (bootstrap state
+        records included).  With ``auto_resync=False`` the error re-raises
+        untouched — the historical refuse-and-stall behavior — but the
+        epoch-mismatch counter ticks either way, so a stalled standby is
+        visible on any metrics scrape."""
+        try:
+            return self.sync_once()
+        except (DeliveryError, JournalError) as e:
+            if "epoch mismatch" in str(e):
+                self._m_epoch_mismatch.inc()
+            if not (self.auto_resync and _resync_needed(e)):
+                raise
+            applied = self.bootstrap_from_primary()
+            # resume ordinary shipping from the snapshot's offset — records
+            # the primary committed while the snapshot streamed
+            return applied + self.sync_once()
+
+    def bootstrap_from_primary(self) -> int:
+        """Wipe-and-resync from the primary's collapsed state snapshot.
+
+        One ``SNAPSHOT_SHIP`` fetch (checksum-verified on decode), then
+        referenced chunk payloads over the ordinary WANT path, then
+        :meth:`Registry.bootstrap_from_snapshot` — which re-verifies every
+        commit into a scratch registry and persists before installing, so
+        a crash at any point either leaves the old state recoverable or
+        the bootstrap restarts idempotently.  Finally the snapshot's
+        ``head`` is acked so the primary tracks this replica from the
+        resume offset on.  Returns the number of state records adopted.
+        """
+        faults.fire("follower.before_bootstrap")
+        epoch, head, records = self.primary.fetch_snapshot(self.name)
+        for i, (rtype, payload, _raw) in enumerate(records):
+            self._fetch_referenced_chunks(i, rtype, payload)
+        applied = self.registry.bootstrap_from_snapshot(epoch, head, records)
+        self.records_applied += applied
+        self._m_applied.inc(applied)
+        self._m_bootstraps.inc()
+        faults.fire("follower.before_ack")
+        self.primary.ack_journal(self.name, epoch, head)
+        return applied
+
+    def promote(self) -> None:
+        """Operator action: stop following and lift the standby's
+        read-only flag — this registry now accepts writes directly (the
+        failover counterpart of attaching the follower)."""
+        self.stop()
+        self.registry.read_only = False
 
     def _fetch_referenced_chunks(self, seq: int, rtype: int,
                                  payload: bytes) -> None:
@@ -1031,7 +1153,7 @@ class JournalFollower:
             def loop():
                 while not stop.is_set():
                     try:
-                        self.sync_once()
+                        self.catch_up()
                         self.last_error = None
                     except (DeliveryError, wire.WireError, JournalError,
                             OSError) as e:

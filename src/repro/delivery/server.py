@@ -54,7 +54,7 @@ from .cache import DEFAULT_CAPACITY, TieredChunkCache
 
 # every request op the frontend answers (labels of registry_requests_total)
 _OPS = ("index", "recipe", "want", "has", "tags", "ship", "repl_ack",
-        "push", "metrics")
+        "push", "metrics", "snapshot")
 
 
 @dataclasses.dataclass
@@ -69,6 +69,7 @@ class ServerStats:
     ship_requests: int = 0         # JOURNAL_SHIP requests answered
     records_shipped: int = 0       # journal records streamed to standbys
     repl_acks: int = 0             # REPL_ACK progress reports received
+    snapshot_requests: int = 0     # SNAPSHOT_SHIP bootstrap streams served
     chunks_served: int = 0
     chunk_bytes_served: int = 0
     store_reads: int = 0           # chunk reads that reached cache/store
@@ -359,12 +360,54 @@ class RegistryServer:
                 if epoch == log.epoch:
                     self.replica_offsets[replica] = offset
                     self._m_lag.labels(replica).set(max(0, head - offset))
+                    # every tracked replica has applied everything below the
+                    # minimum acked offset: trim the log prefix so in-epoch
+                    # memory is bounded by the slowest replica's lag, not by
+                    # history (a fresh standby joins via SNAPSHOT_SHIP, so
+                    # nothing ever needs the trimmed records again)
+                    self.registry.trim_replication(
+                        min(self.replica_offsets.values()))
                 else:
                     self.replica_offsets.pop(replica, None)
                 resp = wire.encode_repl_ack(replica, log.epoch, head)
             self._m_ingress.inc(len(ack_frame))
             self._m_egress.inc(len(resp))
             return resp
+
+    # api-boundary
+    def handle_snapshot(self, snapshot_frame: bytes) -> List[bytes]:
+        """Answer a SNAPSHOT_SHIP bootstrap request in one buffer — the
+        non-streaming form of :meth:`snapshot_plan`."""
+        _, frames = self.snapshot_plan(snapshot_frame)
+        return list(frames)
+
+    # api-boundary
+    def snapshot_plan(self, snapshot_frame: bytes
+                      ) -> Tuple[int, Iterable[bytes]]:
+        """``(n_frames, frame iterator)`` for one SNAPSHOT_SHIP request —
+        the streaming form, mirroring :meth:`want_plan`: one SNAPSHOT
+        header frame (the primary's epoch + the resume offset the shipped
+        state corresponds to) followed by one RECORD frame per collapsed
+        state record.  The frame count is committed before streaming; the
+        state records are materialized under the registry lock (they are
+        KB-sized, like the index) so the stream itself holds no lock."""
+        replica, _epoch, _offset = wire.decode_snapshot(snapshot_frame)
+        self._m_ingress.inc(len(snapshot_frame))
+        with self._registry_lock:
+            epoch, head, raws = self.registry.state_snapshot()
+        return 1 + len(raws), self._snapshot_frames(epoch, head, raws)
+
+    def _snapshot_frames(self, epoch: int, head: int,
+                         raws: Sequence[bytes]) -> Iterable[bytes]:
+        with self._track("snapshot"):
+            header = wire.encode_snapshot("", epoch, head)
+            self._m_egress.inc(len(header))
+            yield header
+            for raw in raws:
+                frame = wire.encode_record_frame(raw)
+                self._m_egress.inc(len(frame))
+                self._m_records_shipped.inc()
+                yield frame
 
     def _read_chunk(self, fp: bytes) -> Optional[bytes]:
         """Cache/store read with request coalescing."""
@@ -463,6 +506,7 @@ class RegistryServer:
             ship_requests=self._m_req["ship"].value(),
             records_shipped=self._m_records_shipped.value(),
             repl_acks=self._m_req["repl_ack"].value(),
+            snapshot_requests=self._m_req["snapshot"].value(),
             chunks_served=self._m_chunks.value(),
             chunk_bytes_served=self._m_chunk_bytes.value(),
             store_reads=self._m_store_reads.value(),

@@ -260,6 +260,19 @@ class LocalTransport:
         log = self.registry.replication
         return log.epoch, log.head()
 
+    def fetch_snapshot(self, replica: str = "standby"
+                       ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """In-process SNAPSHOT_SHIP: the registry's collapsed state as
+        ``(epoch, head, (rtype, payload, raw) records)`` — what a fresh
+        standby bootstraps from instead of replaying history from offset
+        0 (which a trimmed replication log no longer holds)."""
+        epoch, head, raws = self.registry.state_snapshot()
+        records = []
+        for raw in raws:
+            rtype, payload, _ = wire.decode_record(raw, 0)
+            records.append((rtype, payload, raw))
+        return epoch, head, records
+
 
 # ----------------------------------------------------------------------- wire
 
@@ -405,6 +418,17 @@ class WireTransport:
     def replication_status(self) -> Tuple[int, int]:
         epoch, head, _ = self.ship_journal("", 0, 0, 0)
         return epoch, head
+
+    def fetch_snapshot(self, replica: str = "standby"
+                       ) -> Tuple[int, int, List[Tuple[int, bytes, bytes]]]:
+        """In-process SNAPSHOT_SHIP (same frames the socket path streams):
+        one SNAPSHOT header carrying the primary's ``(epoch, head)``
+        resume position, then checksum-verified state records."""
+        frames = self.server.handle_snapshot(
+            wire.encode_snapshot(replica, 0, 0))
+        _, epoch, head = wire.decode_snapshot(frames[0])
+        return epoch, head, [wire.decode_record_frame(f)
+                             for f in frames[1:]]
 
 
 # ---------------------------------------------------------------------- swarm
@@ -891,10 +915,20 @@ class ReplicatedTransport:
 
     # -------------------------------------------------------------- quoting
 
-    def quote_chunk_batches(self, sizes: Sequence[int]) -> int:
-        """Quote via the primary's framing.  Exact when every replica
-        serves the same response batch split (deploy them that way)."""
-        t = self.primary_transport
+    def quote_chunk_batches(self, sizes: Sequence[int],
+                            replica: Optional[int] = None) -> int:
+        """Quote via one replica's framing — the primary by default,
+        ``replica`` (an index into ``replicas``) to quote a specific
+        standby's response split.  Exact when every replica serves the
+        same response batch split (deploy them that way); the per-replica
+        form lets a planner verify that assumption against each standby
+        (a snapshot-bootstrapped one included) instead of trusting it."""
+        if replica is None:
+            t = self.primary_transport
+        else:
+            if not 0 <= replica < len(self.replicas):
+                raise ValueError(f"replica index {replica} out of range")
+            t = self.replicas[replica]
         quote = getattr(t, "quote_chunk_batches", None)
         if quote is not None:
             return quote(sizes)

@@ -41,6 +41,12 @@ frame types, each ``MAGIC | version | type | uvarint(len) | payload``:
                    ``repro.obs.MetricsSnapshot`` shape, so any client can
                    read a server's counters/gauges/histograms over the
                    same socket that moves chunks.
+  ``SNAPSHOT``     a snapshot-bootstrap position: replica name, epoch,
+                   resume offset.  Sent by a fresh standby to request a
+                   compacted state snapshot, and returned by the primary as
+                   the stream header announcing the epoch and the offset
+                   ordinary ``JOURNAL_SHIP`` resumes from; the snapshot's
+                   state records follow as ``RECORD`` frames.
 
 All decoders raise :class:`WireError` on truncation, bad magic, trailing
 garbage, or fingerprint mismatch — never a bare ``IndexError``/``KeyError``.
@@ -96,6 +102,7 @@ class FrameType(enum.IntEnum):
     RECORD = 14
     REPL_ACK = 15
     METRICS = 16
+    SNAPSHOT = 17
 
 
 class Op(enum.IntEnum):
@@ -111,6 +118,8 @@ class Op(enum.IntEnum):
     JOURNAL_SHIP = 9   # SHIP frame -> REPL_ACK frame + RECORD frames
     REPL_ACK = 10      # REPL_ACK frame -> REPL_ACK frame (primary's head)
     METRICS = 11       # -> METRICS frame (JSON metrics snapshot)
+    SNAPSHOT_SHIP = 12  # SNAPSHOT frame -> SNAPSHOT frame + RECORD frames
+                        # (streamed compacted state; standby bootstrap)
 
 
 class ErrorCode(enum.IntEnum):
@@ -692,6 +701,34 @@ def decode_repl_ack(buf: bytes) -> Tuple[str, int, int]:
     offset, off = decode_uvarint(payload, off)
     if off != len(payload):
         raise WireError("trailing bytes in REPL_ACK payload")
+    return replica, epoch, offset
+
+
+# ---------------------------------------------------------------- SNAPSHOT
+#
+# Snapshot bootstrap (fresh standby joins without replaying history).  A
+# SNAPSHOT_SHIP request carries one SNAPSHOT frame naming the replica (epoch
+# and offset are 0 — the standby knows nothing yet); the answer is one
+# SNAPSHOT frame (the primary's epoch and the log-head offset the shipped
+# state corresponds to) followed by RECORD frames wrapping the primary's
+# collapsed state records.  After applying them, the standby resumes
+# ordinary JOURNAL_SHIP from the header's offset.
+
+def encode_snapshot(replica: str, epoch: int, offset: int) -> bytes:
+    return encode_frame(FrameType.SNAPSHOT,
+                        _encode_str(replica) + encode_uvarint(epoch)
+                        + encode_uvarint(offset))
+
+
+def decode_snapshot(buf: bytes) -> Tuple[str, int, int]:
+    """``(replica, epoch, offset)`` — the requesting standby's name (request
+    direction) or the primary's epoch + resume offset (response header)."""
+    payload = _decode_single(buf, FrameType.SNAPSHOT)
+    replica, off = _decode_str(payload, 0, "snapshot replica")
+    epoch, off = decode_uvarint(payload, off)
+    offset, off = decode_uvarint(payload, off)
+    if off != len(payload):
+        raise WireError("trailing bytes in SNAPSHOT payload")
     return replica, epoch, offset
 
 

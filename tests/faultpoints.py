@@ -1,0 +1,85 @@
+"""Crash-point fault-injection harness for durability tests.
+
+``repro.core.faults`` plants named fire points inside the registry's
+crash-ordering windows (snapshot rename vs journal reset, trim vs
+compact, bootstrap persist vs install).  This harness arms a point with a
+hook that raises :class:`CrashPoint` — simulating a process death at
+exactly that boundary — and guarantees disarm on exit, so one test's
+crash never leaks into the next.
+
+Usage::
+
+    with crash_at("compact.after_snapshot"):
+        with pytest.raises(CrashPoint):
+            reg.compact()
+    # the "process" died between the snapshot rename and the journal
+    # reset; reopen the directory and assert recovery
+
+``CRASH_POINTS`` is the catalog of every planted point, so a kill-matrix
+test can parametrize over all of them and fail loudly if a new point is
+planted without coverage (see ``test_replication.py::TestCrashMatrix``).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from repro.core import faults
+
+__all__ = ["CRASH_POINTS", "CrashPoint", "crash_at", "crash_after"]
+
+# every faults.fire() site in the tree, in execution order per path
+CRASH_POINTS = (
+    # primary: trim -> compact
+    "trim.before_compact",          # trimmed in memory, nothing durable yet
+    # primary/standby: compact()
+    "compact.after_snapshot",       # snapshot renamed, journal not reset
+    "compact.before_marker",        # journal reset, no _J_COMPACT marker yet
+    # standby: bootstrap_from_snapshot()
+    "bootstrap.before_snapshot",    # verified in scratch, nothing persisted
+    "bootstrap.after_snapshot",     # snapshot renamed, journal not reset
+    "bootstrap.before_marker",      # journal reset, no marker yet
+    "bootstrap.after_persist",      # durable, in-memory state not installed
+    # follower: bootstrap_from_primary()
+    "follower.before_bootstrap",    # resync decided, snapshot not fetched
+    "follower.before_ack",          # bootstrap installed, head not acked
+)
+
+
+class CrashPoint(Exception):
+    """Raised by an armed fault hook — the simulated process death."""
+
+    def __init__(self, point: str):
+        super().__init__(f"injected crash at fault point {point!r}")
+        self.point = point
+
+
+@contextmanager
+def crash_at(point: str):
+    """Arm ``point`` to raise :class:`CrashPoint` the first time it fires;
+    disarmed on exit no matter how the body ends."""
+    def die():
+        raise CrashPoint(point)
+    faults.arm(point, die)
+    try:
+        yield
+    finally:
+        faults.disarm(point)
+
+
+@contextmanager
+def crash_after(point: str, n: int):
+    """Arm ``point`` to raise on its ``n``-th firing (0-based) — for
+    points that fire once per call on a path crossed repeatedly."""
+    seen = {"count": 0}
+
+    def maybe_die():
+        hit = seen["count"]
+        seen["count"] += 1
+        if hit == n:
+            raise CrashPoint(point)
+    faults.arm(point, maybe_die)
+    try:
+        yield
+    finally:
+        faults.disarm(point)

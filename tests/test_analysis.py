@@ -479,8 +479,8 @@ class TestDurability:
         findings, stats = durability.check_files(scan_paths())
         assert findings == []
         assert stats["replace_sites"] >= 5
-        assert stats["commit_paths"] == 2
-        assert stats["journaled_paths"] == 3
+        assert stats["commit_paths"] == 3
+        assert stats["journaled_paths"] == 4
 
     def test_broken_fixture_findings_carry_file_and_line(self):
         fixture = os.path.join(FIXTURES, "durability_broken.py")

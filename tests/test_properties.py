@@ -154,3 +154,97 @@ def test_property_truncated_batch_always_raises(blobs, cut_frac):
     cut = int(len(frame) * cut_frac)
     with pytest.raises(wire.WireError):
         wire.decode_chunk_batch(frame[:cut])
+
+
+# -------------------------------------------------------- replication log
+
+from repro.core.errors import JournalError  # noqa: E402
+from repro.core.journal import ReplicationLog  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.one_of(
+    st.tuples(st.just("append"), st.binary(max_size=48)),
+    st.tuples(st.just("ack"), st.sampled_from(["a", "b", "c"]),
+              st.floats(0.0, 1.0)),
+), max_size=60))
+def test_property_trim_never_loses_unacked_records(ops):
+    """The primary's trim discipline: after any interleaving of appends
+    and replica acks (trim to ``min(replica_offsets)``), every record at
+    or past the lowest acked offset is still servable byte-identically,
+    and the base never overtakes the slowest replica."""
+    log = ReplicationLog()
+    shadow = []                       # every record ever appended, by offset
+    acked = {}                        # replica -> monotonic acked offset
+    for op in ops:
+        if op[0] == "append":
+            off = log.append(1, op[1])
+            assert off == len(shadow)          # offsets dense, never reissued
+            shadow.append(wire.encode_record(1, op[1]))
+        else:
+            _, replica, frac = op
+            # a replica's ack is an offset it really synced to: at or past
+            # the base (ships below the base are refused — it would have
+            # bootstrapped at the head instead), monotonic per replica
+            base, head = log.base, log.head()
+            acked[replica] = max(acked.get(replica, 0),
+                                 base + int(frac * (head - base)))
+            log.trim_to(min(acked.values()))
+        assert log.base <= log.head()
+        lo = min(acked.values()) if acked else 0
+        assert log.base <= lo or not acked     # slowest replica pins the log
+        start = max(lo, log.base)
+        assert log.records_from(start) == shadow[start:]
+        assert log.records_from(log.head()) == []   # caught up == empty
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.one_of(
+    st.tuples(st.just("append"), st.binary(max_size=32)),
+    st.tuples(st.just("trim"), st.integers(0, 200)),
+), max_size=60))
+def test_property_offsets_monotonic_never_reissued(ops):
+    """Heads and bases only advance — trims included, even a bootstrap
+    trim past the current head — so no offset is ever assigned twice."""
+    log = ReplicationLog()
+    last_off = -1
+    for op in ops:
+        head_before, base_before = log.head(), log.base
+        if op[0] == "append":
+            off = log.append(2, op[1])
+            assert off == head_before          # the next offset, exactly
+            assert off > last_off              # strictly increasing forever
+            last_off = off
+            assert log.head() == head_before + 1
+        else:
+            dropped = log.trim_to(op[1])
+            assert log.base == max(base_before, op[1])
+            assert log.head() == max(head_before, op[1])
+            assert dropped == min(op[1], head_before) - base_before \
+                if op[1] > base_before else dropped == 0
+        assert log.head() >= head_before and log.base >= base_before
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(0, 30), t=st.integers(0, 40), probe=st.integers(0, 60))
+def test_property_records_from_contract(n, t, probe):
+    """Reads below the trimmed base demand a full resync, reads past the
+    head are a divergence, and everything in between is an exact
+    byte-identical slice."""
+    log = ReplicationLog()
+    raws = []
+    for i in range(n):
+        payload = bytes([i])
+        log.append(3, payload)
+        raws.append(wire.encode_record(3, payload))
+    log.trim_to(t)
+    base, head = log.base, log.head()
+    if probe < base:
+        with pytest.raises(JournalError, match="behind the log base"):
+            log.records_from(probe)
+    elif probe > head:
+        with pytest.raises(JournalError, match="diverged"):
+            log.records_from(probe)
+    else:
+        assert log.records_from(probe) == raws[probe:]
+        assert log.records_from(probe, limit=1) == raws[probe:probe + 1]

@@ -24,7 +24,8 @@ from repro.core import cdc
 from repro.core.cdmt import CDMTParams
 from repro.core.errors import DeliveryError, JournalError
 from repro.core.journal import ReplicationLog
-from repro.core.registry import Registry, record_chunk_fps
+from repro.core.registry import PushRejected, Registry, record_chunk_fps
+from faultpoints import CRASH_POINTS, CrashPoint, crash_at
 from repro.delivery import (ImageClient, JournalFollower, LocalTransport,
                             RegistryServer, ReplicatedTransport,
                             SocketRegistryServer, SocketTransport,
@@ -341,9 +342,11 @@ class TestJournalFollower:
         reg = _seed_registry(versions)
         sreg = Registry(cdmt_params=P)
         fol = JournalFollower(sreg, WireTransport(RegistryServer(reg)))
+        # capture record 0 before the follower acks: once every tracked
+        # replica has acked past it, the primary trims it away
+        raw = reg.replication.records_from(0, 1)[0]
         fol.sync_once()
         n_versions = len(sreg.tags("app"))
-        raw = reg.replication.records_from(0, 1)[0]
         rtype, payload, _ = wire.decode_record(raw, 0)
         assert sreg.apply_replicated(rtype, payload, expected_seq=0) is False
         assert len(sreg.tags("app")) == n_versions
@@ -370,11 +373,10 @@ class TestJournalFollower:
         os.makedirs(sdir)
         sreg = Registry(directory=sdir, cdmt_params=P)
         fol = JournalFollower(sreg, WireTransport(srv), name="s0")
+        # capture record 3 before the follower acks (the ack trims the log)
+        raw = reg.replication.records_from(3, 1)[0]
         fol.sync_once()
         assert sreg.replication.head() == 4
-        # simulate the crash: append half of the *next* record (a re-ship of
-        # record 3 whose first attempt tore) to the standby journal
-        raw = reg.replication.records_from(3, 1)[0]
         with open(os.path.join(sdir, "registry.journal"), "ab") as f:
             f.write(raw[:len(raw) // 2])
         sreg.close()
@@ -578,7 +580,9 @@ def _replicated_stack(versions, n_standbys=2, batch_chunks=16):
     standby_regs = []
     for i in range(n_standbys):
         sreg = Registry(cdmt_params=P)
-        JournalFollower(sreg, primary_wire, name=f"s{i}").sync_once()
+        # the first standby's ack trims the log, so later standbys join
+        # via snapshot bootstrap — catch_up picks the right path
+        JournalFollower(sreg, primary_wire, name=f"s{i}").catch_up()
         standby_regs.append(sreg)
         servers.append(SocketRegistryServer(RegistryServer(sreg)))
     transports = [SocketTransport(s.address) for s in servers]
@@ -715,3 +719,266 @@ class TestReplicatedTransport:
             _assert_registries_equal(reg, standby_regs[0])
         finally:
             _teardown(servers, transports)
+
+
+# ---------------------------------------------- snapshot bootstrap and trim
+
+
+class TestSnapshotBootstrap:
+    """The bounded log: acks trim the replication log below the lowest
+    tracked replica offset; fresh standbys join from the collapsed state
+    snapshot (``Op.SNAPSHOT_SHIP``) instead of replaying offset 0; an
+    epoch roll wipe-and-resyncs automatically instead of stalling."""
+
+    def test_acks_trim_log_to_lowest_replica_offset(self):
+        versions = _versions(3, seed=70)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        head = reg.replication.head()
+        t.ack_journal("slow", 0, 1)
+        assert reg.replication.base == 1            # min over {slow: 1}
+        t.ack_journal("fast", 0, head)
+        assert reg.replication.base == 1            # slow pins the log
+        assert srv.replica_offsets == {"slow": 1, "fast": head}
+        assert reg.replication.base == min(srv.replica_offsets.values())
+        t.ack_journal("slow", 0, head)
+        assert reg.replication.base == head         # everyone acked: empty
+        assert reg.replication.dump() == []
+        assert reg.replication.head() == head       # offsets never reissued
+        snap = reg.metrics.snapshot()
+        assert snap.value("replication_log_trimmed_total", {}) == head
+        assert snap.value("replication_log_base", {}) == head
+        assert snap.value("replication_log_records", {}) == 0
+
+    def test_fresh_standby_joins_via_snapshot_not_history(self):
+        versions = _versions(4, seed=71)
+        reg = _seed_registry(versions)
+        for i in range(10):                    # metadata churn: 10 records
+            reg.put_metadata("app", "v0", b"m%d" % i)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        head = reg.replication.head()
+        t.ack_journal("s0", 0, head)           # every record acked: trimmed
+        assert reg.replication.base == head
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, t, name="s1")
+        applied = fol.catch_up()
+        # collapsed state: one commit per version plus the *current*
+        # metadata value — not the 14-record history
+        assert applied == len(versions) + 1 < head
+        assert srv.snapshot().snapshot_requests == 1
+        assert fol.records_applied == applied
+        _assert_registries_equal(reg, sreg)
+        assert sreg.metadata[("app", "v0")] == b"m9"
+        assert sreg.replication.head() == head  # resumes from the offset
+        assert srv.replica_offsets["s1"] == head
+        # later pushes ship incrementally — no second bootstrap
+        pub = ImageClient(LocalTransport(reg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.pull("app", "v3")
+        pub.commit("app", "v4", versions[3] + _rand(2_000, seed=72))
+        pub.push("app", "v4")
+        assert fol.catch_up() == 1
+        assert fol._m_bootstraps.value() == 1
+        _assert_registries_equal(reg, sreg)
+
+    def test_standby_read_only_until_promoted(self):
+        versions = _versions(2, seed=73)
+        reg = _seed_registry(versions)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(RegistryServer(reg)),
+                              name="s0")
+        fol.catch_up()
+        pub = ImageClient(LocalTransport(sreg), cdc_params=PARAMS,
+                          cdmt_params=P)
+        pub.commit("app", "v2", _rand(40_000, seed=74))
+        with pytest.raises(PushRejected):
+            pub.push("app", "v2")
+        with pytest.raises(PushRejected):
+            sreg.put_metadata("app", "v1", b"m")
+        assert sreg.tags("app") == ["v0", "v1"]    # nothing landed
+        fol.promote()
+        pub.push("app", "v2")                  # accepted after promotion
+        assert sreg.tags("app") == ["v0", "v1", "v2"]
+
+    def test_epoch_roll_triggers_automatic_wipe_and_resync(self):
+        versions = _versions(3, seed=75)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), name="s0")
+        fol.sync_once()
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)   # epoch 0 -> 1
+        applied = fol.catch_up()               # no operator intervention
+        assert applied >= 1
+        assert fol._m_bootstraps.value() == 1
+        assert fol._m_epoch_mismatch.value() == 1
+        assert sreg.replication.epoch == 1
+        assert sreg.tags("app") == ["v2"]
+        _assert_registries_equal(reg, sreg)
+
+    def test_auto_resync_off_stalls_visibly(self):
+        """Regression pin for the historical behavior: with
+        ``auto_resync=False`` an epoch roll leaves the follower stalled —
+        a typed ``DeliveryError`` in ``last_error``, nothing wiped, the
+        mismatch counter visible on a scrape — until an operator flips
+        resync back on."""
+        import time
+        versions = _versions(3, seed=76)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        sreg = Registry(cdmt_params=P)
+        fol = JournalFollower(sreg, WireTransport(srv), name="s0",
+                              poll_interval=0.01, auto_resync=False)
+        fol.sync_once()
+        head_before = sreg.replication.head()
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)
+        fol.follow()
+        try:
+            deadline = 250
+            while fol.last_error is None and deadline:
+                time.sleep(0.02)
+                deadline -= 1
+            assert isinstance(fol.last_error, DeliveryError)
+            assert "epoch mismatch" in str(fol.last_error)
+            assert sreg.replication.head() == head_before  # nothing wiped
+            assert sreg.tags("app") == ["v0", "v1", "v2"]
+            snap = sreg.metrics.snapshot()
+            assert snap.value("replication_epoch_mismatch_total", {}) >= 1
+            assert snap.value("replication_bootstraps_total", {}) == 0
+        finally:
+            fol.stop()
+        # the operator's lever: re-enable resync and converge
+        fol.auto_resync = True
+        assert fol.catch_up() >= 1
+        _assert_registries_equal(reg, sreg)
+
+
+# ------------------------------------------------------------- crash matrix
+
+
+class TestCrashMatrix:
+    """Kill the 'process' at every planted fault point, reopen from the
+    directory, and assert byte-identical recovery (primary) or an
+    idempotent bootstrap restart (standby).  ``CRASH_POINTS`` is the full
+    catalog — the coverage test fails if a new ``faults.fire`` site lands
+    without a matrix entry."""
+
+    PRIMARY_POINTS = [p for p in CRASH_POINTS
+                      if p.startswith(("trim.", "compact."))]
+    STANDBY_POINTS = [p for p in CRASH_POINTS
+                      if p.startswith(("bootstrap.", "follower."))]
+
+    def test_catalog_covers_every_planted_point(self):
+        import pathlib
+        import re
+        src = pathlib.Path(__file__).resolve().parents[1] / "src"
+        planted = set()
+        for p in src.rglob("*.py"):
+            if p.name == "faults.py":      # its docstring shows the idiom
+                continue
+            planted |= set(re.findall(r'faults\.fire\("([^"]+)"\)',
+                                      p.read_text()))
+        assert planted == set(CRASH_POINTS)
+        assert set(self.PRIMARY_POINTS) | set(self.STANDBY_POINTS) \
+            == set(CRASH_POINTS)
+
+    @pytest.mark.parametrize("point", PRIMARY_POINTS)
+    def test_primary_dies_mid_trim_recovers_byte_identical(self, tmp_path,
+                                                           point):
+        versions = _versions(3, seed=77)
+        pdir = str(tmp_path / "primary")
+        os.makedirs(pdir)
+        reg = _seed_registry(versions, directory=pdir)
+        epoch, head = reg.replication.epoch, reg.replication.head()
+        records = reg.replication.dump()
+        with crash_at(point), pytest.raises(CrashPoint):
+            reg.trim_replication(head)     # every replica acked everything
+        reg.close()                        # the "process" died here
+        back = Registry(directory=pdir, cdmt_params=P)
+        try:
+            # state: byte-identical to an untouched seed
+            _assert_registries_equal(_seed_registry(versions), back)
+            # log: same position; base either untrimmed (crash before any
+            # durable step) or fully trimmed — never torn — and every
+            # surviving record is byte-identical to the original
+            assert back.replication.epoch == epoch
+            assert back.replication.head() == head
+            assert back.replication.base in (0, head)
+            assert back.replication.dump() == records[back.replication.base:]
+            # a fresh standby joins the recovered primary either way
+            sreg = Registry(cdmt_params=P)
+            JournalFollower(sreg, WireTransport(RegistryServer(back)),
+                            name="s0").catch_up()
+            _assert_registries_equal(back, sreg)
+        finally:
+            back.close()
+
+    @pytest.mark.parametrize("point", STANDBY_POINTS)
+    def test_standby_dies_mid_bootstrap_restarts_idempotently(
+            self, tmp_path, point):
+        versions = _versions(3, seed=78)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        head = reg.replication.head()
+        t.ack_journal("acked", 0, head)    # trimmed: joining = bootstrap
+        sdir = str(tmp_path / "standby")
+        os.makedirs(sdir)
+        sreg = Registry(directory=sdir, cdmt_params=P)
+        fol = JournalFollower(sreg, t, name="s0")
+        with crash_at(point), pytest.raises(CrashPoint):
+            fol.catch_up()
+        sreg.close()
+        back = Registry(directory=sdir, cdmt_params=P)
+        try:
+            # recovery is all-or-nothing: either the pre-bootstrap empty
+            # state or the complete snapshot — never a torn mixture
+            assert back.replication.head() in (0, head)
+            if back.replication.head() == head:
+                _assert_registries_equal(reg, back)
+            else:
+                assert back.tags("app") == []
+            # the restarted follower completes the join either way
+            fol2 = JournalFollower(back, t, name="s0")
+            fol2.catch_up()
+            _assert_registries_equal(reg, back)
+            assert back.replication.head() == head
+            assert srv.replica_offsets["s0"] == head
+        finally:
+            back.close()
+
+    @pytest.mark.parametrize("point", STANDBY_POINTS)
+    def test_synced_standby_dies_mid_resync_after_epoch_roll(
+            self, tmp_path, point):
+        """The hardest window: a standby with a durable old-epoch journal
+        crashes mid wipe-and-resync.  Recovery must never mix epochs —
+        the reopened standby is wholly pre-resync (old epoch) or wholly
+        post-resync (new epoch) — and the restarted follower converges."""
+        versions = _versions(3, seed=79)
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        sdir = str(tmp_path / "standby")
+        os.makedirs(sdir)
+        sreg = Registry(directory=sdir, cdmt_params=P)
+        fol = JournalFollower(sreg, t, name="s0")
+        fol.sync_once()                    # durable old-epoch history
+        reg.sweep(retain_tags={"app": ["v2"]}, drop=True)   # epoch 0 -> 1
+        with crash_at(point), pytest.raises(CrashPoint):
+            fol.catch_up()
+        sreg.close()
+        back = Registry(directory=sdir, cdmt_params=P)
+        try:
+            assert back.replication.epoch in (0, 1)   # never torn
+            if back.replication.epoch == 1:
+                _assert_registries_equal(reg, back)
+            else:
+                assert back.tags("app") == ["v0", "v1", "v2"]
+            fol2 = JournalFollower(back, t, name="s0")
+            fol2.catch_up()
+            _assert_registries_equal(reg, back)
+            assert back.replication.epoch == reg.replication.epoch
+        finally:
+            back.close()

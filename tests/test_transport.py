@@ -73,7 +73,9 @@ def _replicated_env(reg, n_standbys=2):
     primary_wire = WireTransport(servers[0].server)
     for i in range(n_standbys):
         sreg = Registry(cdmt_params=P)
-        JournalFollower(sreg, primary_wire, name=f"s{i}").sync_once()
+        # catch_up, not sync_once: the first standby's ack trims the
+        # primary's log, so later standbys join via snapshot bootstrap
+        JournalFollower(sreg, primary_wire, name=f"s{i}").catch_up()
         servers.append(SocketRegistryServer(RegistryServer(sreg)))
     transports = [SocketTransport(s.address) for s in servers]
     return ReplicatedTransport(transports), transports + servers
@@ -439,6 +441,85 @@ class TestSocketConformance:
         finally:
             fallback.close()
             sock_srv.stop()
+
+
+# ------------------------------------------- snapshot-bootstrapped standby
+
+class TestBootstrappedStandby:
+    """A standby that joined via snapshot bootstrap (the primary's log was
+    trimmed, so no offset-0 history existed to replay) must be
+    indistinguishable from a history-replayed one: byte-identical pulls on
+    every remote transport, and exact plan quotes through the replicated
+    transport."""
+
+    def _bootstrapped_standby(self, versions):
+        reg = _seed_registry(versions)
+        srv = RegistryServer(reg)
+        t = WireTransport(srv)
+        # every record acked -> the log trims to its head; the fresh
+        # standby below cannot replay history and must bootstrap
+        t.ack_journal("acked", reg.replication.epoch, reg.replication.head())
+        assert reg.replication.base == reg.replication.head()
+        sreg = Registry(cdmt_params=P)
+        JournalFollower(sreg, t, name="s0").catch_up()
+        assert srv.snapshot().snapshot_requests == 1
+        return reg, sreg
+
+    @pytest.mark.parametrize("kind", ["wire", "socket", "mux"])
+    def test_serves_byte_identical_pulls(self, kind):
+        versions = _versions(4, seed=67)
+        reg, sreg = self._bootstrapped_standby(versions)
+        head = f"v{len(versions) - 1}"
+        ref_cl = _fresh_client(kind, reg)
+        cl = _fresh_client(kind, sreg)
+        try:
+            for tag, data in (("v0", versions[0]), (head, versions[-1])):
+                want = ref_cl.pull("app", tag)
+                got = cl.pull("app", tag)
+                assert cl.materialize("app", tag) == data
+                assert got.index_bytes == want.index_bytes
+                assert got.recipe_bytes == want.recipe_bytes
+                assert got.chunk_bytes == want.chunk_bytes
+                assert got.chunks_moved == want.chunks_moved
+        finally:
+            _cleanup_client(ref_cl)
+            _cleanup_client(cl)
+
+    def test_replicated_plan_quote_exact_with_bootstrapped_replica(self):
+        """``_replicated_env``'s second standby joins via bootstrap (the
+        first standby's ack trimmed the log) — the replicated plan must
+        still quote socket bytes to the byte, and the bootstrapped standby
+        must pass the freshness probe like any other replica."""
+        versions = _versions(3, seed=68)
+        reg = _seed_registry(versions)
+        rt, cleanup = _replicated_env(reg)
+        try:
+            assert reg.replication.base > 0     # the log really was trimmed
+            cl = ImageClient(rt, cdc_params=PARAMS, cdmt_params=P)
+            plan = cl.plan_pull("app", "v2")
+            report = cl.execute(plan)
+            assert (report.index_bytes + report.recipe_bytes
+                    + report.chunk_bytes) == plan.expected_wire_bytes
+            assert cl.materialize("app", "v2") == versions[2]
+            assert rt.stale_detected == 0   # bootstrapped standby is fresh
+        finally:
+            _close_all(cleanup)
+
+    def test_quote_chunk_batches_routes_per_replica(self):
+        versions = _versions(2, seed=69)
+        reg = _seed_registry(versions)
+        rt, cleanup = _replicated_env(reg)
+        try:
+            sizes = [500, 9_000, 3, 70_000]
+            assert rt.quote_chunk_batches(sizes) \
+                == rt.primary_transport.quote_chunk_batches(sizes)
+            for i, t in enumerate(rt.replicas):
+                assert rt.quote_chunk_batches(sizes, replica=i) \
+                    == t.quote_chunk_batches(sizes)
+            with pytest.raises(ValueError):
+                rt.quote_chunk_batches(sizes, replica=len(rt.replicas))
+        finally:
+            _close_all(cleanup)
 
 
 class TestPushConformance:
